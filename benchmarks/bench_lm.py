@@ -1,0 +1,73 @@
+"""Bring-up workloads (§5): DGEMM + STREAM analogues and an end-to-end LM
+step through all three tiles — the EPAC validation sequence, on this
+framework (the chip ran vectorized DGEMM/Stream, then booted Linux and
+ran long HPC jobs; we run the LM train/serve steps that are this
+framework's "long jobs")."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.model import Model
+from repro.models.transformer import RunCtx
+from repro.optim import OptConfig
+from repro.launch.train import init_state, make_train_step
+from repro.optim.schedule import constant
+import functools
+
+
+def run():
+    rng = np.random.default_rng(0)
+    # DGEMM (the bring-up benchmark) via the VEC/XLA tile, f64
+    n = 512
+    a = jnp.asarray(rng.normal(size=(n, n)))
+    b = jnp.asarray(rng.normal(size=(n, n)))
+    us = time_fn(jax.jit(lambda x, y: x @ y), a, b)
+    emit("bringup_dgemm_512_f64", us,
+         f"gflops={2 * n**3 / (us * 1e-6) / 1e9:.1f}")
+    # STREAM triad
+    m = 1 << 22
+    x = jnp.asarray(rng.normal(size=m), jnp.float32)
+    y = jnp.asarray(rng.normal(size=m), jnp.float32)
+    us = time_fn(jax.jit(lambda xx, yy: xx + 3.0 * yy), x, y)
+    emit("bringup_stream_triad", us,
+         f"GB/s={3 * 4 * m / (us * 1e-6) / 1e9:.1f}")
+
+    # End-to-end LM steps (smoke-scale olmo; full configs live in dry-run)
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    ctx = RunCtx(kernel_mode="ref")
+    opt_cfg = OptConfig()
+    state = init_state(model, opt_cfg)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                  global_batch=8))
+    step = jax.jit(make_train_step(model, opt_cfg, ctx,
+                                   functools.partial(constant, peak_lr=1e-3)))
+    batch = data.batch_at(0)
+    us = time_fn(lambda s, bb: step(s, bb)[0], state, batch, iters=5)
+    toks = 8 * 64
+    emit("lm_train_step_olmo_smoke", us,
+         f"tokens_per_s={toks / (us * 1e-6):.0f}")
+
+    params = state["params"]
+    B, S = 4, 32
+    pbatch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)))}
+    pre = jax.jit(lambda p, bb: model.prefill(p, bb, ctx, max_len=S + 16))
+    us = time_fn(pre, params, pbatch, iters=5)
+    emit("lm_prefill_olmo_smoke", us, f"tokens={B * S}")
+    _, cache = pre(params, pbatch)
+    dec = jax.jit(lambda p, c, t: model.decode_step(p, c, t, jnp.int32(S),
+                                                    ctx))
+    tok = pbatch["tokens"][:, :1]
+    us = time_fn(dec, params, cache, tok, iters=10)
+    emit("lm_decode_step_olmo_smoke", us,
+         f"tokens_per_s={B / (us * 1e-6):.0f}")
+
+
+if __name__ == "__main__":
+    run()

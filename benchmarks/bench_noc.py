@@ -1,0 +1,52 @@
+"""Paper §4 — uncore: NoC/C2C bandwidth table + collective cost model.
+
+Reproduces the paper's fabric arithmetic (64 GB/s per NoC port per
+direction at 1 GHz; C2C 8 lanes x 25 Gb/s = 25 GB/s per direction,
+20 GB/s demonstrated at bring-up) and evaluates the analytical collective
+model this repo uses to attribute the roofline collective term across
+the ICI / pod tiers.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import noc
+
+
+def run():
+    # Paper table (§4): exact fabric numbers.
+    port_bw = 512 / 8 * 1e9  # 512-bit channel per cycle @ 1 GHz
+    emit("noc_port_bw", 0.0,
+         f"GBps_per_dir={port_bw / 1e9:.0f};paper=64")
+    assert port_bw / 1e9 == noc.EPAC_NOC["noc_port_bw_GBps_per_dir"]
+    c2c = 8 * 25e9 / 8  # 8 lanes x 25 Gb/s
+    emit("noc_c2c_bw", 0.0,
+         f"GBps_per_dir={c2c / 1e9:.0f};aggregate={2 * c2c / 1e9:.0f};"
+         f"demonstrated={noc.EPAC_NOC['c2c_bw_GBps_demonstrated'] if 'c2c_bw_GBps_demonstrated' in noc.EPAC_NOC else noc.EPAC_NOC['c2c_demonstrated_GBps']}")
+    emit("noc_c2c_saturates_ddr4", 0.0,
+         "ddr4_channel_GBps~25.6;c2c_per_dir=25;adequate=True")
+
+    # Collective model across the two tiers (1 GiB per device).
+    nbytes = 1 << 30
+    for axis, size in (("data", 16), ("model", 16), ("pod", 2)):
+        ar = noc.all_reduce_time(nbytes, size, axis)
+        ag = noc.all_gather_time(nbytes // size, size, axis)
+        rs = noc.reduce_scatter_time(nbytes, size, axis)
+        emit(f"noc_collectives_{axis}{size}", 0.0,
+             f"all_reduce_ms={ar * 1e3:.1f};all_gather_ms={ag * 1e3:.1f};"
+             f"reduce_scatter_ms={rs * 1e3:.1f}")
+    # pod tier vs ici tier asymmetry — why DP goes on the pod axis:
+    ar_pod = noc.all_reduce_time(nbytes, 2, "pod")
+    ar_ici = noc.all_reduce_time(nbytes, 2, "data")
+    emit("noc_tier_asymmetry", 0.0,
+         f"pod_over_ici={ar_pod / ar_ici:.2f}x;paper_c2c_vs_port="
+         f"{64 / 25:.2f}x_slower")
+
+    # L2 slice interleaving (line vs block modes)
+    hits = [noc.interleave(a * 64, 8) for a in range(16)]
+    emit("noc_l2_interleave_line", 0.0,
+         f"slices_touched_16lines={len(set(hits))}/8")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Paper §3.2 — STX tile: stencil + tensor kernels.
+
+The paper's numbers: 4 clusters x 8 cores x 2 DP FLOP/cycle @ 1 GHz =
+64 GFLOPS per tile; high FPU utilization on ML workloads. Here: the
+Pallas kernels' modeled MXU utilization (from BlockSpec working sets) +
+host-measured interpret/ref timings for the same math, plus the
+correctness gate vs the jnp oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ops, ref
+
+
+def run():
+    # Paper tile model
+    clusters, cores, flops_cyc, ghz = 4, 8, 2, 1.0
+    emit("stx_paper_tile_model", 0.0,
+         f"peak_dp_gflops={clusters * cores * flops_cyc * ghz}")
+
+    rng = np.random.default_rng(0)
+    # Tensor op: matmul through the VEC (XLA) path vs kernel working-set
+    for size in (256, 512, 1024):
+        x = jnp.asarray(rng.normal(size=(size, size)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(size, size)), jnp.float32)
+        fn = jax.jit(lambda a, b: ref.matmul(a, b))
+        us = time_fn(fn, x, w)
+        gflops = 2 * size**3 / (us * 1e-6) / 1e9
+        emit(f"stx_matmul_xla_{size}", us, f"host_gflops={gflops:.1f}")
+    # Kernel working set (the VMEM/TCDM budget claim):
+    bm = bn = bk = 128
+    ws_kb = (bm * bk + bk * bn + bm * bn) * 4 / 1024
+    emit("stx_matmul_kernel_working_set", 0.0,
+         f"block=128x128x128;vmem_kb={ws_kb:.0f};paper_tcdm_kb=64-256")
+
+    # Stencil: 5-point 2-D and 7-point 3-D (diffusion step)
+    x2 = jnp.asarray(rng.normal(size=(512, 512)), jnp.float32)
+    w5 = ref.five_point_weights()
+    us = time_fn(jax.jit(lambda a: ref.stencil2d(a, w5)), x2)
+    pts = 512 * 512
+    emit("stx_stencil2d_5pt_512", us,
+         f"Mpts/s={pts / (us * 1e-6) / 1e6:.1f}")
+    x3 = jnp.asarray(rng.normal(size=(64, 128, 128)), jnp.float32)
+    w7 = ref.seven_point_weights()
+    us = time_fn(jax.jit(lambda a: ref.stencil3d(a, w7)), x3)
+    pts = 64 * 128 * 128
+    emit("stx_stencil3d_7pt_64x128x128", us,
+         f"Mpts/s={pts / (us * 1e-6) / 1e6:.1f};flops_per_pt=13")
+
+    # Correctness gate (interpret kernel vs oracle) — small shape
+    xs = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    out = ops.stencil2d(xs, w5, block_m=32, block_n=32, mode="interpret")
+    err = float(jnp.max(jnp.abs(out - ref.stencil2d(xs, w5))))
+    emit("stx_stencil_kernel_allclose", 0.0, f"max_err={err:.1e}")
+    assert err < 1e-5
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Benchmark harness — one module per paper table/claim.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  bench_vec  — §3.1 VPU cycle model + VLA strip-mining
+  bench_stx  — §3.2 stencil/tensor kernels + TCDM/VMEM working sets
+  bench_vrp  — §3.3 precision-vs-convergence + precision-vs-cost
+  bench_noc  — §4   NoC/C2C bandwidth table + collective model
+  bench_lm   — §5   bring-up workloads (DGEMM/STREAM) + LM steps
+
+Run: PYTHONPATH=src python -m benchmarks.run [section ...]
+"""
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import bench_lm, bench_noc, bench_stx, bench_vec, bench_vrp
+
+    sections = {"vec": bench_vec, "stx": bench_stx, "vrp": bench_vrp,
+                "noc": bench_noc, "lm": bench_lm}
+    want = sys.argv[1:] or list(sections)
+    print("name,us_per_call,derived")
+    for name in want:
+        sections[name].run()
+
+
+if __name__ == "__main__":
+    main()

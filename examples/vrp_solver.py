@@ -1,0 +1,72 @@
+"""VRP end-to-end: adaptive-precision Krylov solving (paper §3.3).
+
+The silicon's usage model: the host configures precision via environment
+registers, the VRP runs VBLAS-based solvers, precision can be *adapted at
+runtime* to balance cost vs numerical stability. This example implements
+that adaptive strategy: start cheap (f64), escalate K only if the solver
+stalls — no recompilation of the solver, just a new PrecisionEnv.
+
+Run: PYTHONPATH=src python examples/vrp_solver.py
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import solvers, vrp
+from repro.core.precision import PRESETS
+
+LADDER = ["f64", "vp128", "vp256", "vp512"]
+
+
+def adaptive_cg(A, b, tol=1e-13, maxiter=400):
+    """Escalate precision until CG converges (paper's adaptive strategy)."""
+    history = []
+    for name in LADDER:
+        env = PRESETS[name]
+        t0 = time.time()
+        res = solvers.cg(A, b, env, tol=tol, maxiter=maxiter)
+        dt = time.time() - t0
+        history.append((name, int(res.iterations), float(res.residual), dt))
+        print(f"  {name:6s} ({env.significand_bits:3d} bits): "
+              f"iters={int(res.iterations):3d} relres={float(res.residual):.2e} "
+              f"({dt:.1f}s)")
+        if bool(res.converged):
+            return res, name, history
+    return res, name, history
+
+
+if __name__ == "__main__":
+    print("== problem 1: moderately ill-conditioned (cond 1e8) ==")
+    A = solvers.hilbert_like(64, cond=1e8, seed=0)
+    b = A @ jnp.ones(64)
+    res, used, _ = adaptive_cg(A, b, tol=1e-12)
+    print(f"  -> solved at {used}; x_err={float(jnp.max(jnp.abs(res.x - 1))):.2e}")
+
+    print("== problem 2: Hilbert n=12 (cond ~1.7e16) ==")
+    A = solvers.hilbert(12)
+    b = A @ jnp.ones(12)
+    res, used, _ = adaptive_cg(A, b, tol=1e-13)
+    print(f"  -> solved at {used}")
+
+    print("== problem 3: extended-precision RHS (cond 1e6) ==")
+    env = PRESETS["vp256"]
+    m = 24
+    Am = solvers.hilbert_like(m, cond=1e6, seed=1)
+    xs = vrp.from_float(jnp.ones(m), env)
+    bE = vrp.tree_sum(vrp.mul(vrp.from_float(Am, env), xs[None], env), env,
+                      axis=1)
+    r64 = solvers.cg(Am, vrp.to_float(bE), PRESETS["f64"], tol=1e-24,
+                     maxiter=600)
+    rvp = solvers.cg(Am, bE[:, :2], PRESETS["vp128"], tol=1e-24, maxiter=600)
+    print(f"  f64   iters={int(r64.iterations)} "
+          f"xerr={float(jnp.max(jnp.abs(r64.x - 1))):.2e}")
+    print(f"  vp128 iters={int(rvp.iterations)} "
+          f"xerr={float(jnp.max(jnp.abs(rvp.x - 1))):.2e}")
+    print("  (the paper's claim: extended precision improves convergence; "
+          "fewer iterations and lower error at the same tolerance)")

@@ -1,0 +1,10 @@
+"""repro — EPAC-JAX: a heterogeneous-tile training/inference framework.
+
+Reproduction of *EPAC: The Last Dance* (Mantovani et al., CF Companion '26)
+adapted TPU-natively: the chip's three RISC-V compute tiles become three
+execution strategies (VEC = XLA long-vector path, STX = Pallas scratchpad
+kernels, VRP = variable-precision expansion arithmetic) under one
+distribution fabric (the "uncore": mesh + collectives + sharded layouts).
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,9 @@
+"""core — the paper's contribution: tiles (VEC/STX/VRP) + uncore model."""
+
+from .precision import F64, VP128, VP256, VP512, PrecisionEnv, get_env
+from .tiles import DEFAULT_POLICY, STX_POLICY, TilePolicy
+
+__all__ = [
+    "F64", "VP128", "VP256", "VP512", "PrecisionEnv", "get_env",
+    "TilePolicy", "DEFAULT_POLICY", "STX_POLICY",
+]

@@ -1,0 +1,99 @@
+"""Uncore model — CHI NoC / distributed-L2 / C2C, mapped to the TPU fabric.
+
+EPAC's uncore (§4): a 2-D-mesh CHI NoC (64 GB/s per port per direction at
+1 GHz), distributed 256 kB L2 slices with programmable address
+interleaving, a directory Home Node, and a 25 GB/s-per-direction C2C
+SerDes link extending the NoC off-chip.
+
+The TPU analogue we target (v5e):
+  * on-pod ICI links  <-> NoC ports        (~50 GB/s per link)
+  * pod-to-pod axis   <-> C2C SerDes       (slow tier; DP-only traffic)
+  * sharded layouts   <-> L2 address interleaving
+  * XLA SPMD          <-> Home-Node coherence (by construction)
+
+This module is the *analytical* fabric model: collective time estimates on
+a named mesh, used (a) by roofline/analysis.py to attribute the collective
+term per mesh axis, and (b) by benchmarks/bench_noc.py to reproduce the
+paper's §4 bandwidth table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricSpec:
+    """Bandwidths in bytes/second per device for each mesh axis tier."""
+
+    ici_bw: float = 50e9      # v5e per-link ICI (on-pod axes)
+    pod_bw: float = 25e9      # pod-to-pod tier (EPAC C2C analogue: 25 GB/s)
+    latency_us: float = 1.0   # per-hop software+link latency
+
+
+V5E_FABRIC = FabricSpec()
+
+# The paper's own numbers (bench_noc reproduces this table).
+EPAC_NOC = {
+    "noc_port_bw_GBps_per_dir": 64.0,   # 512 b/cycle @ 1 GHz
+    "c2c_bw_GBps_per_dir": 25.0,        # 8 SerDes lanes x 25 Gb/s
+    "c2c_bw_GBps_aggregate": 50.0,
+    "c2c_demonstrated_GBps": 20.0,      # bring-up measured (§5)
+    "l2_slice_kB": 256,
+    "l2_line_bytes": 64,
+    "l2_outstanding": 128,
+}
+
+
+def _axis_bw(axis: str, fabric: FabricSpec) -> float:
+    return fabric.pod_bw if axis == "pod" else fabric.ici_bw
+
+
+def all_reduce_time(bytes_per_device: float, axis_size: int, axis: str,
+                    fabric: FabricSpec = V5E_FABRIC) -> float:
+    """Ring all-reduce: 2(n-1)/n * bytes over the axis link."""
+    if axis_size <= 1:
+        return 0.0
+    bw = _axis_bw(axis, fabric)
+    return 2.0 * (axis_size - 1) / axis_size * bytes_per_device / bw
+
+
+def all_gather_time(bytes_per_device_shard: float, axis_size: int, axis: str,
+                    fabric: FabricSpec = V5E_FABRIC) -> float:
+    """Ring all-gather of per-device shards: (n-1) * shard bytes."""
+    if axis_size <= 1:
+        return 0.0
+    bw = _axis_bw(axis, fabric)
+    return (axis_size - 1) * bytes_per_device_shard / bw
+
+
+def reduce_scatter_time(bytes_per_device: float, axis_size: int, axis: str,
+                        fabric: FabricSpec = V5E_FABRIC) -> float:
+    if axis_size <= 1:
+        return 0.0
+    bw = _axis_bw(axis, fabric)
+    return (axis_size - 1) / axis_size * bytes_per_device / bw
+
+
+def all_to_all_time(bytes_per_device: float, axis_size: int, axis: str,
+                    fabric: FabricSpec = V5E_FABRIC) -> float:
+    if axis_size <= 1:
+        return 0.0
+    bw = _axis_bw(axis, fabric)
+    return (axis_size - 1) / axis_size * bytes_per_device / bw
+
+
+def interleave(addr: int, n_slices: int, line_bytes: int = 64,
+               mode: str = "line") -> int:
+    """EPAC L2 'programmable address interleaving' -> slice id.
+
+    ``line`` interleaves consecutive cache lines across slices (the NoC
+    default); ``block`` keeps 4 KiB blocks per slice. The sharding layer's
+    layout rules are the tensor-level version of this choice.
+    """
+    if mode == "line":
+        return (addr // line_bytes) % n_slices
+    if mode == "block":
+        return (addr // 4096) % n_slices
+    raise ValueError(mode)

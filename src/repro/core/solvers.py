@@ -1,0 +1,192 @@
+"""Krylov solvers at runtime-selectable precision — the VRP use case.
+
+The paper's target workload: "iterative linear solvers, such as Krylov
+methods (e.g., CG, BiCG, PCG), where increasing precision can reduce
+rounding errors, improve convergence, or enable convergence for
+ill-conditioned systems" (refs [19][20]). These solvers run *entirely* in
+expansion arithmetic (vectors, scalars, and reductions), with the precision
+chosen at call time via PrecisionEnv — no recompilation of user code, as in
+the silicon's environment registers.
+
+All solvers are functional, jit-able (env static), and use lax.while_loop.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import vblas, vrp
+from .precision import PrecisionEnv, get_env
+
+
+class SolveResult(NamedTuple):
+    x: jnp.ndarray          # solution as plain base-dtype array
+    iterations: jnp.ndarray
+    residual: jnp.ndarray   # final relative residual (plain float)
+    converged: jnp.ndarray
+
+
+def _as_matvec(A) -> Callable:
+    if callable(A):
+        return A
+    return lambda x, env: vrp.matvec(A, x, env)
+
+
+def _to_expansion(b, env):
+    """Accept either a plain (n,) vector or an (n, K) expansion."""
+    b = jnp.asarray(b)
+    if b.ndim == 2:
+        K = get_env(env).K
+        if b.shape[-1] < K:
+            b = jnp.pad(b, [(0, 0), (0, K - b.shape[-1])])
+        return b[:, :K]
+    return vrp.from_float(jnp.asarray(b, get_env(env).dtype), env)
+
+
+@partial(jax.jit, static_argnames=("env", "maxiter", "matvec"))
+def _cg_impl(A, b, env, tol, maxiter, matvec=None):
+    env = get_env(env)
+    mv = matvec if matvec is not None else (lambda v: vrp.matvec(A, v, env))
+    bE = _to_expansion(b, env)
+    bnorm = vrp.to_float(vblas.vnrm2(bE, env))
+    x = vrp.zeros(bE.shape[:-1], env)
+    r = bE
+    p = r
+    rz = vblas.vdot(r, r, env)
+
+    def cond(state):
+        x, r, p, rz, k, res = state
+        return jnp.logical_and(k < maxiter, res > tol)
+
+    def body(state):
+        x, r, p, rz, k, _ = state
+        Ap = mv(p)
+        pAp = vblas.vdot(p, Ap, env)
+        alpha = vrp.div(rz, pAp, env)
+        x = vblas.vaxpy(alpha, p, x, env)
+        r = vblas.vaxpy(-alpha, Ap, r, env)
+        rz_new = vblas.vdot(r, r, env)
+        beta = vrp.div(rz_new, rz, env)
+        p = vblas.vaxpy(beta, p, r, env)
+        res = jnp.sqrt(jnp.abs(vrp.to_float(rz_new))) / bnorm
+        return x, r, p, rz_new, k + 1, res
+
+    init = (x, r, p, rz, jnp.array(0, jnp.int32), jnp.array(jnp.inf, env.dtype))
+    x, r, p, rz, k, res = jax.lax.while_loop(cond, body, init)
+    return SolveResult(vrp.to_float(x), k, res, res <= tol)
+
+
+def cg(A, b, env: PrecisionEnv, tol: float = 1e-10, maxiter: int = 1000):
+    """Conjugate Gradient in expansion arithmetic. A: (n, n) SPD (plain)."""
+    return _cg_impl(A, b, get_env(env), tol, maxiter)
+
+
+@partial(jax.jit, static_argnames=("env", "maxiter"))
+def _pcg_impl(A, b, Minv_diag, env, tol, maxiter):
+    env = get_env(env)
+    bE = _to_expansion(b, env)
+    bnorm = vrp.to_float(vblas.vnrm2(bE, env))
+    x = vrp.zeros(bE.shape[:-1], env)
+    r = bE
+
+    def precond(v):  # Jacobi: exact elementwise scale
+        return vrp.scale(v, Minv_diag, env)
+
+    z = precond(r)
+    p = z
+    rz = vblas.vdot(r, z, env)
+
+    def cond(state):
+        *_, k, res = state
+        return jnp.logical_and(k < maxiter, res > tol)
+
+    def body(state):
+        x, r, z, p, rz, k, _ = state
+        Ap = vrp.matvec(A, p, env)
+        alpha = vrp.div(rz, vblas.vdot(p, Ap, env), env)
+        x = vblas.vaxpy(alpha, p, x, env)
+        r = vblas.vaxpy(-alpha, Ap, r, env)
+        z = precond(r)
+        rz_new = vblas.vdot(r, z, env)
+        beta = vrp.div(rz_new, rz, env)
+        p = vblas.vaxpy(beta, p, z, env)
+        res = jnp.abs(vrp.to_float(vblas.vnrm2(r, env))) / bnorm
+        return x, r, z, p, rz_new, k + 1, res
+
+    init = (x, r, z, p, rz, jnp.array(0, jnp.int32), jnp.array(jnp.inf, env.dtype))
+    x, r, z, p, rz, k, res = jax.lax.while_loop(cond, body, init)
+    return SolveResult(vrp.to_float(x), k, res, res <= tol)
+
+
+def pcg(A, b, env: PrecisionEnv, tol: float = 1e-10, maxiter: int = 1000):
+    """Jacobi-preconditioned CG in expansion arithmetic."""
+    Minv = 1.0 / jnp.diagonal(jnp.asarray(A, get_env(env).dtype))
+    return _pcg_impl(A, b, Minv, get_env(env), tol, maxiter)
+
+
+@partial(jax.jit, static_argnames=("env", "maxiter"))
+def _bicgstab_impl(A, b, env, tol, maxiter):
+    env = get_env(env)
+    bE = _to_expansion(b, env)
+    bnorm = vrp.to_float(vblas.vnrm2(bE, env))
+    x = vrp.zeros(bE.shape[:-1], env)
+    r = bE
+    rhat = r
+    one = vrp.from_float(jnp.asarray(1.0, env.dtype), env)
+    rho = one
+    alpha = one
+    omega = one
+    v = vrp.zeros(bE.shape[:-1], env)
+    p = vrp.zeros(bE.shape[:-1], env)
+
+    def cond(state):
+        *_, k, res = state
+        return jnp.logical_and(k < maxiter, res > tol)
+
+    def body(state):
+        x, r, rho, alpha, omega, v, p, k, _ = state
+        rho_new = vblas.vdot(rhat, r, env)
+        beta = vrp.mul(vrp.div(rho_new, rho, env), vrp.div(alpha, omega, env), env)
+        p = vblas.vaxpy(beta, vblas.vaxpy(-omega, v, p, env), r, env)
+        v = vrp.matvec(A, p, env)
+        alpha = vrp.div(rho_new, vblas.vdot(rhat, v, env), env)
+        s = vblas.vaxpy(-alpha, v, r, env)
+        t = vrp.matvec(A, s, env)
+        omega = vrp.div(vblas.vdot(t, s, env), vblas.vdot(t, t, env), env)
+        x = vblas.vaxpy(alpha, p, vblas.vaxpy(omega, s, x, env), env)
+        r = vblas.vaxpy(-omega, t, s, env)
+        res = jnp.abs(vrp.to_float(vblas.vnrm2(r, env))) / bnorm
+        return x, r, rho_new, alpha, omega, v, p, k + 1, res
+
+    init = (x, r, rho, alpha, omega, v, p, jnp.array(0, jnp.int32),
+            jnp.array(jnp.inf, env.dtype))
+    x, r, rho, alpha, omega, v, p, k, res = jax.lax.while_loop(cond, body, init)
+    return SolveResult(vrp.to_float(x), k, res, res <= tol)
+
+
+def bicgstab(A, b, env: PrecisionEnv, tol: float = 1e-10, maxiter: int = 1000):
+    """BiCGStab in expansion arithmetic (paper ref [20]'s stabilized use)."""
+    return _bicgstab_impl(A, jnp.asarray(b), get_env(env), tol, maxiter)
+
+
+# ---------------------------------------------------------------------------
+# Test problems (ill-conditioned SPD systems, the paper's target class)
+# ---------------------------------------------------------------------------
+
+
+def hilbert_like(n: int, cond: float = 1e12, dtype=jnp.float64, seed: int = 0):
+    """Random SPD matrix with prescribed condition number."""
+    key = jax.random.PRNGKey(seed)
+    Q, _ = jnp.linalg.qr(jax.random.normal(key, (n, n), dtype))
+    eigs = jnp.logspace(0.0, -jnp.log10(cond), n).astype(dtype)
+    return (Q * eigs) @ Q.T
+
+
+def hilbert(n: int, dtype=jnp.float64):
+    """The Hilbert matrix — the classic ill-conditioned SPD example."""
+    i = jnp.arange(n, dtype=dtype)
+    return 1.0 / (1.0 + i[:, None] + i[None, :])

@@ -1,0 +1,75 @@
+"""STX tile executor — cluster geometry -> kernel block geometry.
+
+The silicon STX tile is parameterized: 4 clusters x (4-16 compute cores +
+1 DMA core) x 64-256 kB TCDM scratchpad. The TPU adaptation keeps that
+parameterization: an ``StxCluster`` maps the cluster geometry onto Pallas
+block shapes whose VMEM working set respects the scratchpad budget, and
+dispatches the STX kernels (kernels/ops.py) with those blocks. The VMEM
+budget check is the software analogue of fitting the TCDM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class StxCluster:
+    """Paper-faithful defaults: 4 clusters x 8 cores @ 1 GHz, 256 kB."""
+
+    n_clusters: int = 4
+    cores_per_cluster: int = 8
+    tcdm_kb: int = 256          # per-cluster scratchpad (VMEM analogue)
+    freq_ghz: float = 1.0
+    flops_per_core_cycle: int = 2   # DP FMA
+
+    @property
+    def peak_gflops(self) -> float:
+        """The paper's 64 DP GFLOPS/tile claim at the defaults."""
+        return (self.n_clusters * self.cores_per_cluster
+                * self.flops_per_core_cycle * self.freq_ghz)
+
+    # -- geometry ---------------------------------------------------------
+
+    def matmul_blocks(self, dtype=jnp.float32) -> tuple:
+        """Largest MXU-aligned square blocks with x/w/acc in budget."""
+        itemsize = jnp.dtype(dtype).itemsize
+        b = 128
+        while 3 * (2 * b) ** 2 * itemsize <= self.tcdm_kb * 1024 * 4:
+            b *= 2
+        return b, b, b
+
+    def stencil_blocks(self, dtype=jnp.float32) -> tuple:
+        itemsize = jnp.dtype(dtype).itemsize
+        bm = bn = 128
+        while 2 * (2 * bm + 2) * (bn + 2) * itemsize <= self.tcdm_kb * 1024 * 4:
+            bm *= 2
+        return bm, bn
+
+    def working_set_kb(self, block_m: int, block_n: int, block_k: int,
+                       dtype=jnp.float32) -> float:
+        itemsize = jnp.dtype(dtype).itemsize
+        return (block_m * block_k + block_k * block_n
+                + block_m * block_n) * itemsize / 1024
+
+    # -- dispatch ---------------------------------------------------------
+
+    def matmul(self, x, w, mode="auto", **kw):
+        bm, bn, bk = self.matmul_blocks(x.dtype)
+        return kops.stx_matmul(x, w, block_m=bm, block_n=bn, block_k=bk,
+                               mode=mode, **kw)
+
+    def stencil2d(self, x, weights, mode="auto", **kw):
+        bm, bn = self.stencil_blocks(x.dtype)
+        return kops.stencil2d(x, weights, block_m=bm, block_n=bn,
+                              mode=mode, **kw)
+
+    def stencil3d(self, x, weights, mode="auto", **kw):
+        return kops.stencil3d(x, weights, mode=mode, **kw)
+
+
+DEFAULT_CLUSTER = StxCluster()

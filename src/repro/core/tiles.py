@@ -1,0 +1,95 @@
+"""Tile registry & dispatch — the EPAC heterogeneity made software.
+
+EPAC integrates three compute tiles "not intended to operate together in
+parallel, but rather to explore different architectural solutions and study
+their behavior in a real system". Here a *tile* is an execution strategy
+for an operator class, selectable per-op and per-model:
+
+  VEC — general path: XLA-compiled jnp (compiler-driven vectorization,
+        the analogue of the LLVM-EPI auto-vectorizer on the Avispado+VPU).
+  STX — explicit-data-movement path: Pallas kernels with BlockSpec/VMEM
+        tiling (SSR/FREP/scratchpad in silicon).
+  VRP — extended-precision path: expansion arithmetic for numerically
+        sensitive reductions and solvers.
+
+A TilePolicy maps operator classes -> tile, so the same model runs on any
+mix; benchmarks compare the strategies "under the same system-level
+constraints", as the paper does in silicon.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+VALID_TILES = ("vec", "stx", "vrp")
+OP_CLASSES = ("matmul", "attention", "stencil", "scan", "reduction")
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePolicy:
+    """Operator-class -> tile assignment (hashable; jit-static)."""
+
+    matmul: str = "vec"
+    attention: str = "vec"
+    stencil: str = "stx"
+    scan: str = "vec"
+    reduction: str = "vec"
+    # STX cluster geometry (paper: 4 clusters x 8 cores, 64-256 kB TCDM).
+    stx_block_m: int = 128
+    stx_block_n: int = 128
+    stx_block_k: int = 128
+    # VRP environment preset for 'vrp' reductions.
+    vrp_env: str = "vp128"
+    # On CPU, run Pallas kernels in interpret mode (tests); the jnp ref is
+    # used for dry-run lowering so HLO stays representative.
+    interpret: bool = False
+
+    def __post_init__(self):
+        for cls in OP_CLASSES:
+            tile = getattr(self, cls)
+            if tile not in VALID_TILES:
+                raise ValueError(f"{cls}: unknown tile {tile!r}")
+
+    def tile_for(self, op_class: str) -> str:
+        return getattr(self, op_class)
+
+
+# Paper-faithful default: general work on VEC, stencils on STX.
+DEFAULT_POLICY = TilePolicy()
+# All-STX policy: every hot op through Pallas (the "beyond-paper" point).
+STX_POLICY = TilePolicy(matmul="stx", attention="stx", scan="stx")
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def dispatch_matmul(x, w, policy: TilePolicy):
+    """Matmul through the policy's tile."""
+    tile = policy.tile_for("matmul")
+    if tile == "stx" and (on_tpu() or policy.interpret):
+        from repro.kernels import ops as kops
+
+        return kops.stx_matmul(x, w, block_m=policy.stx_block_m,
+                               block_n=policy.stx_block_n,
+                               block_k=policy.stx_block_k,
+                               interpret=policy.interpret)
+    # VEC path (and STX's jnp-identical lowering for dry-run on CPU).
+    return jnp.einsum("...k,kn->...n", x, w)
+
+
+def dispatch_reduction(x, policy: TilePolicy, axis=None):
+    """Sum-reduction; 'vrp' uses compensated (expansion) accumulation."""
+    tile = policy.tile_for("reduction")
+    if tile == "vrp":
+        from repro.core import vrp
+        from repro.core.precision import get_env
+
+        env = get_env(policy.vrp_env)
+        flat = x.reshape(-1) if axis is None else jnp.moveaxis(x, axis, 0)
+        return vrp.to_float(vrp.sum_floats(flat.astype(env.dtype), env)).astype(x.dtype)
+    return jnp.sum(x, axis=axis)

@@ -1,0 +1,100 @@
+"""VEC tile — vector-length-agnostic (VLA) execution discipline.
+
+The VEC tile's defining software property (RVV 0.7.1): code sets a desired
+vector length, hardware grants up to its maximum, and loops of *arbitrary*
+size run with no scalar tail handling. The VPU retires a 256-element
+double-precision vop in 32 cycles through 8 parallel FAUST lanes.
+
+TPU has no scalable vector registers, so the *discipline* is what we port:
+
+  * ``strip_mine``    — apply a lane-width kernel over an arbitrary-length
+    array with masked tails (vsetvl semantics), as a lax.scan over strips.
+  * ``VecTimingModel`` — the paper's cycle model (8 lanes x 8 elem/cycle,
+    ~3-cycle decode overhead) used by benchmarks/bench_vec.py to validate
+    utilization curves against §3.1's numbers.
+
+The data pipeline and serving batcher use strip_mine for ragged batches;
+elementwise model math is left to XLA (the "compiler-driven" path, like
+LLVM-EPI auto-vectorization).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def strip_mine(fn: Callable, x: jnp.ndarray, max_vl: int, *, out_dtype=None):
+    """Apply ``fn`` (vector -> vector, same length) VLA-style.
+
+    Processes ``x`` (n, ...) in strips of ``max_vl`` with a masked final
+    strip — no scalar tail, no recompilation per length (vsetvl analogue:
+    the grant is min(max_vl, remaining)).
+    """
+    n = x.shape[0]
+    n_strips = -(-n // max_vl)
+    pad = n_strips * max_vl - n
+    xp = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    xs = xp.reshape((n_strips, max_vl) + x.shape[1:])
+    base = jnp.arange(n_strips) * max_vl
+
+    def body(carry, inp):
+        strip, start = inp
+        vl = jnp.minimum(max_vl, n - start)  # granted vector length
+        mask = jnp.arange(max_vl) < vl
+        out = fn(strip)
+        out = jnp.where(mask.reshape((max_vl,) + (1,) * (out.ndim - 1)), out, 0)
+        return carry, out
+
+    _, ys = jax.lax.scan(body, None, (xs, base))
+    ys = ys.reshape((n_strips * max_vl,) + ys.shape[2:])
+    return ys[:n].astype(out_dtype or ys.dtype)
+
+
+def strip_reduce(fn: Callable, x: jnp.ndarray, max_vl: int, init):
+    """VLA-style reduction: fold strips through ``fn(acc, strip, mask)``."""
+    n = x.shape[0]
+    n_strips = -(-n // max_vl)
+    pad = n_strips * max_vl - n
+    xp = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    xs = xp.reshape((n_strips, max_vl) + x.shape[1:])
+    base = jnp.arange(n_strips) * max_vl
+
+    def body(acc, inp):
+        strip, start = inp
+        mask = jnp.arange(max_vl) < (n - start)
+        return fn(acc, strip, mask), None
+
+    acc, _ = jax.lax.scan(body, init, (xs, base))
+    return acc
+
+
+@dataclasses.dataclass(frozen=True)
+class VecTimingModel:
+    """Cycle model of the EPAC VPU (§3.1): used to validate bench_vec.
+
+    A vector arithmetic instruction on VL elements takes
+    ``ceil(VL / (lanes * elems_per_lane)) + decode_overhead`` cycles; a full
+    256-element vop = 32 + ~3 cycles.
+    """
+
+    lanes: int = 8
+    elems_per_lane_cycle: int = 1
+    max_vl_elems: int = 256          # 2048 B / 8 B per f64
+    decode_overhead_cycles: int = 3
+    freq_ghz: float = 1.0
+
+    def vop_cycles(self, vl: int) -> int:
+        per_cycle = self.lanes * self.elems_per_lane_cycle
+        return -(-vl // per_cycle) + self.decode_overhead_cycles
+
+    def utilization(self, vl: int) -> float:
+        """Fraction of lane-cycles doing useful work at vector length vl."""
+        per_cycle = self.lanes * self.elems_per_lane_cycle
+        return vl / (self.vop_cycles(vl) * per_cycle)
+
+    def gflops(self, vl: int, flops_per_elem: int = 2) -> float:
+        return (vl * flops_per_elem * self.freq_ghz) / self.vop_cycles(vl)

@@ -1,0 +1,305 @@
+"""VRP tile — variable-precision arithmetic via floating-point expansions.
+
+EPAC's VRP tile implements a chunk-based variable-precision FPU: wide
+significands (up to 512 bits) are processed by iterating narrow hardware
+units over chunks, with the active precision selected at runtime through
+environment registers. TPUs have no wide FPU, so we adapt the *insight*
+(precision as a runtime-tunable resource, latency scaling with precision)
+using **floating-point expansions** (Priest/Shewchuk/Dekker):
+
+  a value is an unevaluated sum  x = t_0 + t_1 + ... + t_{K-1}
+  of K machine floats of decreasing magnitude.
+
+All building blocks are *error-free transformations* (EFT): ``two_sum`` and
+``two_prod`` return (result, error) pairs whose exact sum equals the exact
+mathematical result — so precision is lost only when the expansion is
+truncated back to K terms. K plays precisely the role of the VRP chunk
+count: arithmetic cost scales ~O(K^2), matching the paper's "latency and
+throughput scale with the selected precision".
+
+Expansions are plain ``jnp`` arrays with a trailing axis of length K
+(term 0 = highest magnitude), so every op here is shape-polymorphic and
+vmappable — the long-vector (VEC) discipline applied to the VRP datapath.
+
+``two_prod`` uses Dekker's algorithm with Veltkamp splitting, which is
+exact without requiring an FMA primitive (XLA:CPU) and remains exact when
+XLA fuses to FMA (XLA:TPU).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .precision import PrecisionEnv, get_env
+
+# ---------------------------------------------------------------------------
+# Error-free transformations
+# ---------------------------------------------------------------------------
+
+
+def two_sum(a, b):
+    """Knuth's branch-free TwoSum: s + e == a + b exactly."""
+    s = a + b
+    a1 = s - b
+    b1 = s - a1
+    da = a - a1
+    db = b - b1
+    return s, da + db
+
+
+def fast_two_sum(a, b):
+    """Dekker's FastTwoSum; exact when |a| >= |b|."""
+    s = a + b
+    return s, b - (s - a)
+
+
+def _split(a, splitter):
+    """Veltkamp split: a == hi + lo with hi, lo half-width."""
+    c = splitter * a
+    hi = c - (c - a)
+    return hi, a - hi
+
+
+def two_prod(a, b, *, splitter=float(2**27 + 1)):
+    """Dekker's TwoProd: p + e == a * b exactly (no FMA required)."""
+    p = a * b
+    ah, al = _split(a, splitter)
+    bh, bl = _split(b, splitter)
+    e = ((ah * bh - p) + ah * bl + al * bh) + al * bl
+    return p, e
+
+
+# ---------------------------------------------------------------------------
+# Expansion construction / destruction
+# ---------------------------------------------------------------------------
+
+
+def from_float(x, env: PrecisionEnv):
+    """Promote a plain array to a K-term expansion (value in term 0)."""
+    env = get_env(env)
+    x = jnp.asarray(x, env.dtype)
+    pad = [(0, 0)] * x.ndim + [(0, env.K - 1)]
+    return jnp.pad(x[..., None], pad)
+
+
+def to_float(e):
+    """Collapse an expansion to its base dtype (sum low terms first)."""
+    acc = e[..., -1]
+    for i in range(e.shape[-1] - 2, -1, -1):
+        acc = acc + e[..., i]
+    return acc
+
+
+def zeros(shape, env: PrecisionEnv):
+    env = get_env(env)
+    return jnp.zeros(tuple(shape) + (env.K,), env.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Renormalization (the VRP "normalization at full width" stage)
+# ---------------------------------------------------------------------------
+
+
+def _vecsum_pass(terms):
+    """One VecSum distillation pass over the trailing axis, via lax.scan.
+
+    Sequentially applies (t[i], t[i+1]) <- two_sum(t[i], t[i+1]) for
+    i = M-2 .. 0, pushing dominant mass to index 0 and errors downward.
+    Expressed as a scan so HLO size is O(1) in M (the unrolled form blew
+    compile time up inside solver while-loops at high K).
+    """
+    M = terms.shape[-1]
+    t = jnp.moveaxis(terms, -1, 0)  # (M, ...)
+
+    def step(carry, ti):
+        s, e = two_sum(ti, carry)
+        return s, e
+
+    carry, errs = jax.lax.scan(step, t[M - 1], t[: M - 1], reverse=True)
+    # errs[i] is the error emitted when t[i] absorbed the running sum; it
+    # belongs at slot i+1. Slot 0 is the final running sum.
+    out = jnp.concatenate([carry[None], errs], axis=0)
+    return jnp.moveaxis(out, 0, -1)
+
+
+def renormalize(terms, K: int, passes: int | None = None):
+    """Compress an (..., M)-term sum into a (..., K)-term expansion.
+
+    Uses repeated VecSum distillation passes (Ogita–Rump–Oishi). Every
+    two_sum is exact, so the *exact* value of the sum is invariant; only
+    the final truncation to K terms rounds. ``passes`` trades accuracy
+    against latency — the analogue of the VPFPU's full-width
+    normalization pipeline stage.
+    """
+    M = terms.shape[-1]
+    if M <= K:
+        pad = [(0, 0)] * (terms.ndim - 1) + [(0, K - M)]
+        terms = jnp.pad(terms, pad)
+        M = K
+    if passes is None:
+        passes = 2 if K <= 2 else 3
+    if M <= 6:
+        # Small merges: unrolled bubble passes (cheaper at runtime).
+        cols = [terms[..., i] for i in range(M)]
+        for _ in range(passes):
+            for i in range(M - 2, -1, -1):
+                cols[i], cols[i + 1] = two_sum(cols[i], cols[i + 1])
+        return jnp.stack(cols[:K], axis=-1)
+    for _ in range(passes):
+        terms = _vecsum_pass(terms)
+    return terms[..., :K]
+
+
+# ---------------------------------------------------------------------------
+# Arithmetic
+# ---------------------------------------------------------------------------
+
+
+def add(x, y, env: PrecisionEnv):
+    env = get_env(env)
+    merged = jnp.concatenate(jnp.broadcast_arrays(x, y), axis=-1)
+    return renormalize(merged, env.K)
+
+
+def sub(x, y, env: PrecisionEnv):
+    return add(x, -y, env)
+
+
+def add_float(x, s, env: PrecisionEnv):
+    """Expansion + plain float (Shewchuk grow-expansion, vectorized)."""
+    env = get_env(env)
+    s = jnp.broadcast_to(jnp.asarray(s, env.dtype), x.shape[:-1])
+    merged = jnp.concatenate([x, s[..., None]], axis=-1)
+    return renormalize(merged, env.K)
+
+
+def scale(x, s, env: PrecisionEnv):
+    """Expansion times plain float — exact partial products, then renorm."""
+    env = get_env(env)
+    s = jnp.asarray(s, env.dtype)
+    p, e = two_prod(x, s[..., None], splitter=env.splitter)
+    return renormalize(jnp.concatenate([p, e], axis=-1), env.K)
+
+
+def mul(x, y, env: PrecisionEnv):
+    """Expansion times expansion.
+
+    Keeps partial products t_i * u_j with i + j <= K (magnitude-ordered
+    truncation — precisely the chunk-iteration schedule of the VPFPU
+    multiplier, which skips chunk products below the selected precision).
+    """
+    env = get_env(env)
+    K = env.K
+    x, y = jnp.broadcast_arrays(x, y)
+    Kx, Ky = x.shape[-1], y.shape[-1]
+    # All partial products at once (vectorized TwoProd over the K x K
+    # outer grid), magnitude-truncated at order K: keep p where i+j <= K
+    # and e where i+j < K. Zeroed-out entries are exact no-ops in renorm.
+    p, e = two_prod(x[..., :, None], y[..., None, :], splitter=env.splitter)
+    order = jnp.arange(Kx)[:, None] + jnp.arange(Ky)[None, :]
+    p = jnp.where(order <= K, p, 0.0)
+    e = jnp.where(order < K, e, 0.0)
+    parts = jnp.concatenate(
+        [p.reshape(p.shape[:-2] + (Kx * Ky,)),
+         e.reshape(e.shape[:-2] + (Kx * Ky,))], axis=-1)
+    return renormalize(parts, env.K)
+
+
+def _const(val, like, env):
+    return from_float(jnp.full(like.shape[:-1], val, env.dtype), env)
+
+
+def reciprocal(y, env: PrecisionEnv):
+    """Newton–Raphson reciprocal: r <- r * (2 - y*r); quadratic/iteration."""
+    env = get_env(env)
+    iters = env.newton_iters or max(1, (env.K - 1).bit_length() + 1)
+    r = from_float(1.0 / to_float(y), env)
+    two = _const(2.0, y, env)
+    for _ in range(iters):
+        r = mul(r, sub(two, mul(y, r, env), env), env)
+    return r
+
+
+def div(x, y, env: PrecisionEnv):
+    return mul(x, reciprocal(y, env), env)
+
+
+def sqrt(x, env: PrecisionEnv):
+    """sqrt via Newton on r ~ 1/sqrt(x): r <- r*(3 - x*r^2)/2, then x*r."""
+    env = get_env(env)
+    iters = env.newton_iters or max(1, (env.K - 1).bit_length() + 1)
+    r = from_float(1.0 / jnp.sqrt(to_float(x)), env)
+    three = _const(3.0, x, env)
+    for _ in range(iters):
+        xr2 = mul(x, mul(r, r, env), env)
+        r = scale(mul(r, sub(three, xr2, env), env), jnp.asarray(0.5, env.dtype), env)
+    return mul(x, r, env)
+
+
+# ---------------------------------------------------------------------------
+# Reductions (tree-structured, vectorized — the long-vector discipline)
+# ---------------------------------------------------------------------------
+
+
+def tree_sum(x, env: PrecisionEnv, axis: int = 0):
+    """Sum an array of expansions along ``axis`` by pairwise vp-adds.
+
+    log2(n) vectorized levels; each level is an exact merge + renormalize,
+    so worst-case error is ~log2(n) truncations instead of n.
+    """
+    env = get_env(env)
+    x = jnp.moveaxis(x, axis, 0)
+    n = x.shape[0]
+    while n > 1:
+        half = n // 2
+        lo, hi = x[: 2 * half : 2], x[1 : 2 * half : 2]
+        merged = add(lo, hi, env)
+        if n % 2:
+            merged = jnp.concatenate([merged, x[2 * half :]], axis=0)
+        x = merged
+        n = x.shape[0]
+    return x[0]
+
+
+def sum_floats(x, env: PrecisionEnv, axis: int = 0):
+    """Extended-precision sum of a *plain* float array (cascaded)."""
+    env = get_env(env)
+    return tree_sum(from_float(jnp.moveaxis(jnp.asarray(x, env.dtype), axis, 0), env), env)
+
+
+def dot(x, y, env: PrecisionEnv):
+    """Extended-precision dot of two plain vectors (Ogita–Rump–Oishi DotK).
+
+    Elementwise TwoProd (exact), then a compensated tree sum of the 2n
+    partials. This is the VBLAS ``dot`` of the paper — the reduction that
+    makes Krylov methods on ill-conditioned systems converge.
+    """
+    env = get_env(env)
+    x = jnp.asarray(x, env.dtype)
+    y = jnp.asarray(y, env.dtype)
+    p, e = two_prod(x, y, splitter=env.splitter)
+    partials = jnp.stack([p, e], axis=-1)  # (n, 2) exact products
+    partials = renormalize(partials, env.K)
+    return tree_sum(partials, env)
+
+
+def dot_vp(x, y, env: PrecisionEnv):
+    """Dot of two expansion vectors (n, K) x (n, K)."""
+    env = get_env(env)
+    return tree_sum(mul(x, y, env), env)
+
+
+def matvec(A, x, env: PrecisionEnv):
+    """Plain matrix (m, n) times expansion vector (n, K) -> (m, K).
+
+    Exact per-element products against every expansion term, then a
+    compensated tree reduction along n.
+    """
+    env = get_env(env)
+    A = jnp.asarray(A, env.dtype)
+    p, e = two_prod(A[..., None], x[None, ...], splitter=env.splitter)
+    merged = renormalize(jnp.concatenate([p, e], axis=-1), env.K)  # (m, n, K)
+    return tree_sum(merged, env, axis=1)

@@ -1,0 +1,96 @@
+"""Data pipeline: deterministic, sharded, resumable token streams.
+
+Fault-tolerance property: batch(step, shard) is a pure function of
+(seed, step, shard), so any rank can reconstruct any batch — elastic
+restarts and straggler-skip need no data-state checkpointing beyond the
+step counter. (The EPAC analogue: the SDV flow's reproducible benchmark
+harness — same inputs on every bring-up run.)
+
+Two sources:
+  * SyntheticLM  — threefry-derived tokens (markov-ish structure so loss
+    actually decreases; used by examples + tests).
+  * FileTokens   — memory-mapped flat .bin of token ids (production path).
+Ragged tails are strip-mined VLA-style (core/vec.py): the final partial
+batch is masked, never dropped and never a special case.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    path: Optional[str] = None       # None -> synthetic
+
+
+class SyntheticLM:
+    """Deterministic synthetic LM stream with learnable structure.
+
+    Tokens follow x_{t+1} = (a * x_t + b) mod V with per-sequence (a, b)
+    — trivially learnable, so quickstart loss curves are meaningful.
+    """
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+
+    def batch_at(self, step: int, shard: int = 0, n_shards: int = 1):
+        cfg = self.cfg
+        local = cfg.global_batch // n_shards
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, shard]))
+        a = rng.integers(1, 17, (local, 1))
+        b = rng.integers(0, cfg.vocab_size, (local, 1))
+        x0 = rng.integers(0, cfg.vocab_size, (local, 1))
+        t = np.arange(cfg.seq_len + 1)
+        # closed form of the affine recurrence mod V
+        seq = (x0 * np.power.outer(np.ones(local, dtype=np.int64),
+                                   t)).astype(np.int64)
+        seqs = np.empty((local, cfg.seq_len + 1), np.int64)
+        seqs[:, 0] = x0[:, 0]
+        for i in range(1, cfg.seq_len + 1):
+            seqs[:, i] = (a[:, 0] * seqs[:, i - 1] + b[:, 0]) % cfg.vocab_size
+        return {"tokens": jnp.asarray(seqs[:, :-1], jnp.int32),
+                "targets": jnp.asarray(seqs[:, 1:], jnp.int32)}
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class FileTokens:
+    """Flat uint16/uint32 .bin of token ids, memory-mapped."""
+
+    def __init__(self, cfg: DataConfig, dtype=np.uint16):
+        self.cfg = cfg
+        self.data = np.memmap(cfg.path, dtype=dtype, mode="r")
+        self.n_tokens = len(self.data)
+
+    def batch_at(self, step: int, shard: int = 0, n_shards: int = 1):
+        cfg = self.cfg
+        local = cfg.global_batch // n_shards
+        span = cfg.seq_len + 1
+        per_step = cfg.global_batch * span
+        base = (step * per_step + shard * local * span) % max(
+            self.n_tokens - per_step, 1)
+        rows = [np.asarray(self.data[base + i * span: base + (i + 1) * span],
+                           np.int64) % cfg.vocab_size
+                for i in range(local)]
+        seqs = np.stack(rows)
+        return {"tokens": jnp.asarray(seqs[:, :-1], jnp.int32),
+                "targets": jnp.asarray(seqs[:, 1:], jnp.int32)}
+
+
+def make_source(cfg: DataConfig):
+    return FileTokens(cfg) if cfg.path else SyntheticLM(cfg)

@@ -1,0 +1,174 @@
+"""Public kernel API — jit'd wrappers with backend dispatch + VLA padding.
+
+Every op takes ``mode``:
+  'auto'      — Pallas on TPU, jnp reference on CPU (dry-run lowering path;
+                identical math so HLO FLOP/byte counts stay representative)
+  'pallas'    — force pallas_call (real TPU execution)
+  'interpret' — pallas_call(interpret=True): kernel body runs in Python on
+                CPU — the per-kernel correctness gate used by tests/
+  'ref'       — force the pure-jnp oracle
+
+Inputs of arbitrary size are padded to block multiples and sliced back —
+the VEC tile's vector-length-agnostic discipline (no scalar tails, no
+shape-specialized kernels).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .flash_attention import flash_attention_pallas
+from .rglru_scan import rglru_scan_pallas
+from .stx_matmul import stx_matmul_pallas
+from .stx_stencil import stencil2d_pallas, stencil3d_pallas
+from .vrp_dot import vrp_dot_pallas, vrp_sum_pallas
+
+
+def _use_pallas(mode: str) -> tuple[bool, bool]:
+    """-> (use pallas, interpret flag)."""
+    if mode == "auto":
+        return (jax.default_backend() == "tpu", False)
+    if mode == "pallas":
+        return True, False
+    if mode == "interpret":
+        return True, True
+    if mode == "ref":
+        return False, False
+    raise ValueError(f"unknown kernel mode {mode!r}")
+
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+# ---------------------------------------------------------------------------
+
+
+def stx_matmul(x, w, *, block_m=128, block_n=128, block_k=128, mode="auto",
+               interpret=False, out_dtype=None):
+    """(..., K) @ (K, N) through the STX tile."""
+    use, interp = _use_pallas(mode)
+    interp = interp or interpret
+    if not use and not interp:
+        return _ref.matmul(x, w, out_dtype=out_dtype)
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, x.shape[-1])
+    xm, m0 = _pad_to(xm, 0, block_m)
+    xm, k0 = _pad_to(xm, 1, block_k)
+    wp, _ = _pad_to(w, 0, block_k)
+    wp, n0 = _pad_to(wp, 1, block_n)
+    out = stx_matmul_pallas(xm, wp, block_m=block_m, block_n=block_n,
+                            block_k=block_k, out_dtype=out_dtype,
+                            interpret=interp)
+    return out[:m0, :n0].reshape(*lead, n0)
+
+
+def stencil2d(x, weights, *, block_m=128, block_n=128, mode="auto",
+              interpret=False):
+    """3x3 weighted stencil, zero boundary; x: (M, N)."""
+    use, interp = _use_pallas(mode)
+    interp = interp or interpret
+    if not use and not interp:
+        return _ref.stencil2d(x, weights)
+    xp, m0 = _pad_to(x, 0, block_m)
+    xp, n0 = _pad_to(xp, 1, block_n)
+    out = stencil2d_pallas(xp, weights, block_m=block_m, block_n=block_n,
+                           interpret=interp)
+    return out[:m0, :n0]
+
+
+def stencil3d(x, weights, *, block_d=8, block_m=32, block_n=128, mode="auto",
+              interpret=False):
+    """3x3x3 weighted stencil, zero boundary; x: (D, M, N)."""
+    use, interp = _use_pallas(mode)
+    interp = interp or interpret
+    if not use and not interp:
+        return _ref.stencil3d(x, weights)
+    xp, d0 = _pad_to(x, 0, block_d)
+    xp, m0 = _pad_to(xp, 1, block_m)
+    xp, n0 = _pad_to(xp, 2, block_n)
+    out = stencil3d_pallas(xp, weights, block_d=block_d, block_m=block_m,
+                           block_n=block_n, interpret=interp)
+    return out[:d0, :m0, :n0]
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    block_q=128, block_k=128, mode="auto", interpret=False):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D)."""
+    use, interp = _use_pallas(mode)
+    interp = interp or interpret
+    if not use and not interp:
+        return _ref.flash_attention(q, k, v, causal=causal, window=window,
+                                    scale=scale)
+    qp, sq0 = _pad_to(q, 2, block_q)
+    kp, skv0 = _pad_to(k, 2, block_k)
+    vp, _ = _pad_to(v, 2, block_k)
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                                 scale=scale, kv_len=skv0, block_q=block_q,
+                                 block_k=block_k, interpret=interp)
+    return out[:, :, :sq0]
+
+
+def _finalize_expansion(lanes):
+    """Compensated tree over per-lane (8, 128, 2) partials -> (2,)."""
+    from repro.core import vrp
+    from repro.core.precision import PrecisionEnv
+
+    env = PrecisionEnv(compute_terms=2, base_dtype=str(lanes.dtype))
+    return vrp.tree_sum(lanes.reshape(-1, 2), env)
+
+
+def vrp_dot(x, y, *, mode="auto", interpret=False):
+    """Double-word dot of flat vectors -> (2,) expansion [hi, lo]."""
+    use, interp = _use_pallas(mode)
+    interp = interp or interpret
+    if not use and not interp:
+        return _ref.vrp_dot(x, y)
+    xp, _ = _pad_to(x.reshape(-1), 0, 1024)
+    yp, _ = _pad_to(y.reshape(-1), 0, 1024)
+    lanes = vrp_dot_pallas(xp, yp, interpret=interp)
+    return _finalize_expansion(lanes)
+
+
+def vrp_sum(x, *, mode="auto", interpret=False):
+    """Double-word sum of a flat vector -> (2,) expansion [hi, lo]."""
+    use, interp = _use_pallas(mode)
+    interp = interp or interpret
+    if not use and not interp:
+        return _ref.vrp_sum(x)
+    xp, _ = _pad_to(x.reshape(-1), 0, 1024)
+    lanes = vrp_sum_pallas(xp, interpret=interp)
+    return _finalize_expansion(lanes)
+
+
+def rglru_scan(a, x, h0=None, *, block_b=8, block_t=128, block_d=128,
+               mode="auto", interpret=False):
+    """Diagonal linear recurrence h_t = a_t h_{t-1} + x_t; (B, T, D)."""
+    use, interp = _use_pallas(mode)
+    interp = interp or interpret
+    if not use and not interp:
+        return _ref.linear_scan(a, x, h0)
+    B, T, D = x.shape
+    ap, b0 = _pad_to(a, 0, block_b)
+    xp, _ = _pad_to(x, 0, block_b)
+    ap, t0 = _pad_to(ap, 1, block_t)
+    xp, _ = _pad_to(xp, 1, block_t)
+    ap, d0 = _pad_to(ap, 2, block_d)
+    xp, _ = _pad_to(xp, 2, block_d)
+    h0p = None
+    if h0 is not None:
+        h0p, _ = _pad_to(h0, 0, block_b)
+        h0p, _ = _pad_to(h0p, 1, block_d)
+    out = rglru_scan_pallas(ap, xp, h0p, block_b=block_b, block_t=block_t,
+                            block_d=block_d, interpret=interp)
+    return out[:b0, :t0, :d0]

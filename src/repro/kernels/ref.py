@@ -1,0 +1,153 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each kernel in this package must match its oracle here (assert_allclose in
+tests/test_kernels_*.py across shape/dtype sweeps). The oracles are also
+the CPU lowering path for the dry-run: identical math, so HLO FLOP/byte
+counts stay representative of the kernelized TPU build.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# STX matmul
+# ---------------------------------------------------------------------------
+
+
+def matmul(x, w, out_dtype=None):
+    """(..., K) @ (K, N), f32 accumulation."""
+    out = jnp.einsum("...k,kn->...n", x, w, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# STX stencil (the SPU workload: structured-grid, fixed pattern)
+# ---------------------------------------------------------------------------
+
+
+def stencil2d(x, weights):
+    """3x3 weighted stencil on (..., M, N); zero boundary (halo = 0)."""
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(1, 1), (1, 1)])
+    out = jnp.zeros_like(x)
+    for di in range(3):
+        for dj in range(3):
+            out = out + weights[di, dj] * jax.lax.slice_in_dim(
+                jax.lax.slice_in_dim(xp, di, di + x.shape[-2], axis=-2),
+                dj, dj + x.shape[-1], axis=-1)
+    return out
+
+
+def stencil3d(x, weights):
+    """3x3x3 weighted stencil on (..., D, M, N); zero boundary."""
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 3) + [(1, 1)] * 3)
+    out = jnp.zeros_like(x)
+    for dd in range(3):
+        for di in range(3):
+            for dj in range(3):
+                sl = xp[..., dd:dd + x.shape[-3], di:di + x.shape[-2],
+                        dj:dj + x.shape[-1]]
+                out = out + weights[dd, di, dj] * sl
+    return out
+
+
+def seven_point_weights(dtype=jnp.float32):
+    """Classic 7-point Laplacian weights as a 3x3x3 mask."""
+    w = np.zeros((3, 3, 3), dtype=np.float64)
+    w[1, 1, 1] = -6.0
+    for d in ((0, 1, 1), (2, 1, 1), (1, 0, 1), (1, 2, 1), (1, 1, 0), (1, 1, 2)):
+        w[d] = 1.0
+    return jnp.asarray(w, dtype)
+
+
+def five_point_weights(dtype=jnp.float32):
+    w = np.zeros((3, 3), dtype=np.float64)
+    w[1, 1] = -4.0
+    w[0, 1] = w[2, 1] = w[1, 0] = w[1, 2] = 1.0
+    return jnp.asarray(w, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (GQA / causal / sliding-window)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    q_offset=0):
+    """Oracle attention.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D). GQA maps query head h to
+    kv head h // (Hq // Hkv). ``window`` (if set) restricts attention to
+    the last ``window`` positions (SWA). ``q_offset`` positions queries at
+    absolute position q_offset + i (decode: Sq=1, q_offset=pos).
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    scale = float(scale) if scale is not None else float(1.0 / np.sqrt(D))
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kx.astype(jnp.float32)) * scale
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((Sq, k.shape[2]), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # Fully-masked rows (can happen with tiny windows) -> zeros, not NaN.
+    probs = jnp.where(jnp.any(mask, -1)[None, None, :, None], probs, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vx.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# VRP compensated reductions (double-word = 2-term expansion)
+# ---------------------------------------------------------------------------
+
+
+def vrp_dot(x, y):
+    """Double-word dot oracle via core.vrp at K=2 in the input dtype."""
+    from repro.core import vrp
+    from repro.core.precision import PrecisionEnv
+
+    env = PrecisionEnv(compute_terms=2, base_dtype=str(x.dtype))
+    e = vrp.dot(x, y, env)
+    return e  # (2,) expansion [hi, lo]
+
+
+def vrp_sum(x):
+    from repro.core import vrp
+    from repro.core.precision import PrecisionEnv
+
+    env = PrecisionEnv(compute_terms=2, base_dtype=str(x.dtype))
+    return vrp.sum_floats(x.reshape(-1), env)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU / diagonal linear recurrence scan
+# ---------------------------------------------------------------------------
+
+
+def linear_scan(a, x, h0=None):
+    """h_t = a_t * h_{t-1} + x_t along axis 1. a, x: (B, T, D).
+
+    Implemented as an associative scan (log-depth; the XLA-native form a
+    TPU would run when not using the Pallas kernel; also makes its FLOPs
+    visible to cost_analysis, unlike a while-loop scan).
+    """
+    if h0 is not None:
+        x = x.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        aL, bL = left
+        aR, bR = right
+        return aL * aR, bL * aR + bR
+
+    _, h = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return h

@@ -1,0 +1,58 @@
+"""Elastic scaling: replan the mesh on node count change, reshard state.
+
+Contract for 1000+ node runs:
+  * checkpoints hold full logical arrays (checkpoint/checkpoint.py), so a
+    restore onto ANY mesh just device_puts with the new shardings;
+  * the TP (model) extent is preserved across replans — it is baked into
+    per-layer math efficiency — and the DP extent absorbs node loss/gain;
+  * data order is preserved by the deterministic pipeline: batch(step) is
+    identity-stable, only the shard slicing changes with dp size.
+
+``replan_mesh`` handles the failure arithmetic (e.g. 512 - 16 dead = 496
+-> largest (pod, data, model) grid with model=16 that fits: 31x16 over
+one merged dp axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.launch.mesh import make_mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class Replan:
+    shape: tuple
+    axes: tuple
+    dropped_devices: int
+
+
+def replan_mesh(n_devices: int, tp: int = 16, prefer_pods: int | None = None
+                ) -> Replan:
+    """Largest usable (dp, tp) grid with fixed tp from n_devices."""
+    assert n_devices >= tp, (n_devices, tp)
+    dp = n_devices // tp
+    used = dp * tp
+    if prefer_pods and dp % prefer_pods == 0:
+        return Replan((prefer_pods, dp // prefer_pods, tp),
+                      ("pod", "data", "model"), n_devices - used)
+    return Replan((dp, tp), ("data", "model"), n_devices - used)
+
+
+def build_replanned_mesh(plan: Replan):
+    return make_mesh(plan.shape, plan.axes)
+
+
+def reshard_state(state, new_specs_named):
+    """Move a (restored or live) state pytree onto new shardings."""
+    return jax.tree.map(lambda x, s: jax.device_put(np.asarray(x), s),
+                        state, new_specs_named)
+
+
+def survivors_after_failure(n_devices: int, failed: int, tp: int = 16
+                            ) -> Replan:
+    """Failure arithmetic: drop failed nodes, replan the DP extent."""
+    return replan_mesh(n_devices - failed, tp=tp)

@@ -1,0 +1,44 @@
+"""Mesh construction — the uncore fabric, as functions (never module
+state: importing this must not touch jax device initialization).
+
+Production target (TPU v5e):
+  single-pod  (16, 16)    axes (data, model)          = 256 chips
+  multi-pod   (2, 16, 16) axes (pod, data, model)     = 512 chips
+The ``pod`` axis is the EPAC C2C analogue: slower tier, carries only
+data-parallel (all-reduce-friendly) traffic.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh over available devices (tests, small runs)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_local_mesh(tp: int = 1):
+    """Mesh over whatever devices exist locally: (data = n/tp, model = tp)."""
+    n = len(jax.devices())
+    assert n % tp == 0
+    return jax.make_mesh((n // tp, tp), ("data", "model"))
+
+
+def dp_axes_of(mesh) -> tuple:
+    """All non-model axes, in mesh order (pod first if present)."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def mesh_summary(mesh) -> dict:
+    return {"axes": dict(zip(mesh.axis_names,
+                             [int(s) for s in mesh.devices.shape])),
+            "n_devices": int(np.prod(mesh.devices.shape))}

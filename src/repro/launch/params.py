@@ -1,0 +1,43 @@
+"""Parameter accounting (analytic, via eval_shape — no allocation)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+
+def param_tree_shapes(cfg):
+    m = Model(cfg)
+    return jax.eval_shape(lambda: m.init(jax.random.PRNGKey(0)))
+
+
+def total_param_count(cfg) -> int:
+    tree = param_tree_shapes(cfg)
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        n = 1
+        for s in leaf.shape:   # python ints — no int32 overflow at 1T params
+            n *= int(s)
+        total += n
+    return total
+
+
+def active_param_count(cfg) -> int:
+    """Matmul-active params per token: excludes the embedding *gather*,
+    includes the logits matmul, and counts only top_k/E of expert FFNs."""
+    tree = param_tree_shapes(cfg)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    total = 0
+    for path, leaf in flat:
+        name = getattr(path[-1], "key", "")
+        n = 1
+        for s in leaf.shape:
+            n *= int(s)
+        if name == "embed" and not cfg.tie_embeddings:
+            continue  # pure gather; logits use lm_head
+        if name in ("w1", "w2", "w3") and cfg.is_moe:
+            n = int(n * cfg.moe_top_k / cfg.n_experts)
+        total += n
+    return total

@@ -1,0 +1,254 @@
+"""Sharding layout rules — the tensor-level analogue of EPAC's
+"programmable address interleaving" across distributed L2 slices.
+
+Layout policy (2-D FSDP x TP, the baseline recorded in §Roofline):
+  * column-parallel weights (wq/wk/wv, w_up/w_gate, ...):  (d -> dp, out -> tp)
+  * row-parallel weights    (wo, w_down, w_out):           (in -> tp, d -> dp)
+  * expert weights:  E -> tp (EP), d -> dp (FSDP)
+  * embeddings:      vocab -> tp, d -> dp;  lm_head: (d -> dp, vocab -> tp)
+  * norms/gains:     replicated
+Every rule is divisibility-checked against the mesh — a dim that does not
+divide its axis is left unsharded (never an error), so the same rules
+serve all 10 architectures (e.g. kv_heads < |model| falls back cleanly).
+
+``ShardCtx`` is the static handle threaded into model code (MoE shard_map
+needs mesh + axis names).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes_of
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    mesh: Any                                  # jax.sharding.Mesh
+    dp_axes: tuple                             # ("pod", "data") | ("data",)
+    tp_axis: str = "model"
+    # '2d'   — FSDP over dp_axes x TP over tp_axis (Megatron-style).
+    # 'fsdp' — pure FSDP over ALL axes; no tensor parallelism. §Perf
+    #          result: dense <=7B models at 256 chips are activation-AR
+    #          bound under '2d'; 'fsdp' trades that for weight gathers.
+    layout: str = "2d"
+    # decode caches: shard kv-sequence over tp (flash-decoding combine)
+    # instead of kv-heads (which rarely divide |tp|).
+    cache_seq_shard: bool = False
+
+    def __hash__(self):  # Mesh isn't hashable by content across rebuilds
+        return hash((self.dp_axes, self.tp_axis, self.layout,
+                     self.cache_seq_shard,
+                     tuple(self.mesh.axis_names),
+                     tuple(int(s) for s in self.mesh.devices.shape)))
+
+    def __eq__(self, other):
+        return isinstance(other, ShardCtx) and hash(self) == hash(other)
+
+    @property
+    def all_axes(self) -> tuple:
+        return tuple(self.mesh.axis_names)
+
+    @property
+    def batch_axes(self) -> tuple:
+        """Axes the batch dim is sharded over."""
+        return self.all_axes if self.layout == "fsdp" else self.dp_axes
+
+    @property
+    def dp_size(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.dp_axes]))
+
+    @property
+    def tp_size(self) -> int:
+        return int(self.mesh.shape[self.tp_axis])
+
+
+def make_shard_ctx(mesh, layout: str = "2d",
+                   cache_seq_shard: bool = False) -> ShardCtx:
+    return ShardCtx(mesh=mesh, dp_axes=dp_axes_of(mesh), layout=layout,
+                    cache_seq_shard=cache_seq_shard)
+
+
+def _axis_size(mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return int(mesh.shape[axis])
+
+
+def _fit(spec_dims, shape, mesh):
+    """Drop sharding on dims that don't divide their mesh axes."""
+    out = []
+    for dim, axis in zip(shape, spec_dims):
+        if axis is None:
+            out.append(None)
+        elif dim % _axis_size(mesh, axis) == 0:
+            out.append(axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# Rules keyed by the *leaf name* (last path key); dims are right-aligned
+# so stacked (L, ...) variants share the rule.
+def _param_rule(name: str, ndim: int, shard: ShardCtx):
+    if shard.layout == "fsdp":
+        return _param_rule_fsdp(name, ndim, shard)
+    dp, tp = shard.dp_axes, shard.tp_axis
+    col = (dp, tp)            # (..., d_in -> dp, d_out -> tp)
+    row = (tp, dp)            # (..., d_in -> tp, d_out -> dp)
+    table = {
+        "embed": (tp, dp),
+        "lm_head": (dp, tp),
+        "wq": col, "wk": col, "wv": col, "w_up": col, "w_gate": col,
+        "w_x": col, "w_a": col, "w_i": col, "w_zifo": col, "w_if": col,
+        "wo": row, "w_down": row, "w_out": row,
+        "router": (dp, None),
+        "w1": (tp, dp, None), "w3": (tp, dp, None),   # experts (E, d, ff)
+        "w2": (tp, None, dp),                          # experts (E, ff, d)
+    }
+    dims = table.get(name)
+    if dims is None:
+        return None  # replicate (norms, biases, conv, lam, r_zifo, ...)
+    pad = (None,) * (ndim - len(dims))
+    return pad + tuple(dims)
+
+
+def _param_rule_fsdp(name: str, ndim: int, shard: ShardCtx):
+    """Pure-FSDP layout: every weight sharded over ALL mesh axes on its
+    input dim, gathered on use by GSPMD; embeddings sharded on d so the
+    token gather stays local (no vocab-parallelism needed)."""
+    ax = shard.all_axes
+    table = {
+        "embed": (None, ax),               # (V, d -> all)
+        "lm_head": (ax, None),             # (d -> all, V)
+        "wq": (ax, None), "wk": (ax, None), "wv": (ax, None),
+        "w_up": (ax, None), "w_gate": (ax, None),
+        "w_x": (ax, None), "w_a": (ax, None), "w_i": (ax, None),
+        "w_zifo": (ax, None), "w_if": (ax, None),
+        "wo": (ax, None), "w_down": (ax, None), "w_out": (ax, None),
+        "router": (ax, None),
+        "w1": (None, ax, None), "w3": (None, ax, None),
+        "w2": (None, ax, None),
+    }
+    dims = table.get(name)
+    if dims is None:
+        return None
+    pad = (None,) * (ndim - len(dims))
+    return pad + tuple(dims)
+
+
+def param_specs(params, shard: ShardCtx):
+    """Pytree of PartitionSpecs for a param pytree (divisibility-checked)."""
+    def spec_of(path, leaf):
+        # Leaf name = last path key ('wq' under .../attn/, 'w1' under moe/).
+        name = getattr(path[-1], "key", None)
+        dims = _param_rule(name, leaf.ndim, shard)
+        if dims is None:
+            return P()
+        return _fit(dims, leaf.shape, shard.mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+def batch_specs(batch, shard: ShardCtx):
+    """Shard batch-like inputs over the batch axes on their batch dim."""
+    dp = shard.batch_axes
+
+    tp = shard.tp_axis
+
+    # Cache layout: batch over DP; the head/state-width dim over TP
+    # (kv-heads for attention caches, heads for mLSTM/sLSTM state, the
+    # recurrent width for RG-LRU). _fit drops TP when not divisible
+    # (e.g. kv=8 < |model|=16), which is the honest fallback recorded
+    # in §Roofline.
+    if shard.cache_seq_shard:
+        kv_rule = (None, dp, tp, None, None)  # (L, B, S -> tp, Hkv, hd)
+    else:
+        kv_rule = (None, dp, None, tp, None)  # (L, B, S, Hkv -> tp, hd)
+    cache_rules = {
+        "k": kv_rule,
+        "v": kv_rule,
+        "C": (None, dp, tp, None, None),      # (L, B, H, hd, hd)
+        "n": (None, dp, tp, None),            # (L, B, H, hd)
+        "m": (None, dp, tp),                  # (L, B, H)
+        "h": (None, dp, tp),                  # rglru (L, B, dr) / slstm 4D
+        "c": (None, dp, tp, None),            # slstm (L, B, H, hd)
+        "conv": (None, dp, None, tp),         # (L, B, w-1, d)
+    }
+
+    def spec_of(path, leaf):
+        last = getattr(path[-1], "key", "")
+        nd = len(leaf.shape)
+        if last in ("tokens", "targets"):
+            return _fit((dp, None), leaf.shape, shard.mesh)
+        if last in ("frames", "visual_embeds"):
+            return _fit((dp, None, None), leaf.shape, shard.mesh)
+        if last == "mrope_positions":
+            return _fit((None, dp, None), leaf.shape, shard.mesh)
+        if last == "pos" or nd == 0:
+            return P()
+        if last in cache_rules:
+            dims = cache_rules[last]
+            ancestors = {getattr(p, "key", None) for p in path[:-1]}
+            if last in ("h", "m") and nd == 4:   # slstm h/m: (L, B, H, hd)
+                dims = (None, dp, tp, None)
+            if last in ("k", "v") and "cross" in ancestors:
+                dims = (None, dp, tp, None, None)  # (L, B, Hkv, Senc, hd)
+            elif last in ("k", "v") and nd == 4:  # unstacked (B, S, Hkv, hd)
+                dims = (dp, None, tp, None)
+            dims = dims[:nd] if len(dims) >= nd else dims + (None,) * (
+                nd - len(dims))
+            return _fit(dims, leaf.shape, shard.mesh)
+        # generic batch-like: (L, B, ...) -> B over dp
+        if nd >= 2:
+            return _fit((None, dp) + (None,) * (nd - 2), leaf.shape,
+                        shard.mesh)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_of, batch)
+
+
+def opt_state_specs(pspecs, opt_state_shapes, shard: ShardCtx):
+    """Optimizer state mirrors param sharding; scalars replicated."""
+    def mirror(path, leaf):
+        # walk: state['m']/<param path...>  -> look up param spec by subpath
+        keys = [getattr(p, "key", None) for p in path]
+        if keys and keys[0] in ("m", "v", "comp", "fac"):
+            sub = pspecs
+            try:
+                for k in keys[1:]:
+                    if k in ("row", "col", "v"):
+                        # factored stats drop trailing dims
+                        base = sub
+                        spec = tuple(base)
+                        if k == "row":
+                            return P(*spec[:-1]) if len(spec) else P()
+                        if k == "col":
+                            return P(*(spec[:-2] + spec[-1:])) if len(spec) >= 2 else P()
+                        return base
+                    sub = sub[k]
+                return sub
+            except (KeyError, TypeError):
+                return P()
+        return P()
+
+    return jax.tree_util.tree_map_with_path(mirror, opt_state_shapes)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, shard: Optional[ShardCtx], *dims):
+    """with_sharding_constraint helper that no-ops without a mesh."""
+    if shard is None:
+        return x
+    spec = _fit(dims, x.shape, shard.mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(shard.mesh, spec))

@@ -1,0 +1,193 @@
+"""Encoder-decoder assembly (whisper-base backbone).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, F, d) directly to the encoder. Decoder
+blocks add a cross-attention sublayer; decode caches both the self-KV ring
+and the (static per request) cross K/V.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers
+from repro.models.transformer import RunCtx, _logits
+from repro.configs.base import ModelConfig
+
+
+def init_encdec(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 2 * (cfg.n_encoder_layers + cfg.n_layers) + 4)
+    ki = 0
+
+    def enc_block(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+            "attn": attn_lib.init_attention(k1, cfg, dtype),
+            "ln2": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+            "mlp": layers.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype,
+                                   gated=cfg.gated_mlp),
+        }
+
+    def dec_block(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "ln1": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+            "attn": attn_lib.init_attention(k1, cfg, dtype),
+            "lnx": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+            "xattn": attn_lib.init_attention(k2, cfg, dtype, cross=True),
+            "ln2": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+            "mlp": layers.init_mlp(k3, cfg.d_model, cfg.d_ff, dtype,
+                                   gated=cfg.gated_mlp),
+        }
+
+    enc = [enc_block(ks[ki + i]) for i in range(cfg.n_encoder_layers)]
+    ki += cfg.n_encoder_layers
+    dec = [dec_block(ks[ki + i]) for i in range(cfg.n_layers)]
+    ki += cfg.n_layers
+    return {
+        "embed": layers.truncated_normal_init(
+            ks[ki], (cfg.vocab_size, cfg.d_model), dtype, stddev=1.0),
+        "enc": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "enc_norm": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+        "dec": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "final_norm": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames, ctx: RunCtx):
+    """frames: (B, F, d) stub embeddings -> encoder output (B, F, d)."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + layers.sinusoidal_embed(jnp.arange(x.shape[1]), cfg.d_model,
+                                    x.dtype)
+
+    def body(xc, p):
+        xn = layers.apply_norm(cfg.norm, p["ln1"], xc)
+        xc = xc + attn_lib.attend(p["attn"], cfg, xn,
+                                  jnp.arange(xn.shape[1]), causal=False,
+                                  kernel_mode=ctx.kernel_mode)
+        xn = layers.apply_norm(cfg.norm, p["ln2"], xc)
+        xc = xc + layers.apply_mlp(p["mlp"], xn, cfg.activation)
+        return xc, None
+
+    x, _ = jax.lax.scan(body, x, params["enc"],
+                        unroll=True if ctx.scan_unroll else 1)
+    return layers.apply_norm(cfg.norm, params["enc_norm"], x)
+
+
+def _dec_block(p, cfg, x, positions, cross_kv, ctx, self_cache=None,
+               pos=None):
+    xn = layers.apply_norm(cfg.norm, p["ln1"], x)
+    if self_cache is None:
+        x = x + attn_lib.attend(p["attn"], cfg, xn, positions, causal=True,
+                                kernel_mode=ctx.kernel_mode)
+        new_cache = None
+    else:
+        out, new_cache = attn_lib.decode_attend(p["attn"], cfg, xn,
+                                                self_cache, pos)
+        x = x + out
+    xn = layers.apply_norm(cfg.norm, p["lnx"], x)
+    x = x + attn_lib.attend_cross(p["xattn"], cfg, xn, cross_kv)
+    xn = layers.apply_norm(cfg.norm, p["ln2"], x)
+    x = x + layers.apply_mlp(p["mlp"], xn, cfg.activation)
+    return x, new_cache
+
+
+def forward(params, cfg: ModelConfig, tokens, frames, ctx: RunCtx):
+    """Training forward: (B, S) tokens + (B, F, d) frames -> logits."""
+    enc_out = encode(params, cfg, frames, ctx)
+    x = params["embed"][tokens]
+    x = x + layers.sinusoidal_embed(jnp.arange(x.shape[1]), cfg.d_model,
+                                    x.dtype)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+    def body(xc, p):
+        cross_kv = attn_lib.encode_cross_kv(p["xattn"], cfg, enc_out)
+        xc, _ = _dec_block(p, cfg, xc, positions, cross_kv, ctx)
+        return xc, None
+
+    x, _ = jax.lax.scan(body, x, params["dec"],
+                        unroll=True if ctx.scan_unroll else 1)
+    x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+    return _logits(params, cfg, x), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, ctx: RunCtx):
+    logits, aux = forward(params, cfg, batch["tokens"], batch["frames"], ctx)
+    tgt = batch["targets"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    return ce, {"ce": ce, "aux": aux, "loss": ce}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Self-KV ring per decoder layer + slot for cross K/V."""
+    dtype = jnp.dtype(cfg.dtype)
+    one = attn_lib.init_kv_cache(cfg, batch, max_len, dtype)
+    L = cfg.n_layers
+    stack = lambda t: jnp.broadcast_to(t[None], (L,) + t.shape)
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    cross = {"k": jnp.zeros((L, batch, hkv, cfg.encoder_len, hd), dtype),
+             "v": jnp.zeros((L, batch, hkv, cfg.encoder_len, hd), dtype)}
+    return {"self": jax.tree.map(stack, one), "cross": cross}
+
+
+def prefill(params, cfg: ModelConfig, tokens, frames, ctx: RunCtx,
+            max_len=None):
+    """Encode + decoder prefill. Returns (logits, cache)."""
+    S = tokens.shape[1]
+    max_len = max_len or S
+    enc_out = encode(params, cfg, frames, ctx)
+    x = params["embed"][tokens]
+    x = x + layers.sinusoidal_embed(jnp.arange(S), cfg.d_model, x.dtype)
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(xc, p):
+        cross_kv = attn_lib.encode_cross_kv(p["xattn"], cfg, enc_out)
+        xn = layers.apply_norm(cfg.norm, p["ln1"], xc)
+        q, k, v = attn_lib._project_qkv(p["attn"], cfg, xn, xn)
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q.transpose(0, 2, 1, 3),
+                                   k.transpose(0, 2, 1, 3),
+                                   v.transpose(0, 2, 1, 3), causal=True,
+                                   mode=ctx.kernel_mode)
+        B = xc.shape[0]
+        out = out.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.head_dim)
+        xc = xc + out @ p["attn"]["wo"]
+        xn = layers.apply_norm(cfg.norm, p["lnx"], xc)
+        xc = xc + attn_lib.attend_cross(p["xattn"], cfg, xn, cross_kv)
+        xn = layers.apply_norm(cfg.norm, p["ln2"], xc)
+        xc = xc + layers.apply_mlp(p["mlp"], xn, cfg.activation)
+        pad = max_len - S
+        cache = {"self": {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                          "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))},
+                 "cross": cross_kv}
+        return xc, cache
+
+    x, caches = jax.lax.scan(body, x, params["dec"],
+                             unroll=True if ctx.scan_unroll else 1)
+    x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+    return _logits(params, cfg, x), caches
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, ctx: RunCtx):
+    """One decoder token against self cache + cross K/V."""
+    x = params["embed"][tokens]
+    x = x + layers.sinusoidal_embed(pos + jnp.arange(1), cfg.d_model, x.dtype)
+
+    def body(xc, scanned):
+        p, self_c, cross_c = scanned
+        xc, new_c = _dec_block(p, cfg, xc, None, cross_c, ctx,
+                               self_cache=self_c, pos=pos)
+        return xc, new_c
+
+    x, new_self = jax.lax.scan(body, x,
+                               (params["dec"], cache["self"], cache["cross"]),
+                               unroll=True if ctx.scan_unroll else 1)
+    x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+    new_cache = {"self": new_self, "cross": cache["cross"]}
+    return _logits(params, cfg, x)[:, 0], new_cache

@@ -1,0 +1,111 @@
+"""Unified model API: config -> init / loss / prefill / decode + input specs.
+
+``input_specs(cfg, cell)`` returns ShapeDtypeStruct stand-ins for every
+model input of a dry-run cell (weak-type-correct, shardable, no device
+allocation) — the multimodal frontends (whisper mel-conv, qwen2-vl ViT)
+are stubs that specify precomputed frame/patch embeddings, per the
+assignment.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import encdec, transformer
+from repro.models.transformer import RunCtx
+
+
+class Model:
+    """Thin functional wrapper selecting the decoder-only or enc-dec path."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- parameters -----------------------------------------------------
+
+    def init(self, key):
+        if self.cfg.enc_dec:
+            return encdec.init_encdec(key, self.cfg)
+        return transformer.init_lm(key, self.cfg)
+
+    def param_count(self, params) -> int:
+        return sum(int(x.size) for x in jax.tree.leaves(params))
+
+    # -- training -------------------------------------------------------
+
+    def loss_fn(self, params, batch, ctx: RunCtx):
+        if self.cfg.enc_dec:
+            return encdec.loss_fn(params, self.cfg, batch, ctx)
+        return transformer.loss_fn(params, self.cfg, batch, ctx)
+
+    # -- serving --------------------------------------------------------
+
+    def prefill(self, params, batch, ctx: RunCtx, max_len=None):
+        if self.cfg.enc_dec:
+            return encdec.prefill(params, self.cfg, batch["tokens"],
+                                  batch["frames"], ctx, max_len=max_len)
+        return transformer.prefill(params, self.cfg, batch["tokens"], ctx,
+                                   max_len=max_len,
+                                   visual_embeds=batch.get("visual_embeds"),
+                                   mrope_positions=batch.get("mrope_positions"))
+
+    def init_cache(self, batch: int, max_len: int):
+        if self.cfg.enc_dec:
+            return encdec.init_cache(self.cfg, batch, max_len)
+        return transformer.init_cache(self.cfg, batch, max_len)
+
+    def decode_step(self, params, cache, tokens, pos, ctx: RunCtx,
+                    mrope_positions=None):
+        if self.cfg.enc_dec:
+            return encdec.decode_step(params, self.cfg, cache, tokens, pos,
+                                      ctx)
+        return transformer.decode_step(params, self.cfg, cache, tokens, pos,
+                                       ctx, mrope_positions=mrope_positions)
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStructs; nothing allocated)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict[str, Any]:
+    """Model inputs for one dry-run cell, as ShapeDtypeStructs."""
+    B, S = cell.global_batch, cell.seq_len
+    d = cfg.d_model
+    if cell.kind == "train":
+        batch = {"tokens": _sds((B, S), jnp.int32),
+                 "targets": _sds((B, S), jnp.int32)}
+        if cfg.enc_dec:
+            batch["frames"] = _sds((B, cfg.encoder_len, d), cfg.dtype)
+        if cfg.visual_prefix:
+            batch["visual_embeds"] = _sds((B, cfg.visual_prefix, d), cfg.dtype)
+        if cfg.rope_style == "mrope":
+            batch["mrope_positions"] = _sds((3, B, S), jnp.int32)
+        return batch
+    if cell.kind == "prefill":
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.enc_dec:
+            batch["frames"] = _sds((B, cfg.encoder_len, d), cfg.dtype)
+        if cfg.visual_prefix:
+            batch["visual_embeds"] = _sds((B, cfg.visual_prefix, d), cfg.dtype)
+        if cfg.rope_style == "mrope":
+            batch["mrope_positions"] = _sds((3, B, S), jnp.int32)
+        return batch
+    if cell.kind == "decode":
+        batch = {"tokens": _sds((B, 1), jnp.int32),
+                 "pos": _sds((), jnp.int32)}
+        if cfg.rope_style == "mrope":
+            batch["mrope_positions"] = _sds((3, B, 1), jnp.int32)
+        cache = jax.eval_shape(
+            lambda: Model(cfg).init_cache(B, S))
+        batch["cache"] = cache
+        return batch
+    raise ValueError(cell.kind)

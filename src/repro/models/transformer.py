@@ -1,0 +1,532 @@
+"""LM assembly: heterogeneous block stacks with scan-over-layers.
+
+Layers are grouped into repeating *pattern periods* (e.g. recurrentgemma's
+(rglru, rglru, local)) and each group is a lax.scan over stacked params —
+HLO stays O(1) in depth, which keeps the 61-layer kimi-k2 dry-run
+compilable. A trailing partial period becomes a count-1 group.
+
+Block kinds: attn (optional SWA), local (windowed attn), mlstm, slstm,
+rglru. Every kind supports three phases with one param set:
+  forward  (train)            — full sequence, no cache
+  prefill                     — full sequence, returns cache
+  decode                      — one token + cache
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers, moe, ssm
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class RunCtx:
+    """Static per-call context (jit-static; hashable)."""
+
+    kernel_mode: str = "auto"       # kernels/ops dispatch mode
+    causal: bool = True
+    remat: str = "none"             # none | full
+    shard: Any = None               # launch.sharding.ShardCtx or None
+    moe_sharded: bool = False
+    # Unroll layer/chunk scans. Used by the dry-run's shallow cost
+    # variants: XLA cost_analysis ignores while-loop trip counts, so
+    # FLOPs are only countable from unrolled bodies.
+    scan_unroll: bool = False
+    # §Perf knobs (hillclimbed; see EXPERIMENTS.md):
+    ce_chunk: int = 0          # >0: scan CE over seq chunks (no full logits)
+    moe_mode: str = "gather"   # 'gather' (FSDP weight gather) | 'partial'
+    decode_seq_shard: bool = False  # flash-decoding LSE combine over tp
+    # Residual-stream constraint after every block:
+    #   'none'  — GSPMD chooses; observed: it DELAYS the row-parallel
+    #             reduction into the next norm's f32 upcast, so the
+    #             activation all-reduce moves f32 (2x traffic);
+    #   'batch' — constrain to (batch-sharded, replicated): forces the
+    #             reduce on the bf16 tensor;
+    #   'seq'   — Megatron-SP: additionally shard the sequence over tp
+    #             between blocks (reduce-scatter + all-gather schedule,
+    #             residual memory / |tp|).
+    residual_spec: str = "none"
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ModelConfig, kind: str, dtype):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": layers.init_norm(cfg.norm, cfg.d_model, dtype)}
+    if kind in ("attn", "local"):
+        p["attn"] = attn_lib.init_attention(ks[0], cfg, dtype)
+        p["ln2"] = layers.init_norm(cfg.norm, cfg.d_model, dtype)
+        if cfg.is_moe:
+            p["moe"] = moe.init_moe(ks[1], cfg, dtype)
+        elif cfg.d_ff > 0:
+            p["mlp"] = layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype,
+                                       gated=cfg.gated_mlp)
+    elif kind == "rglru":
+        p["rec"] = ssm.init_rglru_block(ks[0], cfg, dtype)
+        if cfg.d_ff > 0:
+            p["ln2"] = layers.init_norm(cfg.norm, cfg.d_model, dtype)
+            p["mlp"] = layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype,
+                                       gated=cfg.gated_mlp)
+    elif kind == "mlstm":
+        p["mix"] = ssm.init_mlstm_block(ks[0], cfg, dtype)
+    elif kind == "slstm":
+        p["mix"] = ssm.init_slstm_block(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _window_for(cfg, kind):
+    if kind == "local":
+        return cfg.local_window
+    return cfg.sliding_window
+
+
+def _ffn_part(p, cfg, x, ctx):
+    """Post-mixing FFN/MoE with pre-norm + residual. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        xn = layers.apply_norm(cfg.norm, p["ln2"], x)
+        if ctx.moe_sharded and ctx.shard is not None:
+            delta, aux = moe.apply_moe_sharded(p["moe"], cfg, xn, ctx.shard,
+                                               mode=ctx.moe_mode)
+        else:
+            delta, aux = moe.apply_moe(p["moe"], cfg, xn)
+        x = x + delta
+    elif "mlp" in p:
+        xn = layers.apply_norm(cfg.norm, p["ln2"], x)
+        x = x + layers.apply_mlp(p["mlp"], xn, cfg.activation)
+    return x, aux
+
+
+def apply_block(p, cfg: ModelConfig, kind: str, x, positions, ctx: RunCtx,
+                mrope_positions=None, with_cache: bool = False,
+                cache_len: Optional[int] = None):
+    """Full-sequence block. Returns (x, aux, cache-or-None)."""
+    xn = layers.apply_norm(cfg.norm, p["ln1"], x)
+    cache = None
+    if kind in ("attn", "local"):
+        window = _window_for(cfg, kind)
+        if with_cache:
+            out, cache = _attend_with_cache(p["attn"], cfg, xn, positions,
+                                            window, ctx, mrope_positions,
+                                            cache_len)
+        else:
+            out = attn_lib.attend(p["attn"], cfg, xn, positions,
+                                  window=window, causal=ctx.causal,
+                                  mrope_positions=mrope_positions,
+                                  kernel_mode=ctx.kernel_mode)
+        x = _constrain_residual(x + out, ctx)
+        x, aux = _ffn_part(p, cfg, x, ctx)
+        return x, aux, cache
+    if kind == "rglru":
+        if with_cache:
+            out, cache = _rglru_with_cache(p["rec"], cfg, xn, ctx)
+        else:
+            out = ssm.apply_rglru_block(p["rec"], cfg, xn,
+                                        kernel_mode=ctx.kernel_mode)
+        x = _constrain_residual(x + out, ctx)
+        x, aux = _ffn_part(p, cfg, x, ctx)
+        return x, aux, cache
+    if kind == "mlstm":
+        # NOTE: the mLSTM chunk scan stays a loop even in unrolled cost
+        # variants (fully unrolling 16 chunks x 7 layers x ~30 einsums
+        # under autodiff blew XLA compile time past 30 min). Cost effect:
+        # intra-chunk einsums are counted for 1 of N chunks, an ~11%
+        # undercount of the mLSTM *mixing* flops (projections dominate
+        # and are counted exactly) — recorded in EXPERIMENTS.md §Roofline.
+        if with_cache:
+            out, cache = _mlstm_with_cache(p["mix"], cfg, xn)
+        else:
+            out = ssm.apply_mlstm_block(p["mix"], cfg, xn,
+                                        chunk=cfg.mlstm_chunk)
+        return x + out, jnp.zeros((), jnp.float32), cache
+    if kind == "slstm":
+        if with_cache:
+            out, cache = _slstm_with_cache(p["mix"], cfg, xn)
+        else:
+            out = ssm.apply_slstm_block(p["mix"], cfg, xn)
+        return x + out, jnp.zeros((), jnp.float32), cache
+    raise ValueError(kind)
+
+
+# --- prefill variants that also emit a decode cache -------------------------
+
+
+def _attend_with_cache(params, cfg, xn, positions, window, ctx,
+                       mrope_positions, cache_len):
+    B, S, _ = xn.shape
+    q, k, v = attn_lib._project_qkv(params, cfg, xn, xn)
+    if cfg.rope_style == "mrope":
+        q = layers.apply_mrope(q, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+        k = layers.apply_mrope(k, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+    elif cfg.rope_style == "rope":
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    out = __import__("repro.kernels.ops", fromlist=["x"]).flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True, window=window,
+        mode=ctx.kernel_mode)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.head_dim)
+    out = out @ params["wo"]
+    size = min(window, cache_len or S) if window else (cache_len or S)
+    if window and S >= size:
+        ck, cv = k[:, -size:], v[:, -size:]
+        # ring-order the tail so slot (pos % size) stays consistent
+        roll = (S % size)
+        ck = jnp.roll(ck, roll, axis=1)
+        cv = jnp.roll(cv, roll, axis=1)
+    else:
+        pad = size - S
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return out, {"k": ck, "v": cv}
+
+
+def _rglru_with_cache(params, cfg, xn, ctx):
+    gate = jax.nn.gelu(xn @ params["w_gate"], approximate=True)
+    xb = xn @ params["w_x"]
+    y, conv_state = layers.apply_conv1d(params["conv"], xb)
+    a, b = ssm._rglru_coeffs(params, y)
+    h = __import__("repro.kernels.ops", fromlist=["x"]).rglru_scan(
+        a, b, mode=ctx.kernel_mode)
+    out = (gate * h.astype(xn.dtype)) @ params["w_out"]
+    return out, {"h": h[:, -1].astype(jnp.float32), "conv": conv_state}
+
+
+def _mlstm_with_cache(params, cfg, xn, unroll=False):
+    B, S, d = xn.shape
+    q, k, v, ig, fg, z, conv_state = ssm._mlstm_qkv_gates(params, cfg, xn)
+    h, (C, n, m) = ssm.mlstm_chunkwise(q, k, v, ig, fg,
+                                       chunk=min(cfg.mlstm_chunk, S),
+                                       unroll=unroll)
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, d)
+    h = layers.group_norm(h, params["gn_scale"], cfg.n_heads)
+    out = (h * jax.nn.silu(z)) @ params["w_down"]
+    return out, {"C": C, "n": n, "m": m, "conv": conv_state}
+
+
+def _slstm_with_cache(params, cfg, xn):
+    B, S, d = xn.shape
+    H = cfg.n_heads
+    hd = d // H
+    x_parts = xn @ params["w_zifo"]
+    state = (jnp.zeros((B, H, hd), jnp.float32),) * 3 + (
+        jnp.full((B, H, hd), -1e30, jnp.float32),)
+
+    def step(st, xp):
+        hidden, st = ssm._slstm_cell(params, cfg, xp, st)
+        return st, hidden
+
+    (h_f, c_f, n_f, m_f), hs = jax.lax.scan(step, state,
+                                            jnp.moveaxis(x_parts, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(xn.dtype)
+    h = layers.group_norm(h, params["gn_scale"], H)
+    out = layers.apply_mlp(params["ff"], h, "gelu")
+    return out, {"h": h_f, "c": c_f, "n": n_f, "m": m_f}
+
+
+# --- decode ------------------------------------------------------------------
+
+
+def apply_block_decode(p, cfg: ModelConfig, kind: str, x, cache, pos,
+                       ctx: RunCtx, mrope_positions=None):
+    """One-token block step. x: (B, 1, d). Returns (x, new_cache)."""
+    xn = layers.apply_norm(cfg.norm, p["ln1"], x)
+    if kind in ("attn", "local"):
+        window = _window_for(cfg, kind)
+        if (ctx.decode_seq_shard and ctx.shard is not None
+                and window is None):
+            out, cache = attn_lib.decode_attend_seqshard(
+                p["attn"], cfg, xn, cache, pos, ctx.shard,
+                mrope_positions=mrope_positions)
+        else:
+            out, cache = attn_lib.decode_attend(
+                p["attn"], cfg, xn, cache, pos, window=window,
+                mrope_positions=mrope_positions)
+        x = x + out
+        x, _ = _ffn_part(p, cfg, x, ctx)
+        return x, cache
+    if kind == "rglru":
+        out, cache = ssm.apply_rglru_decode(p["rec"], cfg, xn, cache)
+        x = x + out
+        x, _ = _ffn_part(p, cfg, x, ctx)
+        return x, cache
+    if kind == "mlstm":
+        out, cache = ssm.apply_mlstm_decode(p["mix"], cfg, xn, cache)
+        return x + out, cache
+    if kind == "slstm":
+        out, cache = ssm.apply_slstm_decode(p["mix"], cfg, xn, cache)
+        return x + out, cache
+    raise ValueError(kind)
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     dtype):
+    if kind in ("attn", "local"):
+        return attn_lib.init_kv_cache(cfg, batch, max_len, dtype,
+                                      window=_window_for(cfg, kind))
+    if kind == "rglru":
+        return ssm.init_rglru_cache(cfg, batch, dtype)
+    if kind == "mlstm":
+        return ssm.init_mlstm_cache(cfg, batch, dtype)
+    if kind == "slstm":
+        return ssm.init_slstm_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Groups (pattern periods) and the full LM
+# ---------------------------------------------------------------------------
+
+
+def layer_groups(cfg: ModelConfig):
+    """[(pattern tuple, repeat count), ...] covering all layers in order."""
+    p = tuple(cfg.block_pattern)
+    full, rem = divmod(cfg.n_layers, len(p))
+    groups = []
+    if full:
+        groups.append((p, full))
+    if rem:
+        groups.append((p[:rem], 1))
+    return groups
+
+
+def init_lm(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4 + cfg.n_layers)
+    params = {"embed": layers.truncated_normal_init(
+        ks[0], (cfg.vocab_size, cfg.d_model), dtype, stddev=1.0)}
+    gi = 0
+    ki = 1
+    groups = {}
+    for g, (pattern, count) in enumerate(layer_groups(cfg)):
+        gp = {}
+        for pi, kind in enumerate(pattern):
+            stacked = [init_block(ks[ki + i], cfg, kind, dtype)
+                       for i in range(count)]
+            ki += count
+            gp[f"p{pi}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *stacked)
+        groups[f"g{g}"] = gp
+    params["groups"] = groups
+    params["final_norm"] = layers.init_norm(cfg.norm, cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.truncated_normal_init(
+            ks[ki], (cfg.d_model, cfg.vocab_size), dtype)
+    return params
+
+
+def _constrain_residual(x, ctx):
+    if ctx.residual_spec == "none" or ctx.shard is None:
+        return x
+    from repro.launch import sharding as shlib
+    sh = ctx.shard
+    if ctx.residual_spec == "seq":
+        return shlib.constrain(x, sh, sh.batch_axes, sh.tp_axis, None)
+    return shlib.constrain(x, sh, sh.batch_axes, None, None)
+
+
+def _pattern_runs(pattern):
+    """[(kind, start_pos, run_len), ...] for consecutive equal kinds."""
+    runs = []
+    for pi, kind in enumerate(pattern):
+        if runs and runs[-1][0] == kind:
+            runs[-1][2] += 1
+        else:
+            runs.append([kind, pi, 1])
+    return [tuple(r) for r in runs]
+
+
+def _apply_groups(params, cfg, x, positions, ctx, mrope_positions=None,
+                  with_cache=False, cache_len=None):
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = {}
+    for g, (pattern, count) in enumerate(layer_groups(cfg)):
+        gp = params["groups"][f"g{g}"]
+        runs = _pattern_runs(pattern)
+
+        def body(carry, layer_params, runs=runs):
+            xc, aux = carry
+            layer_caches = {}
+            for kind, start, n in runs:
+                def one(xb, lp, kind=kind):
+                    return apply_block(lp, cfg, kind, xb, positions, ctx,
+                                       mrope_positions, with_cache,
+                                       cache_len)
+                if ctx.remat == "full":
+                    one = jax.checkpoint(one)
+                if n == 1:
+                    xc, a, cache = one(xc, layer_params[f"p{start}"])
+                    xc = _constrain_residual(xc, ctx)
+                    aux = aux + a
+                    if with_cache:
+                        layer_caches[f"p{start}"] = cache
+                else:
+                    # Runs of identical kinds become an INNER scan: the
+                    # period body stays O(1) in run length, keeping XLA
+                    # compile time tractable (xLSTM's m^7 s period body
+                    # compiled superlinearly when inlined 7x).
+                    stacked = jax.tree.map(
+                        lambda *xs: jnp.stack(xs),
+                        *[layer_params[f"p{start + j}"] for j in range(n)])
+
+                    def inner(c2, lp2, one=one):
+                        x2, a2 = c2
+                        x3, a3, cache = one(x2, lp2)
+                        x3 = _constrain_residual(x3, ctx)
+                        return (x3, a2 + a3), cache
+
+                    (xc, aux), run_caches = jax.lax.scan(
+                        inner, (xc, aux), stacked,
+                        unroll=True if ctx.scan_unroll else 1)
+                    if with_cache:
+                        for j in range(n):
+                            layer_caches[f"p{start + j}"] = jax.tree.map(
+                                lambda t, j=j: t[j], run_caches)
+            return (xc, aux), layer_caches if with_cache else None
+
+        (x, aux_total), group_caches = jax.lax.scan(
+            body, (x, aux_total), gp, unroll=True if ctx.scan_unroll else 1)
+        if with_cache:
+            caches[f"g{g}"] = group_caches
+    return x, aux_total, caches if with_cache else None
+
+
+def _logits(params, cfg, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (x @ head).astype(jnp.float32)
+
+
+def _embed(params, cfg, tokens, visual_embeds=None, pos_offset=0,
+           shard=None):
+    x = layers.vocab_parallel_lookup(params["embed"], tokens, shard)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if cfg.visual_prefix and visual_embeds is not None:
+        x = jnp.concatenate([visual_embeds.astype(x.dtype),
+                             x[:, cfg.visual_prefix:]], axis=1)
+    if cfg.pos_embed == "sinusoidal":
+        positions = pos_offset + jnp.arange(x.shape[1])
+        x = x + layers.sinusoidal_embed(positions, cfg.d_model, x.dtype)
+    return x
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens, ctx: RunCtx,
+                   visual_embeds=None, mrope_positions=None):
+    """tokens: (B, S) -> final-norm hidden (B, S, d), aux scalar."""
+    B, S = tokens.shape
+    x = _embed(params, cfg, tokens, visual_embeds, shard=ctx.shard)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, aux, _ = _apply_groups(params, cfg, x, positions, ctx,
+                              mrope_positions)
+    return layers.apply_norm(cfg.norm, params["final_norm"], x), aux
+
+
+def forward(params, cfg: ModelConfig, tokens, ctx: RunCtx,
+            visual_embeds=None, mrope_positions=None):
+    """tokens: (B, S) -> logits (B, S, V) f32, aux scalar."""
+    x, aux = forward_hidden(params, cfg, tokens, ctx, visual_embeds,
+                            mrope_positions)
+    return _logits(params, cfg, x), aux
+
+
+def _ce_from_hidden(params, cfg, x, tgt, ctx: RunCtx):
+    """Cross-entropy from hidden states; ctx.ce_chunk > 0 scans over
+    sequence chunks so the full (B, S, V) logits never materialize
+    (§Perf: at gemma's 256k vocab full train logits are 13 GB f32 per
+    device even vocab-sharded)."""
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    C = ctx.ce_chunk
+    B, S, _ = x.shape
+    if not C or S % C != 0 or S == C:
+        logits = (x @ head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+        return jnp.mean(logz - gold)
+
+    nc = S // C
+    xs = jnp.moveaxis(x.reshape(B, nc, C, x.shape[-1]), 1, 0)
+    ts = jnp.moveaxis(tgt.reshape(B, nc, C), 1, 0)
+
+    def body(acc, inp):
+        xc, tc = inp
+        logits = (xc @ head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ts))
+    return total / (B * S)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, ctx: RunCtx):
+    """batch: {tokens (B, S), targets (B, S)} -> (loss, metrics)."""
+    x, aux = forward_hidden(params, cfg, batch["tokens"], ctx,
+                            batch.get("visual_embeds"),
+                            batch.get("mrope_positions"))
+    ce = _ce_from_hidden(params, cfg, x, batch["targets"], ctx)
+    loss = ce + cfg.moe_aux_coef * aux
+    return loss, {"ce": ce, "aux": aux, "loss": loss}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked decode caches mirroring the group structure."""
+    dtype = jnp.dtype(cfg.dtype)
+    caches = {}
+    for g, (pattern, count) in enumerate(layer_groups(cfg)):
+        gp = {}
+        for pi, kind in enumerate(pattern):
+            one = init_block_cache(cfg, kind, batch, max_len, dtype)
+            gp[f"p{pi}"] = jax.tree.map(
+                lambda t: jnp.broadcast_to(t[None], (count,) + t.shape), one)
+        caches[f"g{g}"] = gp
+    return caches
+
+
+def prefill(params, cfg: ModelConfig, tokens, ctx: RunCtx, max_len=None,
+            visual_embeds=None, mrope_positions=None):
+    """Prefill: logits for the full prompt + a decode cache at max_len."""
+    B, S = tokens.shape
+    x = _embed(params, cfg, tokens, visual_embeds, shard=ctx.shard)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, aux, caches = _apply_groups(params, cfg, x, positions, ctx,
+                                   mrope_positions, with_cache=True,
+                                   cache_len=max_len or S)
+    x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+    return _logits(params, cfg, x), caches
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, ctx: RunCtx,
+                mrope_positions=None):
+    """tokens: (B, 1) at position ``pos`` -> (logits (B, V), new cache)."""
+    x = _embed(params, cfg, tokens, pos_offset=pos, shard=ctx.shard)
+    new_caches = {}
+    for g, (pattern, count) in enumerate(layer_groups(cfg)):
+        gp = params["groups"][f"g{g}"]
+        gc = cache[f"g{g}"]
+
+        def body(xc, scanned, pattern=pattern):
+            layer_params, layer_cache = scanned
+            new_lc = {}
+            for pi, kind in enumerate(pattern):
+                xc, nc = apply_block_decode(layer_params[f"p{pi}"], cfg, kind,
+                                            xc, layer_cache[f"p{pi}"], pos,
+                                            ctx, mrope_positions)
+                new_lc[f"p{pi}"] = nc
+            return xc, new_lc
+
+        x, new_gc = jax.lax.scan(body, x, (gp, gc),
+                                 unroll=True if ctx.scan_unroll else 1)
+        new_caches[f"g{g}"] = new_gc
+    x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+    return _logits(params, cfg, x)[:, 0], new_caches

@@ -1,0 +1,55 @@
+"""Gradient compression for the slow (pod / C2C-analogue) axis.
+
+EPAC's C2C link is 25 GB/s against 64 GB/s NoC ports — cross-pod traffic
+is the scarce resource, exactly as on multi-pod TPU (DCN/pod links vs
+ICI). This module implements int8-quantized gradient all-reduce with
+error feedback (residual carried locally so compression error does not
+bias the descent direction), to be applied to the data-parallel gradient
+sum over the ``pod`` axis only.
+
+Usage is shard_map-based (manual DP): see launch/train.py
+``make_compressed_dp_allreduce`` and tests/test_grad_compression.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x):
+    """Symmetric per-tensor int8 quantization -> (q, scale)."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_residual(g, residual):
+    """Error feedback: quantize (g + residual), carry the new residual."""
+    target = g.astype(jnp.float32) + residual
+    q, scale = quantize_int8(target)
+    deq = dequantize_int8(q, scale)
+    return q, scale, target - deq
+
+
+def compressed_psum(g, residual, axis_name):
+    """int8 all-reduce with error feedback over ``axis_name``.
+
+    Inside shard_map: agree on ONE scale (pmax of local amax — summed
+    int8 payloads are only meaningful under a shared scale), quantize the
+    error-fed gradient with it, psum the int8 payload, dequantize. The
+    modeling win is the 4x smaller wire payload on the pod (C2C) tier.
+    """
+    target = g.astype(jnp.float32) + residual
+    amax = jax.lax.pmax(jnp.max(jnp.abs(target)), axis_name) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(target / scale), -127, 127).astype(jnp.int8)
+    new_residual = target - dequantize_int8(q, scale)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.int32), axis_name)
+    return dequantize_int8(total, scale), new_residual, n

@@ -1,0 +1,156 @@
+"""Optimizers: AdamW and Adafactor-lite, with VRP compensated accumulation.
+
+The VRP tie-in for training: at 1000-node scale, parameters are kept in
+bf16 for memory/bandwidth and the *accumulation* p += lr*delta loses low
+bits every step. EPAC's answer — dedicated extended-precision accumulation
+hardware — becomes **Kahan-compensated parameter updates**: a bf16
+compensation buffer per parameter recovers ~f32-master-quality updates at
+half the optimizer-state memory (2+2 vs 4+... bytes). Enabled with
+``kahan=True``; tests/test_optim.py shows bf16+Kahan tracks the f32 master
+run where plain bf16 diverges.
+
+All functions are pure pytree -> pytree; state mirrors param sharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"              # adamw | adafactor
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"     # m/v dtype (bfloat16 halves memory)
+    kahan: bool = False              # compensated parameter accumulation
+    grad_accum: int = 1              # microbatch accumulation steps
+    accum_dtype: str = "float32"     # microbatch grad accumulator dtype
+    # 'vrp' computes the global grad norm with compensated reduction.
+    norm_tile: str = "vec"
+
+
+def init_opt_state(params, cfg: OptConfig):
+    sd = jnp.dtype(cfg.state_dtype)
+    zeros_like = lambda p: jnp.zeros(p.shape, sd)
+    state = {"step": jnp.zeros((), jnp.int32)}
+    if cfg.kind == "adamw":
+        state["m"] = jax.tree.map(zeros_like, params)
+        state["v"] = jax.tree.map(zeros_like, params)
+    elif cfg.kind == "adafactor":
+        def fact(p):
+            if p.ndim >= 2:
+                return {"row": jnp.zeros(p.shape[:-1], sd),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], sd)}
+            return {"v": jnp.zeros(p.shape, sd)}
+        state["fac"] = jax.tree.map(fact, params)
+    else:
+        raise ValueError(cfg.kind)
+    if cfg.kahan:
+        state["comp"] = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+    return state
+
+
+def global_norm(tree, tile: str = "vec"):
+    """Global L2 norm; 'vrp' uses compensated (double-word) accumulation."""
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    if tile == "vrp":
+        from repro.kernels import ops as kops
+        total = kops.vrp_sum(jnp.stack(leaves))
+        return jnp.sqrt(total[0] + total[1])
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float, tile: str = "vec"):
+    norm = global_norm(grads, tile)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def _kahan_add(p, delta, comp):
+    """p + delta with compensation carried in ``comp`` (same dtype as p)."""
+    pf = p.astype(jnp.float32)
+    y = delta - comp.astype(jnp.float32)
+    t = (pf + y).astype(p.dtype)
+    new_comp = ((t.astype(jnp.float32) - pf) - y).astype(p.dtype)
+    return t, new_comp
+
+
+def apply_updates(params, grads, state, cfg: OptConfig, lr):
+    """One optimizer step. Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip, cfg.norm_tile)
+    step = state["step"] + 1
+    new_state = {"step": step}
+    sd = jnp.dtype(cfg.state_dtype)
+
+    if cfg.kind == "adamw":
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - cfg.b1 ** t
+        bc2 = 1.0 - cfg.b2 ** t
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            mf = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+            vf = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+            delta = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            return -lr * delta, mf.astype(sd), vf.astype(sd)
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        deltas = tdef.unflatten([o[0] for o in out])
+        new_state["m"] = tdef.unflatten([o[1] for o in out])
+        new_state["v"] = tdef.unflatten([o[2] for o in out])
+    else:  # adafactor (factored second moment; memory ~ O(n+m) per matrix)
+        t = step.astype(jnp.float32)
+        beta2 = 1.0 - t ** -0.8
+
+        def upd_fac(p, g, f):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + 1e-30
+            if p.ndim >= 2:
+                row = beta2 * f["row"].astype(jnp.float32) + (1 - beta2) * jnp.mean(g2, -1)
+                col = beta2 * f["col"].astype(jnp.float32) + (1 - beta2) * jnp.mean(g2, -2)
+                rm = jnp.mean(row, -1, keepdims=True)
+                vhat = (row / (rm + 1e-30))[..., None] * col[..., None, :]
+                newf = {"row": row.astype(sd), "col": col.astype(sd)}
+            else:
+                vhat = beta2 * f["v"].astype(jnp.float32) + (1 - beta2) * g2
+                newf = {"v": vhat.astype(sd)}
+            delta = gf / (jnp.sqrt(vhat) + 1e-30)
+            # update clipping (Adafactor's d=1.0 RMS rule)
+            rms = jnp.sqrt(jnp.mean(delta * delta) + 1e-30)
+            delta = delta / jnp.maximum(1.0, rms)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            return -lr * delta, newf
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_f = tdef.flatten_up_to(state["fac"])
+        out = [upd_fac(p, g, f) for p, g, f in zip(flat_p, flat_g, flat_f)]
+        deltas = tdef.unflatten([o[0] for o in out])
+        new_state["fac"] = tdef.unflatten([o[1] for o in out])
+
+    if cfg.kahan:
+        pairs = jax.tree.map(_kahan_add, params, deltas, state["comp"])
+        new_params = jax.tree.map(lambda pr: pr[0], pairs,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_state["comp"] = jax.tree.map(lambda pr: pr[1], pairs,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+    else:
+        new_params = jax.tree.map(
+            lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype),
+            params, deltas)
+    return new_params, new_state, {"grad_norm": gnorm}

@@ -1,0 +1,178 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+collective_bytes is NOT in cost_analysis — we parse the post-SPMD HLO
+(``compiled.as_text()``) and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, applying
+ring-algorithm factors with the group size parsed from replica_groups.
+Axis attribution (pod tier vs ICI tier) follows group *stride* against
+the mesh shape: groups whose members differ in the leading (pod) mesh
+coordinate are charged to the slow tier.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+from repro.roofline.hw import V5E, HwSpec
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=(?P<res>.*?)"
+    r"(?P<kind>all-reduce|all-gather|reduce-scatter|all-to-all"
+    r"|collective-permute)"
+    r"(?:-start)?\(", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"\b(pred|[a-z]+[0-9]+(?:e[0-9]+m[0-9]+(?:fn)?)?)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    ops: dict                   # kind -> count
+    operand_bytes: dict         # kind -> total operand bytes (per device)
+    wire_bytes: dict            # kind -> ring-model bytes over links
+    pod_wire_bytes: float       # portion attributed to the pod tier
+    total_operand_bytes: float
+    total_wire_bytes: float
+
+
+def _wire_from_result(kind: str, result_bytes: float, group: int) -> float:
+    """Ring-model bytes over links per device, from the RESULT buffer size.
+
+    Post-optimization HLO prints operands as bare ids, so sizes come from
+    the result shape; per-kind algebra recovers the ring traffic:
+      all-reduce:        result == operand; 2(g-1)/g x operand
+      all-gather:        operand = result/g; (g-1) x operand = (g-1)/g x res
+      reduce-scatter:    operand = result*g; (g-1)/g x operand = (g-1) x res
+      all-to-all:        operand == result; (g-1)/g x operand
+      collective-permute: 1 x result
+    """
+    if group <= 1:
+        return 0.0
+    g = group
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g * result_bytes
+    if kind == "all-gather":
+        return (g - 1) / g * result_bytes
+    if kind == "reduce-scatter":
+        return float(g - 1) * result_bytes
+    if kind == "all-to-all":
+        return (g - 1) / g * result_bytes
+    if kind == "collective-permute":
+        return result_bytes
+    return result_bytes
+
+
+def _operand_from_result(kind: str, result_bytes: float, group: int) -> float:
+    if kind == "all-gather":
+        return result_bytes / max(group, 1)
+    if kind == "reduce-scatter":
+        return result_bytes * max(group, 1)
+    return result_bytes
+
+
+def parse_collectives(hlo_text: str, pod_size: Optional[int] = None,
+                      n_devices: Optional[int] = None) -> CollectiveStats:
+    """Scan post-optimization HLO for collectives.
+
+    ``pod_size`` = number of devices per pod (devices/pod count); a
+    replica group that spans across pod boundaries (member ids in
+    different pods) gets its wire bytes charged to the pod tier.
+    """
+    ops, obytes, wbytes = {}, {}, {}
+    pod_wire = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group("kind").lower()
+        shapes = _SHAPE_RE.findall(m.group("res"))
+        result_bytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        spans_pod = False
+        g = _GROUPS_RE.search(line)
+        if g:
+            members = [int(x) for x in g.group(1).split(",")]
+            group = len(members)
+            if pod_size:
+                spans_pod = len({mm // pod_size for mm in members}) > 1
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                # iota format [G, S] <= [d0, d1, ...] T(perm): decode exactly.
+                G, S = int(gi.group(1)), int(gi.group(2))
+                dims = [int(x) for x in gi.group(3).split(",")]
+                import numpy as _np
+                ids = _np.arange(int(_np.prod(dims))).reshape(dims)
+                if gi.group(4):
+                    perm = [int(x) for x in gi.group(4).split(",")]
+                    ids = ids.transpose(perm)
+                groups = ids.reshape(G, S)
+                group = S
+                if pod_size:
+                    pods = groups // pod_size
+                    spans_pod = bool((pods != pods[:, :1]).any())
+            else:
+                group = n_devices or 1
+        ops[kind] = ops.get(kind, 0) + 1
+        obytes[kind] = obytes.get(kind, 0) + _operand_from_result(
+            kind, result_bytes, group)
+        wire = _wire_from_result(kind, result_bytes, group)
+        wbytes[kind] = wbytes.get(kind, 0) + wire
+        if spans_pod:
+            pod_wire += wire
+    return CollectiveStats(
+        ops=ops, operand_bytes=obytes, wire_bytes=wbytes,
+        pod_wire_bytes=pod_wire,
+        total_operand_bytes=float(sum(obytes.values())),
+        total_wire_bytes=float(sum(wbytes.values())))
+
+
+# ---------------------------------------------------------------------------
+# Roofline assembly
+# ---------------------------------------------------------------------------
+
+
+def model_flops(cfg, cell) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) — N excl. embeddings."""
+    from repro.launch.params import active_param_count
+
+    n_active = active_param_count(cfg)
+    tokens = cell.seq_len * cell.global_batch if cell.kind == "train" else (
+        cell.seq_len * cell.global_batch if cell.kind == "prefill"
+        else cell.global_batch)
+    mult = 6.0 if cell.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def roofline_terms(flops_per_device: float, hbm_bytes_per_device: float,
+                   coll: CollectiveStats, hw: HwSpec = V5E) -> dict:
+    ici_wire = coll.total_wire_bytes - coll.pod_wire_bytes
+    t_compute = flops_per_device / hw.peak_flops_bf16
+    t_memory = hbm_bytes_per_device / hw.hbm_bw
+    t_coll = ici_wire / hw.ici_bw + coll.pod_wire_bytes / hw.pod_bw
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return {**terms,
+            "dominant": dominant,
+            "step_time_lower_bound_s": bound,
+            "roofline_fraction": (t_compute / bound) if bound > 0 else 0.0}

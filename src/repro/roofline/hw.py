@@ -1,0 +1,35 @@
+"""Hardware constants for the roofline target (TPU v5e) + EPAC references.
+
+Terms (per §Roofline of the task):
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = Σ collective_bytes_per_device x algo_factor / link_bw
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HwSpec:
+    name: str
+    peak_flops_bf16: float      # per chip
+    hbm_bw: float               # bytes/s per chip
+    ici_bw: float               # bytes/s per link (on-pod axes)
+    pod_bw: float               # bytes/s pod-to-pod tier
+    hbm_bytes: float            # capacity per chip
+
+
+V5E = HwSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    pod_bw=25e9,
+    hbm_bytes=16e9,
+)
+
+# EPAC's own fabric numbers (§4), used by benchmarks/bench_noc.py.
+EPAC_NOC_PORT_BW = 64e9
+EPAC_C2C_BW = 25e9

@@ -1,0 +1,110 @@
+"""Assemble EXPERIMENTS.md §Dry-run / §Roofline tables from the per-cell
+JSON artifacts written by launch/dryrun.py.
+
+Run: PYTHONPATH=src python -m repro.roofline.report experiments/dryrun
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load_all(dirpath: str):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def _fmt_bytes(n):
+    if n is None:
+        return "-"
+    return f"{n / 1e9:.2f}"
+
+
+def roofline_table(cells, mesh="single") -> str:
+    rows = ["| arch | cell | compute_s | memory_s | collective_s | dominant "
+            "| frac | useful | fits16GB |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if c.get("mesh") != mesh:
+            continue
+        if c["status"] == "skipped":
+            rows.append(f"| {c['arch']} | {c['cell']} | — | — | — | skipped |"
+                        f" — | — | — |")
+            continue
+        if c["status"] != "ok":
+            rows.append(f"| {c['arch']} | {c['cell']} | ERROR | | | | | | |")
+            continue
+        r = c["roofline"]
+        m = c.get("memory_per_device") or {}
+        rows.append(
+            f"| {c['arch']} | {c['cell']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant'].replace('_s', '')} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{c.get('useful_flops_ratio') or 0:.2f} | "
+            f"{m.get('fits_16GB', '-')} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(cells) -> str:
+    rows = ["| arch | cell | mesh | status | params | args GB/dev | "
+            "temp GB/dev | flops/dev | wire GB/dev | pod GB/dev | colls |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if c["status"] == "skipped":
+            rows.append(f"| {c['arch']} | {c['cell']} | {c['mesh']} | "
+                        f"skipped (full-attn) | | | | | | | |")
+            continue
+        if c["status"] != "ok":
+            rows.append(f"| {c['arch']} | {c['cell']} | {c['mesh']} | ERROR: "
+                        f"{c.get('error', '')[:60]} | | | | | | | |")
+            continue
+        m = c.get("memory_per_device") or {}
+        coll = c["collectives"]
+        nops = sum(coll["ops"].values())
+        rows.append(
+            f"| {c['arch']} | {c['cell']} | {c['mesh']} | ok | "
+            f"{c['params_total'] / 1e9:.2f}B | "
+            f"{_fmt_bytes(m.get('arguments_bytes'))} | "
+            f"{_fmt_bytes(m.get('temp_bytes'))} | "
+            f"{c['cost_per_device']['flops']:.2e} | "
+            f"{coll['total_wire_bytes'] / 1e9:.2f} | "
+            f"{coll['pod_wire_bytes'] / 1e9:.2f} | {nops} |")
+    return "\n".join(rows)
+
+
+def summary(cells) -> dict:
+    ok = [c for c in cells if c["status"] == "ok"]
+    skipped = [c for c in cells if c["status"] == "skipped"]
+    err = [c for c in cells if c["status"] == "error"]
+    worst = sorted((c for c in ok if c["mesh"] == "single"),
+                   key=lambda c: c["roofline"]["roofline_fraction"])
+    coll_bound = [c for c in ok if c["mesh"] == "single"
+                  and c["roofline"]["dominant"] == "collective_s"]
+    coll_bound.sort(key=lambda c: -c["roofline"]["collective_s"])
+    return {"ok": len(ok), "skipped": len(skipped), "errors": len(err),
+            "worst_fraction": [(c["arch"], c["cell"],
+                                round(c["roofline"]["roofline_fraction"], 4))
+                               for c in worst[:5]],
+            "most_collective_bound": [
+                (c["arch"], c["cell"], round(c["roofline"]["collective_s"], 2))
+                for c in coll_bound[:5]]}
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    cells = load_all(d)
+    print("## Dry-run matrix\n")
+    print(dryrun_table(cells))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table(cells, "single"))
+    print("\n## Roofline (multi-pod)\n")
+    print(roofline_table(cells, "multi"))
+    print("\n## Summary\n")
+    print(json.dumps(summary(cells), indent=1))

@@ -1,0 +1,18 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
+real single CPU device; multi-device tests re-exec via subprocess."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    # f64 needed by VRP/solver tests; models pass explicit dtypes so this
+    # is safe globally.
+    import jax
+
+    jax.config.update("jax_enable_x64", True)

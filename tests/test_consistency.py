@@ -1,0 +1,106 @@
+"""Serving-correctness invariants: decode-with-cache == full forward,
+chunkwise == stepwise recurrences."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import encdec, ssm, transformer
+from repro.models.model import Model
+from repro.models.transformer import RunCtx
+
+CTX = RunCtx(kernel_mode="ref")
+
+
+def test_mlstm_chunkwise_equals_stepwise(rng):
+    B, H, S, hd = 2, 2, 33, 8          # deliberately non-multiple of chunk
+    q, k, v = (jnp.asarray(rng.normal(size=(B, H, S, hd)), jnp.float32)
+               for _ in range(3))
+    ig = jnp.asarray(rng.normal(size=(B, H, S)), jnp.float32)
+    fg = jnp.asarray(rng.normal(size=(B, H, S)) + 2, jnp.float32)
+    h_chunk, st_chunk = ssm.mlstm_chunkwise(q, k, v, ig, fg, chunk=8)
+    state = (jnp.zeros((B, H, hd, hd)), jnp.zeros((B, H, hd)),
+             jnp.full((B, H), -1e30))
+    hs = []
+    for t in range(S):
+        h_t, state = ssm.mlstm_step(q[:, :, t], k[:, :, t], v[:, :, t],
+                                    ig[:, :, t], fg[:, :, t], state)
+        hs.append(h_t)
+    h_step = jnp.stack(hs, axis=2)
+    np.testing.assert_allclose(np.asarray(h_chunk), np.asarray(h_step),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st_chunk[0]), np.asarray(state[0]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_mlstm_unroll_invariance(rng):
+    B, H, S, hd = 1, 2, 32, 8
+    q, k, v = (jnp.asarray(rng.normal(size=(B, H, S, hd)), jnp.float32)
+               for _ in range(3))
+    ig = jnp.asarray(rng.normal(size=(B, H, S)), jnp.float32)
+    fg = jnp.asarray(rng.normal(size=(B, H, S)) + 2, jnp.float32)
+    a, _ = ssm.mlstm_chunkwise(q, k, v, ig, fg, chunk=8, unroll=False)
+    b, _ = ssm.mlstm_chunkwise(q, k, v, ig, fg, chunk=8, unroll=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+@pytest.mark.parametrize("arch", ["yi_6b", "h2o_danube_3_4b", "olmo_1b",
+                                  "recurrentgemma_2b", "xlstm_1_3b",
+                                  "whisper_base", "gemma_7b"])
+def test_decode_matches_forward(arch, rng):
+    cfg = get_config(arch).smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + 1)))
+    batch = {"tokens": toks[:, :S]}
+    if cfg.enc_dec:
+        fr = jnp.asarray(rng.normal(size=(B, cfg.encoder_len, cfg.d_model)),
+                         jnp.float32)
+        batch["frames"] = fr
+        full_logits, _ = encdec.forward(params, cfg, toks, fr, CTX)
+    else:
+        full_logits, _ = transformer.forward(params, cfg, toks, CTX)
+    _, cache = model.prefill(params, batch, CTX, max_len=S + 4)
+    dec_logits, _ = model.decode_step(params, cache, toks[:, S:S + 1],
+                                      jnp.int32(S), CTX)
+    scale = float(jnp.max(jnp.abs(full_logits[:, S]))) + 1e-6
+    err = float(jnp.max(jnp.abs(dec_logits - full_logits[:, S]))) / scale
+    assert err < 1e-4, f"{arch}: decode/forward mismatch rel={err:.2e}"
+
+
+def test_moe_decode_matches_forward_with_capacity(rng):
+    cfg = dataclasses.replace(get_config("qwen3_moe_30b_a3b").smoke(),
+                              moe_capacity_factor=8.0)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + 1)))
+    full_logits, _ = transformer.forward(params, cfg, toks, CTX)
+    _, cache = model.prefill(params, {"tokens": toks[:, :S]}, CTX,
+                             max_len=S + 4)
+    dec_logits, _ = model.decode_step(params, cache, toks[:, S:S + 1],
+                                      jnp.int32(S), CTX)
+    err = float(jnp.max(jnp.abs(dec_logits - full_logits[:, S])))
+    assert err < 1e-4
+
+
+def test_sliding_window_decode_ring_buffer(rng):
+    """Danube SWA: decode past the window must match full forward."""
+    cfg = get_config("h2o_danube_3_4b").smoke()  # window 16
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 1, 24                                  # S > window
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + 1)))
+    full_logits, _ = transformer.forward(params, cfg, toks, CTX)
+    _, cache = model.prefill(params, {"tokens": toks[:, :S]}, CTX,
+                             max_len=S + 8)
+    dec_logits, _ = model.decode_step(params, cache, toks[:, S:S + 1],
+                                      jnp.int32(S), CTX)
+    scale = float(jnp.max(jnp.abs(full_logits[:, S]))) + 1e-6
+    err = float(jnp.max(jnp.abs(dec_logits - full_logits[:, S]))) / scale
+    assert err < 1e-4, f"ring-buffer decode mismatch rel={err:.2e}"

@@ -1,0 +1,52 @@
+"""Data pipeline: determinism, sharding, resumability, file source."""
+
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, FileTokens, SyntheticLM, make_source
+
+
+def test_batch_deterministic_per_step():
+    cfg = DataConfig(vocab_size=97, seq_len=16, global_batch=4, seed=3)
+    src = SyntheticLM(cfg)
+    a = src.batch_at(5)
+    b = src.batch_at(5)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    c = src.batch_at(6)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+
+
+def test_targets_shifted():
+    cfg = DataConfig(vocab_size=97, seq_len=16, global_batch=2)
+    b = SyntheticLM(cfg).batch_at(0)
+    # affine recurrence: target t == token t+1; check internal consistency
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["targets"][:, :-1]))
+
+
+def test_sharded_batches_partition_global():
+    cfg = DataConfig(vocab_size=31, seq_len=8, global_batch=8, seed=1)
+    src = SyntheticLM(cfg)
+    shards = [src.batch_at(2, shard=i, n_shards=4) for i in range(4)]
+    for s in shards:
+        assert s["tokens"].shape == (2, 8)
+    # different shards see different data
+    assert not np.array_equal(np.asarray(shards[0]["tokens"]),
+                              np.asarray(shards[1]["tokens"]))
+
+
+def test_file_tokens(tmp_path):
+    path = tmp_path / "toks.bin"
+    arr = (np.arange(10000) % 251).astype(np.uint16)
+    arr.tofile(path)
+    cfg = DataConfig(vocab_size=251, seq_len=16, global_batch=4,
+                     path=str(path))
+    src = make_source(cfg)
+    assert isinstance(src, FileTokens)
+    b0 = src.batch_at(0)
+    b0_again = src.batch_at(0)
+    np.testing.assert_array_equal(np.asarray(b0["tokens"]),
+                                  np.asarray(b0_again["tokens"]))
+    assert b0["tokens"].shape == (4, 16)
+    assert int(b0["tokens"].max()) < 251

@@ -1,0 +1,77 @@
+"""Optimizers: convergence, Kahan-compensated bf16 (the VRP training
+claim), adafactor memory shapes, clipping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (OptConfig, apply_updates, clip_by_global_norm,
+                         global_norm, init_opt_state)
+from repro.optim.schedule import warmup_cosine
+
+
+def _quadratic_run(opt_cfg, steps=60, dtype=jnp.float32, lr=0.1, dim=16):
+    """Minimize ||x - t||^2; returns final params."""
+    t = jnp.arange(dim, dtype=jnp.float32) / dim
+    params = {"x": jnp.zeros((dim,), dtype)}
+    state = init_opt_state(params, opt_cfg)
+    for _ in range(steps):
+        grads = {"x": (params["x"].astype(jnp.float32) - t).astype(dtype)}
+        params, state, _ = apply_updates(params, grads, state, opt_cfg, lr)
+    return params["x"].astype(jnp.float32), t
+
+
+@pytest.mark.parametrize("kind", ["adamw", "adafactor"])
+def test_optimizer_converges(kind):
+    cfg = OptConfig(kind=kind, weight_decay=0.0)
+    x, t = _quadratic_run(cfg)
+    assert float(jnp.mean(jnp.abs(x - t))) < 0.05
+
+
+def test_kahan_bf16_tracks_f32_master():
+    """VRP claim for training: compensated bf16 accumulation recovers the
+    f32-master trajectory where plain bf16 stalls on tiny updates."""
+    cfg_f32 = OptConfig(weight_decay=0.0)
+    cfg_bf16 = OptConfig(weight_decay=0.0, kahan=False)
+    cfg_kahan = OptConfig(weight_decay=0.0, kahan=True)
+    # small lr -> updates below bf16 ulp of the params
+    xf, t = _quadratic_run(cfg_f32, steps=400, lr=3e-3)
+    xb, _ = _quadratic_run(cfg_bf16, steps=400, lr=3e-3, dtype=jnp.bfloat16)
+    xk, _ = _quadratic_run(cfg_kahan, steps=400, lr=3e-3, dtype=jnp.bfloat16)
+    err_b = float(jnp.mean(jnp.abs(xb - xf)))
+    err_k = float(jnp.mean(jnp.abs(xk - xf)))
+    assert err_k < err_b / 2, (err_k, err_b)
+
+
+def test_global_norm_vrp_tile_matches_vec():
+    rng = np.random.default_rng(0)
+    tree = {"a": jnp.asarray(rng.normal(size=(64, 64)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=128), jnp.float32)}
+    nv = float(global_norm(tree, "vec"))
+    nr = float(global_norm(tree, "vrp"))
+    assert abs(nv - nr) / nv < 1e-5
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) > 100
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-3
+
+
+def test_adafactor_state_is_factored():
+    params = {"w": jnp.zeros((128, 256)), "b": jnp.zeros((256,))}
+    st = init_opt_state(params, OptConfig(kind="adafactor"))
+    assert st["fac"]["w"]["row"].shape == (128,)
+    assert st["fac"]["w"]["col"].shape == (256,)
+    assert st["fac"]["b"]["v"].shape == (256,)
+
+
+def test_warmup_cosine_schedule():
+    import numpy as np
+    s = warmup_cosine(jnp.arange(100), peak_lr=1.0, warmup_steps=10,
+                      total_steps=100)
+    s = np.asarray(s)
+    assert s[0] == 0.0 and abs(s[10] - 1.0) < 0.11
+    assert s[99] < 0.2 and (np.diff(s[:10]) > 0).all()

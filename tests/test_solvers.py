@@ -1,0 +1,88 @@
+"""VRP Krylov solvers: the paper's convergence claims, numerically."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import solvers, vrp
+from repro.core.precision import F64, VP128, VP256
+
+
+def test_cg_well_conditioned_all_precisions():
+    A = solvers.hilbert_like(32, cond=1e3, seed=0)
+    x_star = jnp.ones(32)
+    b = A @ x_star
+    for env in (F64, VP128):
+        res = solvers.cg(A, b, env, tol=1e-10, maxiter=200)
+        assert bool(res.converged)
+        np.testing.assert_allclose(np.asarray(res.x), np.asarray(x_star),
+                                   rtol=1e-6)
+
+
+def test_cg_extended_precision_converges_faster():
+    """Paper claim (§3.3, refs [19][20]): higher precision improves CG
+    convergence on ill-conditioned systems."""
+    A = solvers.hilbert(12)
+    b = A @ jnp.ones(12)
+    r64 = solvers.cg(A, b, F64, tol=1e-13, maxiter=400)
+    r128 = solvers.cg(A, b, VP128, tol=1e-13, maxiter=400)
+    assert bool(r128.converged)
+    assert int(r128.iterations) <= int(r64.iterations)
+
+
+def test_cg_extended_rhs_improves_solution():
+    """With the RHS in extended precision, CG converges in fewer
+    iterations and to a better solution than f64 (measured effect ~2x on
+    x-error at cond 1e6; the paper's "improves convergence" claim).
+
+    Design note (recorded in EXPERIMENTS.md): at cond >= 1e12 ALL
+    precisions stall identically — the Chebyshev rate, not rounding,
+    limits convergence; precision buys attainable accuracy and iteration
+    count at moderate conditioning, which is what this asserts.
+    """
+    n = 24
+    A = solvers.hilbert_like(n, cond=1e6, seed=1)
+    env = VP256
+    x_star = vrp.from_float(jnp.ones(n), env)
+    bE = vrp.tree_sum(vrp.mul(vrp.from_float(A, env),
+                              x_star[None], env), env, axis=1)
+    r64 = solvers.cg(A, vrp.to_float(bE), F64, tol=1e-24, maxiter=600)
+    rvp = solvers.cg(A, bE[:, :2], VP128, tol=1e-24, maxiter=600)
+    assert bool(rvp.converged)
+    assert int(rvp.iterations) <= int(r64.iterations)
+    err64 = float(jnp.max(jnp.abs(r64.x - 1.0)))
+    errvp = float(jnp.max(jnp.abs(rvp.x - 1.0)))
+    assert errvp <= err64 * 1.2
+
+
+def test_pcg_jacobi():
+    A = solvers.hilbert_like(24, cond=1e6, seed=3)
+    b = A @ jnp.ones(24)
+    res = solvers.pcg(A, b, VP128, tol=1e-11, maxiter=300)
+    assert bool(res.converged)
+    np.testing.assert_allclose(np.asarray(res.x), np.ones(24), rtol=1e-6)
+
+
+def test_bicgstab():
+    rng = np.random.default_rng(4)
+    n = 24
+    A = jnp.asarray(np.eye(n) * 4 + rng.normal(size=(n, n)) * 0.3)
+    x_star = jnp.asarray(rng.normal(size=n))
+    b = A @ x_star
+    res = solvers.bicgstab(A, b, VP128, tol=1e-11, maxiter=200)
+    assert bool(res.converged)
+    np.testing.assert_allclose(np.asarray(res.x), np.asarray(x_star),
+                               rtol=1e-7, atol=1e-8)
+
+
+def test_runtime_precision_no_recompile_of_user_code():
+    """Env-register semantics: same solver call site, K chosen at runtime."""
+    A = solvers.hilbert_like(16, cond=1e4, seed=1)
+    b = A @ jnp.ones(16)
+    iters = {}
+    for env in (F64, VP128, VP256):
+        res = solvers.cg(A, b, env, tol=1e-10, maxiter=300)
+        iters[env.K] = int(res.iterations)
+        assert bool(res.converged)
+    assert iters[2] <= iters[1] + 5  # more precision never much worse

@@ -1,0 +1,83 @@
+"""VEC strip-mining, uncore/NoC model, tile dispatch."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import noc
+from repro.core.tiles import DEFAULT_POLICY, STX_POLICY, TilePolicy, \
+    dispatch_matmul, dispatch_reduction
+from repro.core.vec import VecTimingModel, strip_mine, strip_reduce
+
+
+@given(st.integers(1, 300), st.integers(1, 64))
+@settings(max_examples=40, deadline=None)
+def test_strip_mine_vla_property(n, vl):
+    """Any length == direct computation (RVV no-tail-handling semantics)."""
+    x = jnp.arange(n, dtype=jnp.float32)
+    out = strip_mine(lambda v: v * 2 + 1, x, max_vl=vl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x * 2 + 1))
+
+
+def test_strip_reduce():
+    x = jnp.arange(100, dtype=jnp.float32)
+    total = strip_reduce(
+        lambda acc, strip, mask: acc + jnp.sum(jnp.where(mask, strip, 0)),
+        x, max_vl=16, init=jnp.float32(0))
+    assert float(total) == float(jnp.sum(x))
+
+
+def test_vpu_timing_model_paper_numbers():
+    """§3.1: 8 FUs x 8 elem/cycle -> 256-elem vop in 32 (+~3) cycles."""
+    m = VecTimingModel()
+    assert m.vop_cycles(256) == 32 + 3
+    assert m.vop_cycles(8) == 1 + 3
+    assert m.utilization(256) > m.utilization(64) > m.utilization(8)
+    # full-VL DP GFLOPS at 1 GHz: 256 elems * 2 flop / 35 cycles
+    assert abs(m.gflops(256) - 256 * 2 / 35) < 1e-9
+
+
+def test_noc_collective_model_paper_numbers():
+    """§4: ring all-reduce/all-gather against the EPAC C2C/NoC tiers."""
+    t_pod = noc.all_reduce_time(1e9, 2, "pod")
+    t_ici = noc.all_reduce_time(1e9, 2, "data")
+    assert t_pod == pytest.approx(1e9 / noc.V5E_FABRIC.pod_bw)
+    assert t_ici == pytest.approx(1e9 / noc.V5E_FABRIC.ici_bw)
+    assert noc.all_reduce_time(1e9, 1, "data") == 0.0
+    assert noc.all_gather_time(1e6, 16, "data") == pytest.approx(
+        15 * 1e6 / 50e9)
+    assert noc.EPAC_NOC["noc_port_bw_GBps_per_dir"] == 64.0
+    assert noc.EPAC_NOC["c2c_bw_GBps_per_dir"] == 25.0
+
+
+def test_l2_interleave():
+    assert noc.interleave(0, 4) == 0
+    assert noc.interleave(64, 4) == 1
+    assert noc.interleave(64 * 4, 4) == 0
+    assert noc.interleave(4096, 4, mode="block") == 1
+
+
+def test_tile_dispatch_agreement(rng):
+    x = jnp.asarray(rng.normal(size=(48, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)
+    vec_out = dispatch_matmul(x, w, DEFAULT_POLICY)
+    stx_out = dispatch_matmul(
+        x, w, TilePolicy(matmul="stx", interpret=True,
+                         stx_block_m=16, stx_block_n=16, stx_block_k=16))
+    np.testing.assert_allclose(np.asarray(vec_out), np.asarray(stx_out),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_vrp_reduction_tile(rng):
+    x = jnp.asarray(rng.normal(size=4096) * 1e4, jnp.float32)
+    vec = float(dispatch_reduction(x, DEFAULT_POLICY))
+    vrp = float(dispatch_reduction(
+        x, TilePolicy(reduction="vrp", vrp_env="vp128")))
+    exact = float(np.sum(np.asarray(x, np.float64)))
+    assert abs(vrp - exact) <= abs(vec - exact) + 1e-3
+
+
+def test_tile_policy_validation():
+    with pytest.raises(ValueError):
+        TilePolicy(matmul="gpu")

@@ -1,0 +1,121 @@
+"""VRP expansion arithmetic: exactness, accuracy, precision scaling."""
+
+from fractions import Fraction
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import vrp
+from repro.core.precision import F64, VP128, VP256, VP512, PrecisionEnv, get_env
+
+# EFT exactness holds for NORMAL floats; XLA:CPU (and real TPUs) flush
+# subnormals, so error terms below ~2^-1022 are lost — a documented
+# hardware limitation (DESIGN.md §2.4), same as on the silicon VRP whose
+# extended formats also bound the exponent (18 bits).
+finite = st.floats(min_value=-1e30, max_value=1e30, allow_nan=False,
+                   allow_infinity=False, allow_subnormal=False).filter(
+                       lambda v: v == 0 or abs(v) > 1e-100)
+
+
+@given(finite, finite)
+@settings(max_examples=200, deadline=None)
+def test_two_sum_exact(a, b):
+    s, e = vrp.two_sum(jnp.float64(a), jnp.float64(b))
+    assert Fraction(float(s)) + Fraction(float(e)) == Fraction(a) + Fraction(b)
+
+
+@given(finite, finite)
+@settings(max_examples=200, deadline=None)
+def test_two_prod_exact(a, b):
+    p, e = vrp.two_prod(jnp.float64(a), jnp.float64(b))
+    if np.isfinite(float(p)):
+        assert (Fraction(float(p)) + Fraction(float(e))
+                == Fraction(a) * Fraction(b))
+
+
+@given(st.lists(st.floats(min_value=-1e30, max_value=1e30, allow_nan=False,
+                          allow_infinity=False, allow_subnormal=False)
+                .filter(lambda v: v == 0 or abs(v) > 1e-100),
+                min_size=2, max_size=24))
+@settings(max_examples=100, deadline=None)
+def test_renormalize_preserves_exact_value(xs):
+    """EFT invariant: renorm never changes the exact sum when K >= M."""
+    t = jnp.array(xs)
+    out = vrp.renormalize(t, K=len(xs) + 2)
+    exact_in = sum(Fraction(float(x)) for x in xs)
+    exact_out = sum(Fraction(float(x)) for x in np.array(out))
+    assert exact_in == exact_out
+
+
+@pytest.mark.parametrize("env,bits", [(VP128, 100), (VP256, 200), (VP512, 400)])
+def test_dot_accuracy_scales_with_precision(env, bits):
+    """Cancellation-heavy dot: error must shrink ~2^-bits."""
+    rng = np.random.default_rng(0)
+    n = 2048
+    x = rng.normal(size=n) * 1e10
+    y = rng.normal(size=n)
+    x[::2] = -x[1::2] * (1 + 1e-16)
+    exact = sum(Fraction(float(a)) * Fraction(float(b)) for a, b in zip(x, y))
+    got = sum(Fraction(float(t)) for t in
+              np.array(vrp.dot(jnp.array(x), jnp.array(y), env)))
+    err = abs(got - exact)
+    scale = abs(exact) or Fraction(1)
+    assert err / scale < Fraction(2) ** -bits
+
+
+def test_mul_div_sqrt_roundtrip():
+    env = VP256
+    x = vrp.from_float(jnp.float64(3.14159265358979), env)
+    y = vrp.from_float(jnp.float64(2.71828182845905), env)
+    q = vrp.div(x, y, env)
+    back = vrp.mul(q, y, env)
+    resid = vrp.to_float(vrp.sub(back, x, env))
+    assert abs(float(resid)) < 1e-60
+    s = vrp.sqrt(x, env)
+    resid = vrp.to_float(vrp.sub(vrp.mul(s, s, env), x, env))
+    assert abs(float(resid)) < 1e-60
+
+
+def test_precision_env_presets():
+    assert VP512.significand_bits >= 512
+    assert VP128.significand_bits == 106
+    assert get_env("vp128") is VP128
+    with pytest.raises(ValueError):
+        PrecisionEnv(compute_terms=0)
+    with pytest.raises(ValueError):
+        PrecisionEnv(compute_terms=2, store_terms=3)
+
+
+def test_storage_vs_compute_format():
+    """The paper's memory-format/compute-format split."""
+    env = PrecisionEnv(compute_terms=4, store_terms=2)
+    st_env = env.storage()
+    assert st_env.K == 2
+    x = vrp.from_float(jnp.float64(1.0) / 3.0, env)
+    stored = x[..., :st_env.K]
+    assert stored.shape[-1] == 2
+
+
+def test_matvec_extended():
+    rng = np.random.default_rng(1)
+    A = rng.normal(size=(16, 16))
+    x = rng.normal(size=16)
+    y = vrp.matvec(jnp.array(A), vrp.from_float(jnp.array(x), VP128), VP128)
+    ref = A.astype(np.float64) @ x
+    assert np.allclose(np.array(vrp.to_float(y)), ref, rtol=1e-14)
+
+
+def test_f32_base_dtype():
+    """TPU-native extended precision: f32 pairs (~48 bits)."""
+    env = PrecisionEnv(compute_terms=2, base_dtype="float32")
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=512).astype(np.float32) * 1e4
+    y = rng.normal(size=512).astype(np.float32)
+    exact = float(np.dot(x.astype(np.float64), y.astype(np.float64)))
+    naive = float(jnp.dot(jnp.array(x), jnp.array(y)))
+    got = float(vrp.to_float(vrp.dot(jnp.array(x), jnp.array(y), env)
+                             .astype(jnp.float64)))
+    assert abs(got - exact) < abs(naive - exact) / 10 + 1e-6
