@@ -1,49 +1,86 @@
-"""Serving example: batched prefill + decode (host-device mode).
+"""Serving example: continuous batching over the paged KV cache.
 
-Trains nothing — loads (or random-inits) a smoke model, packs a ragged
-request batch VLA-style, prefases and decodes with the ring/linear KV
-caches, prints tokens/s. With --arch recurrentgemma_2b the decode path
-exercises the constant-size RG-LRU state instead of a growing KV cache.
+Loads (or random-inits) a smoke model, submits a stream of ragged
+requests with skewed output lengths, and drives the continuous-batching
+``Scheduler`` (launch/serve.py): requests are admitted into decode slots
+as earlier ones retire, KV cache blocks are recycled on the fly, and the
+jit'd decode step never recompiles. With --arch recurrentgemma_2b the
+decode path mixes constant-size RG-LRU state with windowed ring caches.
+
+Compare with the legacy lockstep batcher via --engine static.
 
 Run: PYTHONPATH=src python examples/serve_lm.py [--arch olmo_1b]
 """
 
 import argparse
+import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch.serve import ServeConfig, Server
+from repro.launch.serve import (Scheduler, SchedulerConfig, ServeConfig,
+                                Server)
 from repro.models.model import Model
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo_1b")
+    ap.add_argument("--engine", choices=("continuous", "static"),
+                    default="continuous")
     ap.add_argument("--n-new", type=int, default=24)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=10)
     args = ap.parse_args()
 
     cfg = get_config(args.arch).smoke()
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    server = Server(model, params, ServeConfig(batch_size=args.batch,
-                                               max_len=128))
     rng = np.random.default_rng(0)
-    prompts = [list(rng.integers(0, cfg.vocab_size,
-                                 int(rng.integers(4, 16))))
-               for _ in range(args.batch)]
-    print(f"arch={cfg.name}  {args.batch} ragged prompts "
-          f"(lens {[len(p) for p in prompts]})")
-    import time
+
+    if args.engine == "static":
+        server = Server(model, params, ServeConfig(batch_size=args.slots,
+                                                   max_len=128))
+        prompts = [list(rng.integers(0, cfg.vocab_size,
+                                     int(rng.integers(4, 16))))
+                   for _ in range(args.slots)]
+        print(f"arch={cfg.name}  {args.slots} ragged prompts "
+              f"(lens {[len(p) for p in prompts]})")
+        t0 = time.time()
+        outs = server.generate(prompts, args.n_new)
+        dt = time.time() - t0
+        print(f"decoded {args.n_new} x {args.slots} tokens in {dt:.2f}s "
+              f"({args.slots * args.n_new / dt:.1f} tok/s)")
+        for i, o in enumerate(outs):
+            print(f"  req{i}: {o[:10]}...")
+        return
+
+    sched = Scheduler(model, params,
+                      SchedulerConfig(num_slots=args.slots, block_size=16,
+                                      num_blocks=256, max_len=128))
+    for _ in range(args.requests):
+        prompt = list(rng.integers(0, cfg.vocab_size,
+                                   int(rng.integers(4, 16))))
+        # skewed output lengths: mostly short, a few long stragglers
+        max_new = int(rng.choice([4, 6, 8, args.n_new],
+                                 p=[0.4, 0.25, 0.2, 0.15]))
+        sched.submit(prompt, max_new)
+    print(f"arch={cfg.name}  {args.requests} requests into "
+          f"{args.slots} slots")
     t0 = time.time()
-    outs = server.generate(prompts, args.n_new)
+    done = sched.run()
     dt = time.time() - t0
-    print(f"decoded {args.n_new} x {args.batch} tokens in {dt:.2f}s "
-          f"({args.batch * args.n_new / dt:.1f} tok/s)")
-    for i, o in enumerate(outs):
-        print(f"  req{i}: {o[:10]}...")
+    total = sum(len(r.out) for r in done)
+    st = sched.stats()
+    print(f"decoded {total} tokens over {len(done)} reqs in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s)")
+    print(f"  mean active slots {st['mean_active_slots']:.2f}/"
+          f"{args.slots}, cache utilization "
+          f"{st['cache_utilization']:.0%}, blocks leaked "
+          f"{st['blocks_used']}")
+    for r in sorted(done, key=lambda r: r.uid)[:3]:
+        print(f"  req{r.uid}: {r.out[:10]}...")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,41 @@
+"""Version-skew shims for the pinned jax (0.4.x) vs newer APIs.
+
+Two renames bite this codebase:
+
+* ``jax.shard_map`` — promoted out of ``jax.experimental.shard_map`` in
+  newer jax; the experimental path is the one that exists at 0.4.x.
+* ``pltpu.CompilerParams`` — named ``TPUCompilerParams`` at 0.4.x.
+
+All repo code imports these from here so either jax generation works.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as _pltpu
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+if hasattr(_pltpu, "CompilerParams"):
+    TPUCompilerParams = _pltpu.CompilerParams
+else:  # jax <= 0.4.x
+    TPUCompilerParams = _pltpu.TPUCompilerParams
+
+if hasattr(jax.lax, "pvary"):
+    pvary = jax.lax.pvary
+else:  # jax <= 0.4.x: no manual-axis variance typing; identity is correct
+    def pvary(x, axis_name):
+        del axis_name
+        return x
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a single dict on newer jax but
+    a one-element list of dicts at 0.4.x."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost

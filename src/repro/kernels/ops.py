@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from . import ref as _ref
 from .flash_attention import flash_attention_pallas
+from .paged_attention import paged_decode_attention_pallas
 from .rglru_scan import rglru_scan_pallas
 from .stx_matmul import stx_matmul_pallas
 from .stx_stencil import stencil2d_pallas, stencil3d_pallas
@@ -117,6 +118,27 @@ def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
                                  scale=scale, kv_len=skv0, block_q=block_q,
                                  block_k=block_k, interpret=interp)
     return out[:, :, :sq0]
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_table, lengths, *,
+                           window=None, scale=None, mode="auto",
+                           interpret=False):
+    """Single-token decode attention over a block-paged KV pool.
+
+    q: (B, Hq, D); k_pool/v_pool: (NB, BS, Hkv, D); block_table:
+    (B, NBMAX) int32; lengths: (B,) int32 valid tokens per sequence
+    (including the current token). No padding pass is needed: the pool is
+    block-shaped by construction and raggedness is masked in-kernel.
+    """
+    use, interp = _use_pallas(mode)
+    interp = interp or interpret
+    if not use and not interp:
+        return _ref.paged_decode_attention(q, k_pool, v_pool, block_table,
+                                           lengths, window=window,
+                                           scale=scale)
+    return paged_decode_attention_pallas(q, k_pool, v_pool, block_table,
+                                         lengths, window=window, scale=scale,
+                                         interpret=interp)
 
 
 def _finalize_expansion(lanes):

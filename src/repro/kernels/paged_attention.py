@@ -1,0 +1,128 @@
+"""Paged (ragged) decode-attention kernel — block-pool KV gather on-chip.
+
+The serving engine's KV cache is a shared pool of fixed-size token blocks
+with a per-sequence block table (models/paged_kv.py) — the software
+analogue of EPAC's distributed L2 slices under programmable address
+interleaving: a sequence's logical positions are scattered over physical
+slices, and the *index map* (here the prefetched block table) is the
+hardware address-generation step.
+
+One grid step = one (sequence, logical block) pair; the kv axis is
+innermost-sequential and carries the online-softmax (m, l, acc) scratch,
+exactly like kernels/flash_attention.py. The block table and per-sequence
+lengths arrive via PrefetchScalarGridSpec so the BlockSpec index map can
+route each grid step's DMA to the right physical block — fully-masked
+blocks (past a sequence's length, or entirely outside its sliding window)
+are predicated off before touching the MXU.
+
+Ragged batches therefore cost O(sum(ceil(len_i / BS))) block fetches, not
+O(B * max_len) — the whole point of continuous batching.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .flash_attention import MASK_VALUE
+
+
+def _pa_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+               m_ref, l_ref, acc_ref, *, scale, window, block_size,
+               hkv, group, nb):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, MASK_VALUE)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    k_lo = i * block_size
+    needed = k_lo < length
+    if window is not None:
+        needed = jnp.logical_and(needed,
+                                 k_lo + block_size > length - window)
+
+    @pl.when(needed)
+    def _block():
+        hq = hkv * group
+        q = q_ref[0].astype(jnp.float32)                # (Hq, D)
+        k = k_ref[0].astype(jnp.float32)                # (BS, Hkv, D)
+        v = v_ref[0].astype(jnp.float32)
+        d = q.shape[-1]
+        qg = q.reshape(hkv, group, d)
+        kt = k.transpose(1, 0, 2)                       # (Hkv, BS, D)
+        vt = v.transpose(1, 0, 2)
+        s = jax.lax.dot_general(qg, kt, (((2,), (2,)), ((0,), (0,))),
+                                preferred_element_type=jnp.float32) * scale
+        s = s.reshape(hq, block_size)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32,
+                                               (hq, block_size), 1)
+        mask = kpos < length
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos >= length - window)
+        s = jnp.where(mask, s, MASK_VALUE)
+
+        m_prev = m_ref[...]                             # (Hq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        pg = p.reshape(hkv, group, block_size)
+        pv = jax.lax.dot_general(pg, vt, (((2,), (1,)), ((0,), (0,))),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv.reshape(hq, d)
+        m_ref[...] = m_new
+
+    @pl.when(i == nb - 1)
+    def _store():
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(q, k_pool, v_pool, block_table, lengths, *,
+                                  window=None, scale=None, interpret=False):
+    """q: (B, Hq, D); pools: (NB, BS, Hkv, D); block_table: (B, NBMAX);
+    lengths: (B,) valid tokens incl. the current one. -> (B, Hq, D)."""
+    B, Hq, D = q.shape
+    _, BS, Hkv, _ = k_pool.shape
+    group = Hq // Hkv
+    nbmax = block_table.shape[1]
+    scale = float(scale) if scale is not None else float(1.0 / np.sqrt(D))
+
+    def kv_map(b, i, bt, lens):
+        return (bt[b, i], 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, nbmax),
+        in_specs=[
+            pl.BlockSpec((1, Hq, D), lambda b, i, bt, lens: (b, 0, 0)),
+            pl.BlockSpec((1, BS, Hkv, D), kv_map),
+            pl.BlockSpec((1, BS, Hkv, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, D), lambda b, i, bt, lens: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hq, 1), jnp.float32),    # running max
+            pltpu.VMEM((Hq, 1), jnp.float32),    # running sum
+            pltpu.VMEM((Hq, D), jnp.float32),    # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_pa_kernel, scale=scale, window=window,
+                          block_size=BS, hkv=Hkv, group=group, nb=nbmax),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pool, v_pool)

@@ -107,6 +107,46 @@ def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
 
 
 # ---------------------------------------------------------------------------
+# Paged decode attention (block-pool KV cache)
+# ---------------------------------------------------------------------------
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_table, lengths, *,
+                           window=None, scale=None):
+    """Oracle single-token decode attention over a block-paged KV cache.
+
+    q: (B, Hq, D) — the query for the token at position ``lengths[b] - 1``.
+    k_pool, v_pool: (NB, BS, Hkv, D) — shared pool of BS-token blocks.
+    block_table: (B, NBMAX) int32 — per-sequence logical->physical block map
+    (entries past a sequence's last block may hold any in-range id).
+    lengths: (B,) int32 — valid tokens per sequence (including the current
+    token, whose K/V must already be written to the pool).
+    ``window`` restricts attention to the last ``window`` positions (SWA).
+    Returns (B, Hq, D) in q.dtype.
+    """
+    B, Hq, D = q.shape
+    _, BS, Hkv, _ = k_pool.shape
+    group = Hq // Hkv
+    scale = float(scale) if scale is not None else float(1.0 / np.sqrt(D))
+    S = block_table.shape[1] * BS
+    k = k_pool[block_table].reshape(B, S, Hkv, D)      # gather sequences
+    v = v_pool[block_table].reshape(B, S, Hkv, D)
+    kx = jnp.repeat(k.transpose(0, 2, 1, 3), group, axis=1)  # (B, Hq, S, D)
+    vx = jnp.repeat(v.transpose(0, 2, 1, 3), group, axis=1)
+    logits = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                        kx.astype(jnp.float32)) * scale
+    kpos = jnp.arange(S)[None, :]
+    valid = kpos < lengths[:, None]
+    if window is not None:
+        valid = valid & (kpos >= lengths[:, None] - window)
+    logits = jnp.where(valid[:, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.any(valid, -1)[:, None, None], probs, 0.0)
+    return jnp.einsum("bhs,bhsd->bhd", probs,
+                      vx.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # VRP compensated reductions (double-word = 2-term expansion)
 # ---------------------------------------------------------------------------
 

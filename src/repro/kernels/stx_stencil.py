@@ -23,6 +23,17 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def _halo_spec(block_shape, index_map):
+    """Element-indexed BlockSpec across jax generations: newer pallas
+    spells it per-dimension (`pl.Element`); 0.4.x spells it as an
+    ``Unblocked`` indexing mode on the whole spec."""
+    if hasattr(pl, "Element"):
+        return pl.BlockSpec(tuple(pl.Element(b) for b in block_shape),
+                            index_map)
+    return pl.BlockSpec(tuple(block_shape), index_map,
+                        indexing_mode=pl.unblocked)
+
+
 def _st2d_kernel(w_ref, x_ref, o_ref):
     xb = x_ref[...]  # (bm + 2, bn + 2) with halo
     acc = jnp.zeros_like(o_ref)
@@ -44,8 +55,8 @@ def stencil2d_pallas(x, weights, *, block_m=128, block_n=128, interpret=False):
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),  # weights (3, 3)
-            pl.BlockSpec((pl.Element(block_m + 2), pl.Element(block_n + 2)),
-                         lambda i, j: (i * block_m, j * block_n)),
+            _halo_spec((block_m + 2, block_n + 2),
+                       lambda i, j: (i * block_m, j * block_n)),
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
@@ -77,9 +88,9 @@ def stencil3d_pallas(x, weights, *, block_d=8, block_m=128, block_n=128,
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((pl.Element(block_d + 2), pl.Element(block_m + 2),
-                          pl.Element(block_n + 2)),
-                         lambda i, j, k: (i * block_d, j * block_m, k * block_n)),
+            _halo_spec((block_d + 2, block_m + 2, block_n + 2),
+                       lambda i, j, k: (i * block_d, j * block_m,
+                                        k * block_n)),
         ],
         out_specs=pl.BlockSpec((block_d, block_m, block_n),
                                lambda i, j, k: (i, j, k)),

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.compat import shard_map
 from repro.kernels import ops as kops
 from repro.models import layers
 
@@ -116,11 +117,26 @@ def init_kv_cache(cfg, batch: int, max_len: int, dtype, *, window=None):
 def decode_attend(params, cfg, x, cache, pos, *, window=None,
                   mrope_positions=None):
     """Single-token decode. x: (B, 1, d); pos: scalar int32 (same across
-    batch — contiguous decode). Returns (out, new_cache)."""
+    batch — contiguous decode). The scalar-pos special case of
+    ``decode_attend_batched``. Returns (out, new_cache)."""
+    posv = jnp.full((x.shape[0],), pos, jnp.int32)
+    return decode_attend_batched(params, cfg, x, cache, posv, window=window,
+                                 mrope_positions=mrope_positions)
+
+
+def decode_attend_batched(params, cfg, x, cache, pos, *, window=None,
+                          mrope_positions=None):
+    """Single-token decode with PER-SLOT positions (continuous batching).
+
+    x: (B, 1, d); pos: (B,) int32 — each slot's current position (the new
+    token's absolute position; equals that slot's cached length). Same
+    ring/linear cache layout as ``decode_attend``, but writes and validity
+    masks are per-row, so slots at different depths decode in one step.
+    """
     B = x.shape[0]
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q, k, v = _project_qkv(params, cfg, x, x)
-    posb = jnp.full((B, 1), pos, jnp.int32)
+    posb = pos[:, None].astype(jnp.int32)
     if cfg.rope_style == "mrope":
         q = layers.apply_mrope(q, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
         k = layers.apply_mrope(k, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
@@ -129,31 +145,70 @@ def decode_attend(params, cfg, x, cache, pos, *, window=None,
         k = layers.apply_rope(k, posb, cfg.rope_theta)
 
     size = cache["k"].shape[1]
-    slot = jnp.mod(pos, size) if window else pos
-    slot = jnp.asarray(slot, jnp.int32)
-    z = jnp.zeros((), jnp.int32)
-    ck = jax.lax.dynamic_update_slice(cache["k"], k, (z, slot, z, z))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v, (z, slot, z, z))
+    slot = jnp.mod(pos, size) if window else jnp.clip(pos, 0, size - 1)
+    bidx = jnp.arange(B)
+    ck = cache["k"].at[bidx, slot].set(k[:, 0])
+    cv = cache["v"].at[bidx, slot].set(v[:, 0])
 
-    # Validity mask over cache slots. For ring buffers (windowed layers)
-    # every slot is a held, in-window position once the buffer has wrapped;
-    # before wrapping only slots 0..pos are written. Linear caches mask
-    # future slots. RoPE is applied at write time, so held keys carry their
-    # absolute positions and ring order does not matter.
-    idx = jnp.arange(size)
-    valid = jnp.logical_or(idx <= pos, jnp.full((size,), pos + 1 >= size))
+    # Per-row validity over cache slots. For ring buffers (windowed
+    # layers) every slot is a held, in-window position once the buffer
+    # has wrapped; before wrapping only slots 0..pos are written. Linear
+    # caches mask future slots. RoPE is applied at write time, so held
+    # keys carry their absolute positions and ring order does not matter.
+    idx = jnp.arange(size)[None, :]
+    valid = idx <= pos[:, None]
+    if window:
+        valid = jnp.logical_or(valid, (pos[:, None] + 1) >= size)
 
-    qf = q.astype(jnp.float32).reshape(B, hq, hd)          # Sq = 1
-    kf = ck.astype(jnp.float32).transpose(0, 2, 1, 3)      # (B, hkv, size, hd)
+    qf = q.astype(jnp.float32).reshape(B, hq, hd)
+    kf = ck.astype(jnp.float32).transpose(0, 2, 1, 3)
     vf = cv.astype(jnp.float32).transpose(0, 2, 1, 3)
     group = hq // hkv
     qg = qf.reshape(B, hkv, group, hd)
     logits = jnp.einsum("bhgd,bhsd->bhgs", qg, kf) / jnp.sqrt(hd).astype(jnp.float32)
-    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgs,bhsd->bhgd", probs, vf)
     out = out.reshape(B, 1, hq * hd).astype(x.dtype)
     return out @ params["wo"], {"k": ck, "v": cv}
+
+
+def decode_attend_paged(params, cfg, x, pool, block_table, lengths, *,
+                        window=None, mrope_positions=None,
+                        kernel_mode="auto"):
+    """Single-token decode against a block-paged KV pool.
+
+    x: (B, 1, d); pool: {"k","v"} of (NB, BS, Hkv, D); block_table:
+    (B, NBMAX) int32; lengths: (B,) tokens already cached per slot — the
+    new token lands at position ``lengths[b]``, whose destination block
+    ``block_table[b, lengths[b] // BS]`` the scheduler must have allocated
+    (retired slots point at the reserved null block 0, making their writes
+    harmless). Returns (out, new_pool).
+    """
+    B = x.shape[0]
+    hq, hd = cfg.n_heads, cfg.head_dim
+    bs = pool["k"].shape[1]
+    q, k, v = _project_qkv(params, cfg, x, x)
+    posb = lengths[:, None].astype(jnp.int32)
+    if cfg.rope_style == "mrope":
+        q = layers.apply_mrope(q, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+        k = layers.apply_mrope(k, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+    elif cfg.rope_style == "rope":
+        q = layers.apply_rope(q, posb, cfg.rope_theta)
+        k = layers.apply_rope(k, posb, cfg.rope_theta)
+
+    bidx = jnp.arange(B)
+    logical = jnp.clip(lengths // bs, 0, block_table.shape[1] - 1)
+    phys = block_table[bidx, logical]
+    off = lengths % bs
+    kp = pool["k"].at[phys, off].set(k[:, 0])
+    vp = pool["v"].at[phys, off].set(v[:, 0])
+
+    out = kops.paged_decode_attention(
+        q.reshape(B, hq, hd), kp, vp, block_table, lengths + 1,
+        window=window, mode=kernel_mode)
+    out = out.reshape(B, 1, hq * hd).astype(x.dtype)
+    return out @ params["wo"], {"k": kp, "v": vp}
 
 
 def decode_attend_seqshard(params, cfg, x, cache, pos, shard,
@@ -223,7 +278,7 @@ def decode_attend_seqshard(params, cfg, x, cache, pos, shard,
         out = out.reshape(B_l, 1, hq * hd).astype(x.dtype)
         return out, ck, cv
 
-    out, ck, cv = jax.shard_map(
+    out, ck, cv = shard_map(
         local, mesh=mesh,
         in_specs=(P(dp, None, None, None), P(dp, None, None, None),
                   P(dp, None, None, None),

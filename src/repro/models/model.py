@@ -66,6 +66,24 @@ class Model:
         return transformer.decode_step(params, self.cfg, cache, tokens, pos,
                                        ctx, mrope_positions=mrope_positions)
 
+    # -- paged serving (continuous batching) ----------------------------
+
+    def init_paged_cache(self, layout):
+        if self.cfg.enc_dec:
+            raise NotImplementedError("paged serving is decoder-only")
+        return transformer.init_paged_cache(self.cfg, layout)
+
+    def pack_prefill_into_paged(self, layout, pools, dense_caches, slot,
+                                block_ids):
+        return transformer.pack_prefill_into_paged(
+            self.cfg, layout, pools, dense_caches, slot, block_ids)
+
+    def decode_step_paged(self, params, pools, block_table, lengths, tokens,
+                          ctx: RunCtx):
+        return transformer.decode_step_paged(params, self.cfg, pools,
+                                             block_table, lengths, tokens,
+                                             ctx)
+
 
 # ---------------------------------------------------------------------------
 # Dry-run input specs (ShapeDtypeStructs; nothing allocated)

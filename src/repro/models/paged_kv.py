@@ -1,0 +1,195 @@
+"""Paged KV cache: a shared pool of token blocks + per-sequence block tables.
+
+The software analogue of EPAC's distributed L2 under programmable address
+interleaving: physical storage is a pool of fixed-size blocks shared by
+all decode slots, and a per-sequence *block table* maps logical token
+positions to physical blocks. Sequences grow block-by-block and release
+blocks on retirement, so cache memory scales with ``sum(len_i)`` instead
+of ``num_slots * max_len``.
+
+Layout per full-attention layer stack (count = layers in the scan group):
+
+    k_pool, v_pool: (count, num_blocks, block_size, n_kv_heads, head_dim)
+
+All layers of a sequence share ONE block table (same logical->physical
+map, per-layer pools), the standard paged-attention arrangement.
+
+Physical block 0 is reserved as the *null block*: retired/empty slots
+point their table entries at it, so the shape-stable decode step can
+scatter their (discarded) K/V writes somewhere harmless and the kernel's
+prefetch index map never sees an out-of-range id. The allocator never
+hands block 0 to a live sequence.
+
+Device-side state is a pure pytree (functional updates under jit); the
+``BlockAllocator`` is host-side bookkeeping owned by the scheduler.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+
+NULL_BLOCK = 0
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    return -(-n_tokens // block_size)
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Static geometry of the paged cache (jit-static, hashable)."""
+
+    num_slots: int           # decode batch width B
+    num_blocks: int          # pool size incl. reserved null block 0
+    block_size: int          # tokens per block
+    max_len: int             # per-sequence position cap
+
+    def __post_init__(self):
+        assert self.num_blocks >= 2, "need >= 1 allocatable block + null"
+
+    @property
+    def max_blocks_per_seq(self) -> int:
+        return blocks_for(self.max_len, self.block_size)
+
+    @property
+    def usable_blocks(self) -> int:
+        return self.num_blocks - 1        # block 0 is the null block
+
+
+class BlockAllocator:
+    """Host-side free-list allocator over physical blocks 1..num_blocks-1.
+
+    Tracks ownership so double-frees and leaks are detectable (the
+    scheduler invariant tests rely on this)."""
+
+    def __init__(self, layout: PagedLayout):
+        self.layout = layout
+        self._free = list(range(layout.num_blocks - 1, 0, -1))  # pop -> 1,2,..
+        self._owned: set[int] = set()
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_count(self) -> int:
+        return len(self._owned)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise MemoryError(f"paged pool exhausted: want {n}, "
+                              f"free {len(self._free)}")
+        out = [self._free.pop() for _ in range(n)]
+        self._owned.update(out)
+        return out
+
+    def free(self, blocks: list[int]):
+        for b in blocks:
+            if b == NULL_BLOCK:
+                raise ValueError("freeing the reserved null block")
+            if b not in self._owned:
+                raise ValueError(f"double-free of block {b}")
+            self._owned.discard(b)
+            self._free.append(b)
+
+
+# ---------------------------------------------------------------------------
+# Device-side pytree init / prefill packing
+# ---------------------------------------------------------------------------
+
+
+def init_layer_pool(cfg, layout: PagedLayout, dtype, *, window=None):
+    """Per-layer cache for the paged engine. Full-attention layers get a
+    block pool; windowed layers keep a per-slot ring buffer (their state
+    is bounded at ``window`` tokens — paging buys nothing); callers route
+    SSM kinds to their existing per-slot state inits."""
+    if window:
+        return attn_lib.init_kv_cache(cfg, layout.num_slots, layout.max_len,
+                                      dtype, window=window)
+    shape = (layout.num_blocks, layout.block_size, cfg.n_kv_heads,
+             cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_slot_tables(layout: PagedLayout):
+    """(block_table, lengths) device arrays, all slots empty/null."""
+    table = jnp.full((layout.num_slots, layout.max_blocks_per_seq),
+                     NULL_BLOCK, jnp.int32)
+    lengths = jnp.zeros((layout.num_slots,), jnp.int32)
+    return table, lengths
+
+
+def pack_prefill_kv(pool, dense_kv, block_ids, block_size):
+    """Scatter a prefilled dense cache into pool blocks.
+
+    pool: {"k","v"} of (..., NB, BS, Hkv, D); dense_kv: {"k","v"} of
+    (..., 1, S, Hkv, D) with S == len(block_ids) * BS (kernels/ops pads
+    prefill caches with zeros past the true length); block_ids: (nbp,)
+    int32 physical destinations. Leading dims (stacked layers) broadcast.
+    """
+    nbp = block_ids.shape[0]
+
+    def put(p, d):
+        lead = p.shape[:-4]
+        hkv, hd = p.shape[-2:]
+        d = d.reshape(lead + (nbp, block_size, hkv, hd))
+        return p.at[..., block_ids, :, :, :].set(d)
+
+    return {"k": put(pool["k"], dense_kv["k"]),
+            "v": put(pool["v"], dense_kv["v"])}
+
+
+def pack_prefill_ring(ring, dense_ring, slot):
+    """Install a batch-1 prefilled ring cache into per-slot ring storage.
+
+    ring: (..., B, size_e, Hkv, D); dense_ring: (..., 1, size_p, Hkv, D)
+    with size_p <= size_e. When the prompt is shorter than the ring the
+    prefill cache is zero-padded at the tail — those slots are masked by
+    the position-validity predicate until decode overwrites them. When the
+    prompt wrapped, size_p == size_e and ring order (slot = pos % size)
+    already matches the decode discipline, so a direct copy is exact.
+    """
+    size_p = dense_ring.shape[-3]
+    size_e = ring.shape[-3]
+    pad = size_e - size_p
+    if pad:
+        widths = [(0, 0)] * dense_ring.ndim
+        widths[-3] = (0, pad)
+        dense_ring = jnp.pad(dense_ring, widths)
+    return ring.at[..., slot, :, :, :].set(dense_ring[..., 0, :, :, :])
+
+
+def pack_prefill_state(state, dense_state, slot):
+    """Install batch-1 SSM/conv decode state into per-slot state storage.
+
+    Both sides come from ``init_*_cache``-shaped trees whose batch axis
+    follows the stacked-layer axes; we locate it by matching ranks."""
+
+    def put(s, d):
+        if s.shape == d.shape:            # single-slot engine: slot is 0
+            return d
+        # batch axis position: s is (..., B, ...), d is (..., 1, ...) with
+        # identical rank — the axis where they disagree (or any axis where
+        # d == 1 and s == num_slots).
+        for ax in range(s.ndim):
+            if d.shape[ax] == 1 and s.shape[ax] != d.shape[ax]:
+                idx = (slice(None),) * ax + (slot,)
+                return s.at[idx].set(jnp.squeeze(d, axis=ax))
+        raise ValueError(f"cannot locate batch axis: {s.shape} vs {d.shape}")
+
+    return jax.tree.map(put, state, dense_state)
+
+
+__all__ = [
+    "NULL_BLOCK", "PagedLayout", "BlockAllocator", "blocks_for",
+    "init_layer_pool", "init_slot_tables", "pack_prefill_kv",
+    "pack_prefill_ring", "pack_prefill_state",
+]

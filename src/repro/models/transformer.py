@@ -271,6 +271,45 @@ def apply_block_decode(p, cfg: ModelConfig, kind: str, x, cache, pos,
     raise ValueError(kind)
 
 
+def apply_block_decode_paged(p, cfg: ModelConfig, kind: str, x, cache,
+                             block_table, lengths, ctx: RunCtx,
+                             mrope_positions=None):
+    """One-token block step with PER-SLOT positions over the paged cache.
+
+    Full-attention layers attend a shared block pool via the per-sequence
+    block table; windowed layers keep per-slot ring buffers (bounded state
+    — paging buys nothing); SSM kinds carry per-slot recurrent state and
+    are position-independent, so the stock decode applies unchanged.
+    """
+    xn = layers.apply_norm(cfg.norm, p["ln1"], x)
+    if kind in ("attn", "local"):
+        window = _window_for(cfg, kind)
+        if window is None:
+            out, cache = attn_lib.decode_attend_paged(
+                p["attn"], cfg, xn, cache, block_table, lengths,
+                mrope_positions=mrope_positions,
+                kernel_mode=ctx.kernel_mode)
+        else:
+            out, cache = attn_lib.decode_attend_batched(
+                p["attn"], cfg, xn, cache, lengths, window=window,
+                mrope_positions=mrope_positions)
+        x = x + out
+        x, _ = _ffn_part(p, cfg, x, ctx)
+        return x, cache
+    if kind == "rglru":
+        out, cache = ssm.apply_rglru_decode(p["rec"], cfg, xn, cache)
+        x = x + out
+        x, _ = _ffn_part(p, cfg, x, ctx)
+        return x, cache
+    if kind == "mlstm":
+        out, cache = ssm.apply_mlstm_decode(p["mix"], cfg, xn, cache)
+        return x + out, cache
+    if kind == "slstm":
+        out, cache = ssm.apply_slstm_decode(p["mix"], cfg, xn, cache)
+        return x + out, cache
+    raise ValueError(kind)
+
+
 def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
                      dtype):
     if kind in ("attn", "local"):
@@ -491,6 +530,99 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
                 lambda t: jnp.broadcast_to(t[None], (count,) + t.shape), one)
         caches[f"g{g}"] = gp
     return caches
+
+
+def init_paged_cache(cfg: ModelConfig, layout):
+    """Stacked per-layer caches for the paged serving engine.
+
+    Full-attention layers share a block pool (paged_kv.init_layer_pool);
+    windowed and SSM layers keep per-slot bounded state exactly as in
+    ``init_cache``. The block table and lengths live with the scheduler,
+    not in this tree — all layers of a sequence share one table.
+    """
+    from repro.models import paged_kv
+
+    dtype = jnp.dtype(cfg.dtype)
+    pools = {}
+    for g, (pattern, count) in enumerate(layer_groups(cfg)):
+        gp = {}
+        for pi, kind in enumerate(pattern):
+            if kind in ("attn", "local"):
+                one = paged_kv.init_layer_pool(
+                    cfg, layout, dtype, window=_window_for(cfg, kind))
+            else:
+                one = init_block_cache(cfg, kind, layout.num_slots,
+                                       layout.max_len, dtype)
+            gp[f"p{pi}"] = jax.tree.map(
+                lambda t: jnp.broadcast_to(t[None], (count,) + t.shape), one)
+        pools[f"g{g}"] = gp
+    return pools
+
+
+def pack_prefill_into_paged(cfg: ModelConfig, layout, pools, dense_caches,
+                            slot, block_ids):
+    """Install a batch-1 prefilled dense cache (from ``prefill`` with
+    ``max_len == len(block_ids) * block_size``) into the paged tree at
+    ``slot`` / physical ``block_ids``. Pure function; jit per prompt
+    bucket."""
+    from repro.models import paged_kv
+
+    out = {}
+    for g, (pattern, count) in enumerate(layer_groups(cfg)):
+        gp = {}
+        for pi, kind in enumerate(pattern):
+            pool = pools[f"g{g}"][f"p{pi}"]
+            dense = dense_caches[f"g{g}"][f"p{pi}"]
+            if kind in ("attn", "local"):
+                if _window_for(cfg, kind) is None:
+                    gp[f"p{pi}"] = paged_kv.pack_prefill_kv(
+                        pool, dense, block_ids, layout.block_size)
+                else:
+                    gp[f"p{pi}"] = {
+                        "k": paged_kv.pack_prefill_ring(pool["k"],
+                                                        dense["k"], slot),
+                        "v": paged_kv.pack_prefill_ring(pool["v"],
+                                                        dense["v"], slot)}
+            else:
+                gp[f"p{pi}"] = paged_kv.pack_prefill_state(pool, dense, slot)
+        out[f"g{g}"] = gp
+    return out
+
+
+def decode_step_paged(params, cfg: ModelConfig, pools, block_table, lengths,
+                      tokens, ctx: RunCtx):
+    """Shape-stable continuous-batching decode step.
+
+    tokens: (B, 1) — one token per decode slot; lengths: (B,) int32 tokens
+    already cached per slot (the new token's position); block_table:
+    (B, NBMAX) int32. Retired slots ride along pointed at the null block,
+    their outputs discarded by the scheduler. Returns
+    (logits (B, V) f32, new pools).
+    """
+    if cfg.enc_dec or cfg.rope_style == "mrope" or cfg.pos_embed != "none":
+        raise NotImplementedError(
+            "paged decode supports decoder-only rope/none-pos models")
+    x = _embed(params, cfg, tokens, shard=ctx.shard)
+    new_pools = {}
+    for g, (pattern, count) in enumerate(layer_groups(cfg)):
+        gp = params["groups"][f"g{g}"]
+        gc = pools[f"g{g}"]
+
+        def body(xc, scanned, pattern=pattern):
+            layer_params, layer_cache = scanned
+            new_lc = {}
+            for pi, kind in enumerate(pattern):
+                xc, nc = apply_block_decode_paged(
+                    layer_params[f"p{pi}"], cfg, kind, xc,
+                    layer_cache[f"p{pi}"], block_table, lengths, ctx)
+                new_lc[f"p{pi}"] = nc
+            return xc, new_lc
+
+        x, new_gc = jax.lax.scan(body, x, (gp, gc),
+                                 unroll=True if ctx.scan_unroll else 1)
+        new_pools[f"g{g}"] = new_gc
+    x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+    return _logits(params, cfg, x)[:, 0], new_pools
 
 
 def prefill(params, cfg: ModelConfig, tokens, ctx: RunCtx, max_len=None,

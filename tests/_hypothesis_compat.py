@@ -1,0 +1,124 @@
+"""Hypothesis-optional shim: property tests degrade to fixed-seed examples.
+
+``hypothesis`` is a dev-only extra (requirements-dev.txt). When it is
+installed, this module re-exports the real ``given``/``settings``/
+``strategies`` untouched. When it is absent, a minimal deterministic
+stand-in draws a fixed, seeded set of examples per test — weaker than
+real property testing (no shrinking, no coverage-guided search) but
+enough to keep the invariants exercised and, crucially, to keep tier-1
+collection from dying at import.
+
+Usage in test modules:
+
+    from _hypothesis_compat import given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+import math
+import random
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    _FALLBACK_MAX_EXAMPLES = 25  # cap: examples are fixed-seed, not searched
+
+    class _Strategy:
+        def __init__(self, draw, predicate=None):
+            self._draw = draw
+            self._predicate = predicate
+
+        def filter(self, predicate):
+            old = self._predicate
+
+            def both(v):
+                return (old is None or old(v)) and predicate(v)
+
+            return _Strategy(self._draw, both)
+
+        def example(self, rng):
+            for _ in range(1000):
+                v = self._draw(rng)
+                if self._predicate is None or self._predicate(v):
+                    return v
+            raise ValueError("filter predicate rejected 1000 draws")
+
+    class strategies:  # noqa: N801 - mimics `hypothesis.strategies` module
+        @staticmethod
+        def integers(min_value, max_value):
+            def draw(rng):
+                # Mix uniform draws with the boundaries so edge cases
+                # (1, max) always appear in the fixed example set.
+                r = rng.random()
+                if r < 0.15:
+                    return min_value
+                if r < 0.3:
+                    return max_value
+                return rng.randint(min_value, max_value)
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def floats(min_value=None, max_value=None, allow_nan=True,
+                   allow_infinity=True, allow_subnormal=True):
+            lo = -1e300 if min_value is None else min_value
+            hi = 1e300 if max_value is None else max_value
+
+            def draw(rng):
+                r = rng.random()
+                if r < 0.1:
+                    return 0.0
+                if r < 0.2:  # near-boundary magnitudes
+                    v = rng.choice([lo, hi])
+                    return float(v)
+                # log-uniform magnitude sweep, signed
+                mag_hi = max(abs(lo), abs(hi), 1.0)
+                exp = rng.uniform(-12, math.log10(mag_hi) if mag_hi > 1
+                                  else 0.0)
+                v = (10.0 ** exp) * (1.0 + rng.random())
+                if rng.random() < 0.5 and lo < 0:
+                    v = -v
+                return float(min(max(v, lo), hi))
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.example(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+    def settings(**kwargs):
+        """Accepts and records hypothesis settings; only max_examples is
+        honored by the fallback runner (deadline etc. are no-ops)."""
+
+        def deco(f):
+            f._hc_max_examples = kwargs.get("max_examples", 20)
+            return f
+
+        return deco
+
+    def given(*strats):
+        def deco(f):
+            def wrapper():
+                n = getattr(wrapper, "_hc_max_examples",
+                            getattr(f, "_hc_max_examples", 20))
+                n = min(n, _FALLBACK_MAX_EXAMPLES)
+                rng = random.Random(f.__qualname__)
+                for _ in range(n):
+                    f(*[s.example(rng) for s in strats])
+
+            # No functools.wraps: pytest must see a zero-arg signature,
+            # not the original one (it would treat drawn args as fixtures).
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            wrapper.__module__ = f.__module__
+            return wrapper
+
+        return deco

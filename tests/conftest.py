@@ -1,8 +1,14 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
 real single CPU device; multi-device tests re-exec via subprocess."""
 
+import os
+import sys
+
 import numpy as np
 import pytest
+
+# Make `import _hypothesis_compat` work regardless of rootdir/invocation.
+sys.path.insert(0, os.path.dirname(__file__))
 
 
 @pytest.fixture
@@ -16,3 +22,4 @@ def pytest_configure(config):
     import jax
 
     jax.config.update("jax_enable_x64", True)
+    # `slow` marker registration + default deselection live in pytest.ini

@@ -50,6 +50,7 @@ def test_input_specs_cover_all_cells():
                                                  cell.seq_len)
 
 
+@pytest.mark.slow
 def test_lm_learns_synthetic_structure(tmp_path):
     """The system trains: loss on learnable synthetic data drops."""
     cfg = get_config("olmo_1b").smoke()

@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import noc
 from repro.core.tiles import DEFAULT_POLICY, STX_POLICY, TilePolicy, \
@@ -56,6 +56,54 @@ def test_l2_interleave():
     assert noc.interleave(64, 4) == 1
     assert noc.interleave(64 * 4, 4) == 0
     assert noc.interleave(4096, 4, mode="block") == 1
+
+
+def test_l2_interleave_modes_and_errors():
+    # line mode respects a custom line size
+    assert noc.interleave(256, 4, line_bytes=128) == 2
+    # block mode keeps a whole 4 KiB block on one slice
+    assert all(noc.interleave(a, 8, mode="block") == 0
+               for a in range(0, 4096, 512))
+    assert noc.interleave(4096 * 9, 8, mode="block") == 1
+    with pytest.raises(ValueError):
+        noc.interleave(0, 4, mode="page")
+
+
+@pytest.mark.parametrize("fn", [noc.all_reduce_time, noc.all_gather_time,
+                                noc.reduce_scatter_time,
+                                noc.all_to_all_time])
+def test_collectives_trivial_axis_is_free(fn):
+    """axis_size <= 1 -> exactly 0, for every collective and tier."""
+    for axis in ("data", "model", "pod"):
+        assert fn(1e9, 1, axis) == 0.0
+        assert fn(1e9, 0, axis) == 0.0
+
+
+@pytest.mark.parametrize("fn", [noc.all_reduce_time, noc.all_gather_time,
+                                noc.reduce_scatter_time,
+                                noc.all_to_all_time])
+def test_collectives_monotone(fn):
+    """Time grows with axis size (fixed per-device bytes), with bytes,
+    and pod tier is never faster than ICI."""
+    times = [fn(1e9, n, "data") for n in (2, 4, 8, 16, 64)]
+    assert all(b > a for a, b in zip(times, times[1:]))
+    assert fn(2e9, 8, "data") == pytest.approx(2 * fn(1e9, 8, "data"))
+    assert fn(1e9, 8, "pod") >= fn(1e9, 8, "data")
+
+
+def test_collective_formula_shapes():
+    """Ring formula factors: all-reduce moves 2(n-1)/n, reduce-scatter
+    (n-1)/n, all-gather (n-1) shard-bytes."""
+    n, by, bw = 8, 1e9, noc.V5E_FABRIC.ici_bw
+    assert noc.all_reduce_time(by, n, "data") == pytest.approx(
+        2 * (n - 1) / n * by / bw)
+    assert noc.reduce_scatter_time(by, n, "data") == pytest.approx(
+        (n - 1) / n * by / bw)
+    assert noc.all_gather_time(by, n, "data") == pytest.approx(
+        (n - 1) * by / bw)
+    assert noc.all_reduce_time(by, n, "data") == pytest.approx(
+        noc.reduce_scatter_time(by, n, "data")
+        + noc.all_gather_time(by / n, n, "data"))
 
 
 def test_tile_dispatch_agreement(rng):
