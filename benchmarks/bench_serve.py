@@ -2,27 +2,34 @@
 
 Replays one request trace — Poisson inter-arrival times, ragged prompts,
 skewed output lengths (many short responses, a few long stragglers) —
-through both engines in launch/serve.py:
+through both backends of the unified serving ``Engine``
+(repro.launch.engine):
 
-* static  — lockstep batcher: wait for a full batch (or queue drain),
-  prefill, decode every sequence to the batch's max target length, keep
-  only each request's first ``max_new`` tokens. Cache is a dense
-  (B, max_len) slab per batch regardless of actual lengths.
-* continuous — the paged-cache Scheduler: per-slot retirement + admission
-  mid-flight, block-granular cache occupancy.
+* static     — lockstep batcher: right-padded batched prefill, decode
+  every batch until its last member finishes. Dense (B, max_len) cache
+  slab regardless of actual lengths.
+* continuous — the paged backend: per-slot retirement + optimistic
+  admission mid-flight, LIFO preemption under pool pressure, bucketed
+  prefill, block-granular cache occupancy.
 
 The comparison is at EQUAL CACHE MEMORY (--mem-tokens of KV capacity):
 the static engine must preallocate max_len per lane, so its batch is
 ``mem // max_len``; the paged engine spends the same tokens of pool on
-whatever mix of live sequences fits, so it runs more lanes concurrently
-(vLLM's core claim, and the tensor-level version of EPAC's interleaved
-L2 slices vs per-core private allocation).
+whatever mix of live sequences fits (vLLM's core claim, and the
+tensor-level version of EPAC's interleaved L2 slices vs per-core
+private allocation).
 
-Reported per engine: useful tokens/s (only requested tokens count — the
-static engine's overshoot decode steps are pure waste) and cache memory
-utilization (live tokens / allocated token capacity, averaged over decode
-steps). On a skewed trace continuous batching wins both: retired slots
-stop burning decode steps, and freed blocks admit queued requests early.
+Reported per engine: useful tokens/s, cache memory utilization (live
+tokens / allocated token capacity, averaged over decode steps), lane
+efficiency (useful tokens per slot-step — the scheduling win, hardware
+independent), plus the paged engine's preemption count and prefill
+compile count. Results go to stdout as CSV (benchmarks/common.py
+discipline) AND to a machine-readable ``BENCH_serve.json`` so the perf
+trajectory is trackable across PRs.
+
+Warmup matters: the first token of a request is sampled at prefill, so
+warmup requests use max_tokens=2 — with 1, the decode step would first
+compile inside the timed region and dominate the wall times.
 
 Run: PYTHONPATH=src python benchmarks/bench_serve.py --smoke
 CSV:  name,us_per_call,derived  (via benchmarks/common.py emit discipline)
@@ -32,14 +39,14 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch.serve import (Scheduler, SchedulerConfig, ServeConfig,
-                                Server)
+from repro.launch.engine import Engine, EngineConfig, SamplingParams
 from repro.models.model import Model
 
 
@@ -75,93 +82,52 @@ def _wait_until(t0: float, arrival: float):
         time.sleep(dt)
 
 
-def run_static(model, params, trace, *, batch: int, max_len: int):
-    """Lockstep batching: group arrivals into fixed batches; every batch
-    decodes to its max target length."""
-    server = Server(model, params, ServeConfig(batch_size=batch,
-                                               max_len=max_len))
-    # warmup compiles outside the timed region (both engines get this):
-    # one prefill per distinct padded prompt length in the trace
-    for plen in sorted({max(len(r.prompt) for r in trace[i:i + batch])
-                        for i in range(0, len(trace), batch)}):
-        server.generate([trace[0].prompt[:1] * plen], 1)
-    t0 = time.time()
-    useful = 0
-    live_token_steps = 0
-    cap_token_steps = 0
-    i = 0
-    while i < len(trace):
-        group = trace[i:i + batch]
-        _wait_until(t0, group[-1].arrival)       # batch forms on last arrival
-        n_new = max(r.max_new for r in group)
-        outs = server.generate([r.prompt for r in group], n_new)
-        useful += sum(min(len(o), r.max_new) for o, r in zip(outs, group))
-        # dense cache slab: batch x max_len capacity for n_new steps
-        cap_token_steps += batch * max_len * n_new
-        for t in range(n_new):
-            live_token_steps += sum(min(len(r.prompt) + t + 1,
-                                        len(r.prompt) + r.max_new)
-                                    for r in group)
-        i += batch
-    dt = time.time() - t0
-    return {"tok_s": useful / dt, "useful": useful, "wall_s": dt,
-            "cache_util": live_token_steps / max(cap_token_steps, 1)}
-
-
-def run_continuous(model, params, trace, *, slots: int, block_size: int,
-                   num_blocks: int, max_len: int):
-    sched = Scheduler(model, params,
-                      SchedulerConfig(num_slots=slots, block_size=block_size,
-                                      num_blocks=num_blocks,
-                                      max_len=max_len))
-    # warmup: compile decode + the trace's prefill lengths on the engine
-    # itself (a second Scheduler would double the pool memory the
-    # benchmark claims to budget), then reset telemetry
-    seen = set()
-    for r in trace:
-        if len(r.prompt) not in seen:
-            seen.add(len(r.prompt))
-            sched.submit(list(r.prompt), 1)
-    sched.run()
-    sched.finished.clear()
-    sched.steps = sched.slot_steps = 0
-    sched.block_token_steps = sched.live_token_steps = 0
+def _replay(engine: Engine, trace) -> dict:
+    """Warm the jit caches on the engine itself (a second engine would
+    double the pool memory the benchmark claims to budget), reset
+    telemetry, then replay the trace against the arrival clock."""
+    # max_tokens=2, not 1: the first token is sampled at prefill, so a
+    # 1-token request retires without ever compiling the decode step.
+    # Beyond the trace's prompt lengths, also warm every power-of-two
+    # bucket up to max_len: preemption-resume re-prefills land at
+    # prompt+emitted-1 tokens, which can hit buckets no prompt started
+    # in — those compiles must not fall inside the timed region.
+    warm = {len(r.prompt) for r in trace}
+    b = 2
+    while b < engine.cfg.max_len * 2:     # include the TOP bucket
+        warm.add(min(b, engine.cfg.max_len - 2))
+        b *= 2
+    for plen in sorted(warm):
+        engine.generate([trace[0].prompt[:1] * plen],
+                        SamplingParams(max_tokens=2))
+    engine.backend.reset_telemetry()
     t0 = time.time()
     pending = list(trace)
-    while pending or sched.has_work:
+    handles = []
+    while pending or engine.has_work:
         now = time.time() - t0
         while pending and pending[0].arrival <= now:
             r = pending.pop(0)
-            sched.submit(r.prompt, r.max_new)
-        if sched.has_work:
-            sched.step()
+            handles.append(engine.add_request(
+                r.prompt, SamplingParams(max_tokens=r.max_new)))
+        if engine.has_work:
+            engine.step()
         elif pending:
             _wait_until(t0, pending[0].arrival)
     dt = time.time() - t0
-    useful = sum(len(r.out) for r in sched.finished)
-    st = sched.stats()
+    useful = sum(len(h.token_ids) for h in handles)
+    st = engine.stats()
+    lane_eff = useful / max(st["steps"] * engine.cfg.num_slots, 1)
     return {"tok_s": useful / dt, "useful": useful, "wall_s": dt,
+            "lane_eff": lane_eff,
             "cache_util": st["cache_utilization"],
             "mean_active": st["mean_active_slots"],
-            "blocks_leaked": st["blocks_used"]}
+            "preemptions": st.get("preemptions", 0),
+            "prefill_compiles": st["prefill_compiles"],
+            "blocks_leaked": st.get("blocks_used", 0)}
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="olmo_1b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=32)
-    ap.add_argument("--rate", type=float, default=200.0,
-                    help="Poisson arrival rate (req/s)")
-    ap.add_argument("--mem-tokens", type=int, default=512,
-                    help="KV cache capacity in tokens, shared budget")
-    ap.add_argument("--slots", type=int, default=16,
-                    help="decode slots for the continuous engine")
-    ap.add_argument("--block-size", type=int, default=16)
-    ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
+def run_bench(args) -> dict:
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
@@ -171,27 +137,92 @@ def main():
                        seed=args.seed)
 
     static_batch = max(args.mem_tokens // args.max_len, 1)
-    res_s = run_static(model, params, trace, batch=static_batch,
-                       max_len=args.max_len)
-    res_c = run_continuous(model, params, trace, slots=args.slots,
-                           block_size=args.block_size,
-                           num_blocks=args.mem_tokens // args.block_size + 1,
-                           max_len=args.max_len)
+    eng_s = Engine(model, params,
+                   EngineConfig(backend="static", num_slots=static_batch,
+                                max_len=args.max_len))
+    res_s = _replay(eng_s, trace)
+    eng_c = Engine(model, params, EngineConfig(
+        backend="paged", num_slots=args.slots,
+        block_size=args.block_size,
+        num_blocks=args.mem_tokens // args.block_size + 1,
+        max_len=args.max_len, watermark_blocks=args.watermark))
+    res_c = _replay(eng_c, trace)
+    return {
+        "arch": cfg.name,
+        "mem_tokens": args.mem_tokens,
+        "static": res_s,
+        "continuous": res_c,
+        "speedup": res_c["tok_s"] / max(res_s["tok_s"], 1e-9),
+    }
 
-    print("name,tok_s,cache_util,useful_tokens,wall_s")
-    print(f"serve_static,{res_s['tok_s']:.2f},{res_s['cache_util']:.3f},"
-          f"{res_s['useful']},{res_s['wall_s']:.2f}")
-    print(f"serve_continuous,{res_c['tok_s']:.2f},"
-          f"{res_c['cache_util']:.3f},{res_c['useful']},"
-          f"{res_c['wall_s']:.2f}")
-    speedup = res_c["tok_s"] / max(res_s["tok_s"], 1e-9)
-    print(f"# equal cache budget {args.mem_tokens} tokens: static "
-          f"batch {static_batch}, continuous {args.slots} slots; "
-          f"continuous/static tokens/s: {speedup:.2f}x; "
-          f"mean active slots {res_c['mean_active']:.2f}/{args.slots}; "
-          f"blocks leaked {res_c['blocks_leaked']}")
-    if res_c["blocks_leaked"]:
+
+def _write_json(result: dict, json_path: str):
+    """Persist machine-readable results; fail loudly on a block leak
+    from EITHER entry point (CLI main or benchmarks/run.py)."""
+    with open(json_path, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+    if result["continuous"]["blocks_leaked"]:
         raise SystemExit("block leak detected")
+
+
+def _emit(result: dict, json_path: str):
+    res_s, res_c = result["static"], result["continuous"]
+    print("name,tok_s,cache_util,lane_eff,useful_tokens,wall_s")
+    print(f"serve_static,{res_s['tok_s']:.2f},{res_s['cache_util']:.3f},"
+          f"{res_s['lane_eff']:.3f},{res_s['useful']},"
+          f"{res_s['wall_s']:.2f}")
+    print(f"serve_continuous,{res_c['tok_s']:.2f},"
+          f"{res_c['cache_util']:.3f},{res_c['lane_eff']:.3f},"
+          f"{res_c['useful']},{res_c['wall_s']:.2f}")
+    print(f"# equal cache budget {result['mem_tokens']} tokens; "
+          f"continuous/static tokens/s: {result['speedup']:.2f}x; "
+          f"mean active slots {res_c['mean_active']:.2f}; "
+          f"preemptions {res_c['preemptions']}; "
+          f"prefill compiles {res_c['prefill_compiles']}; "
+          f"blocks leaked {res_c['blocks_leaked']}")
+    print(f"# wrote {json_path}")
+    _write_json(result, json_path)
+
+
+def _parser():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo_1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="Poisson arrival rate (req/s)")
+    ap.add_argument("--mem-tokens", type=int, default=512,
+                    help="KV cache capacity in tokens, shared budget")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="decode slots for the continuous engine")
+    ap.add_argument("--watermark", type=int, default=2,
+                    help="free-block admission watermark (paged)")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="BENCH_serve.json",
+                    help="machine-readable results path")
+    return ap
+
+
+def run():
+    """benchmarks/run.py entry: smoke trace, common-CSV rows + JSON."""
+    from benchmarks.common import emit
+
+    args = _parser().parse_args(["--smoke"])
+    result = run_bench(args)
+    for name, r in (("serve_static", result["static"]),
+                    ("serve_continuous", result["continuous"])):
+        emit(name, 1e6 / max(r["tok_s"], 1e-9),
+             f"tok_s={r['tok_s']:.2f} util={r['cache_util']:.3f} "
+             f"preemptions={r['preemptions']} "
+             f"prefill_compiles={r['prefill_compiles']}")
+    _write_json(result, args.json)
+
+
+def main():
+    args = _parser().parse_args()
+    _emit(run_bench(args), args.json)
 
 
 if __name__ == "__main__":

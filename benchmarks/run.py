@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_vrp  — §3.3 precision-vs-convergence + precision-vs-cost
   bench_noc  — §4   NoC/C2C bandwidth table + collective model
   bench_lm   — §5   bring-up workloads (DGEMM/STREAM) + LM steps
+  bench_serve — serving engine static-vs-continuous smoke (also writes
+                machine-readable BENCH_serve.json)
 
 Run: PYTHONPATH=src python -m benchmarks.run [section ...]
 """
@@ -14,10 +16,11 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import bench_lm, bench_noc, bench_stx, bench_vec, bench_vrp
+    from benchmarks import (bench_lm, bench_noc, bench_serve, bench_stx,
+                            bench_vec, bench_vrp)
 
     sections = {"vec": bench_vec, "stx": bench_stx, "vrp": bench_vrp,
-                "noc": bench_noc, "lm": bench_lm}
+                "noc": bench_noc, "lm": bench_lm, "serve": bench_serve}
     want = sys.argv[1:] or list(sections)
     print("name,us_per_call,derived")
     for name in want:

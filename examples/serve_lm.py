@@ -1,15 +1,17 @@
-"""Serving example: continuous batching over the paged KV cache.
+"""Serving example: the unified Engine API, streaming outputs.
 
 Loads (or random-inits) a smoke model, submits a stream of ragged
-requests with skewed output lengths, and drives the continuous-batching
-``Scheduler`` (launch/serve.py): requests are admitted into decode slots
-as earlier ones retire, KV cache blocks are recycled on the fly, and the
-jit'd decode step never recompiles. With --arch recurrentgemma_2b the
-decode path mixes constant-size RG-LRU state with windowed ring caches.
-
-Compare with the legacy lockstep batcher via --engine static.
+requests with per-request SamplingParams (temperature / top-k / top-p /
+seed / stop tokens), and drives ``Engine.step()`` by hand to show the
+streaming interface: each step yields per-request token increments as
+they are sampled. The paged backend admits optimistically, preempts LIFO
+under cache pressure (watch the preemption counter with a tiny
+--mem-tokens), and prefills through power-of-two buckets; the static
+backend is the lockstep baseline behind the same API.
 
 Run: PYTHONPATH=src python examples/serve_lm.py [--arch olmo_1b]
+     PYTHONPATH=src python examples/serve_lm.py --backend static
+     PYTHONPATH=src python examples/serve_lm.py --smoke   # CI-sized
 """
 
 import argparse
@@ -19,68 +21,72 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch.serve import (Scheduler, SchedulerConfig, ServeConfig,
-                                Server)
+from repro.launch.engine import Engine, EngineConfig, SamplingParams
 from repro.models.model import Model
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo_1b")
-    ap.add_argument("--engine", choices=("continuous", "static"),
-                    default="continuous")
+    ap.add_argument("--backend", choices=("paged", "static"),
+                    default="paged")
     ap.add_argument("--n-new", type=int, default=24)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--mem-tokens", type=int, default=256,
+                    help="paged KV pool capacity in tokens")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace for CI")
     args = ap.parse_args()
+    if args.smoke:
+        args.requests, args.n_new = 6, 8
 
     cfg = get_config(args.arch).smoke()
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
 
-    if args.engine == "static":
-        server = Server(model, params, ServeConfig(batch_size=args.slots,
-                                                   max_len=128))
-        prompts = [list(rng.integers(0, cfg.vocab_size,
-                                     int(rng.integers(4, 16))))
-                   for _ in range(args.slots)]
-        print(f"arch={cfg.name}  {args.slots} ragged prompts "
-              f"(lens {[len(p) for p in prompts]})")
-        t0 = time.time()
-        outs = server.generate(prompts, args.n_new)
-        dt = time.time() - t0
-        print(f"decoded {args.n_new} x {args.slots} tokens in {dt:.2f}s "
-              f"({args.slots * args.n_new / dt:.1f} tok/s)")
-        for i, o in enumerate(outs):
-            print(f"  req{i}: {o[:10]}...")
-        return
+    engine = Engine(model, params, EngineConfig(
+        backend=args.backend, num_slots=args.slots, block_size=16,
+        num_blocks=args.mem_tokens // 16 + 1, max_len=128))
 
-    sched = Scheduler(model, params,
-                      SchedulerConfig(num_slots=args.slots, block_size=16,
-                                      num_blocks=256, max_len=128))
-    for _ in range(args.requests):
+    handles = []
+    for i in range(args.requests):
         prompt = list(rng.integers(0, cfg.vocab_size,
                                    int(rng.integers(4, 16))))
         # skewed output lengths: mostly short, a few long stragglers
         max_new = int(rng.choice([4, 6, 8, args.n_new],
                                  p=[0.4, 0.25, 0.2, 0.15]))
-        sched.submit(prompt, max_new)
-    print(f"arch={cfg.name}  {args.requests} requests into "
-          f"{args.slots} slots")
+        handles.append(engine.add_request(prompt, SamplingParams(
+            max_tokens=max_new, temperature=args.temperature,
+            top_k=args.top_k, top_p=args.top_p, seed=i)))
+    print(f"arch={cfg.name}  backend={args.backend}  "
+          f"{args.requests} requests into {args.slots} slots")
+
     t0 = time.time()
-    done = sched.run()
+    total = 0
+    while engine.has_work:
+        for out in engine.step():                 # streaming increments
+            total += len(out.new_tokens)
+            if out.request_id < 2 and out.new_tokens:
+                print(f"  stream req{out.request_id} += "
+                      f"{list(out.new_tokens)}"
+                      + (f"  [done: {out.finish_reason}]"
+                         if out.finished else ""))
     dt = time.time() - t0
-    total = sum(len(r.out) for r in done)
-    st = sched.stats()
-    print(f"decoded {total} tokens over {len(done)} reqs in {dt:.2f}s "
+
+    st = engine.stats()
+    print(f"decoded {total} tokens over {len(handles)} reqs in {dt:.2f}s "
           f"({total / dt:.1f} tok/s)")
-    print(f"  mean active slots {st['mean_active_slots']:.2f}/"
-          f"{args.slots}, cache utilization "
-          f"{st['cache_utilization']:.0%}, blocks leaked "
-          f"{st['blocks_used']}")
-    for r in sorted(done, key=lambda r: r.uid)[:3]:
-        print(f"  req{r.uid}: {r.out[:10]}...")
+    print(f"  stats: {st}")
+    for h in handles[:3]:
+        print(f"  req{h.uid}: {h.token_ids[:10]}... ({h.finish_reason})")
+    assert all(h.finished for h in handles)
+    if args.backend == "paged":
+        assert st["blocks_used"] == 0, "block leak"
 
 
 if __name__ == "__main__":

@@ -1,0 +1,37 @@
+"""Unified serving engine: one front-end API over pluggable backends.
+
+EPAC's host-device execution model — the host packs offloaded work and
+drives jit'd device steps — behind a single dispatch interface, per the
+Occamy/Epiphany lesson that heterogeneous execution strategies want one
+entry point, not one API per strategy:
+
+    engine = Engine(model, params, EngineConfig(backend="paged"))
+    handle = engine.add_request(prompt, SamplingParams(temperature=0.7))
+    while engine.has_work:
+        for out in engine.step():          # streaming outputs
+            consume(out.request_id, out.new_tokens)
+
+Backends:
+  * ``PagedBackend``  — continuous batching over a block-paged KV cache
+    with optimistic admission, LIFO preemption (host-side recompute
+    records) and power-of-two bucketed prefill.
+  * ``StaticBackend`` — lockstep batcher: right-padded batched prefill
+    (length-exact caches), per-row-position decode, batch retired as a
+    unit.
+
+Both sample on-device through one jit'd vectorized sampling step with
+per-slot parameter arrays and per-request RNG streams
+(engine/sampling.py), so outputs are independent of admission order and
+slot placement even for stochastic decoding.
+"""
+
+from repro.launch.engine.api import (Engine, EngineConfig, RequestHandle,
+                                     RequestOutput, SamplingParams)
+from repro.launch.engine.sampling import sample_tokens
+from repro.launch.engine.scheduler import PagedBackend
+from repro.launch.engine.static import StaticBackend
+
+__all__ = [
+    "Engine", "EngineConfig", "RequestHandle", "RequestOutput",
+    "SamplingParams", "PagedBackend", "StaticBackend", "sample_tokens",
+]

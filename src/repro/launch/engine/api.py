@@ -1,0 +1,227 @@
+"""Engine front-end: SamplingParams, request handles, streaming outputs.
+
+The Engine owns request admission and the step loop; backends own the
+device state (dense cache or paged pools) and implement three methods:
+``enqueue(handle)``, ``step() -> list[RequestOutput]`` and ``stats()``.
+Every token is *emitted the step it is sampled* (prefill included), so
+``step()`` doubles as the streaming interface; the final decode step of a
+request never pays for caching a token nobody will attend.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.models.model import Model
+from repro.models.transformer import RunCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding parameters.
+
+    ``temperature <= 0`` selects greedy (argmax) decoding; otherwise
+    logits are temperature-scaled, truncated to the ``top_k`` highest
+    (0 = off) and to the smallest prefix of descending-probability
+    tokens with cumulative mass >= ``top_p``, then sampled. ``seed``
+    derives the request's own RNG stream — token t draws from
+    fold_in(PRNGKey(seed), t) — so sampled outputs are reproducible and
+    independent of admission order, slot placement and co-batched
+    traffic. The flip side: requests SHARING a seed share the stream
+    (two identical prompts sample identically) — pass distinct seeds
+    when you want diversity, e.g. best-of-n over one prompt.
+    ``stop_token_ids`` retire the request on match (the stop
+    token is stripped, never emitted), on top of the engine-level
+    ``eos_id``.
+    """
+
+    max_tokens: int = 16
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+    stop_token_ids: tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.max_tokens < 1:
+            raise ValueError("max_tokens must be >= 1")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError("top_p must be in (0, 1]")
+        if self.top_k < 0:
+            raise ValueError("top_k must be >= 0 (0 disables)")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+@dataclasses.dataclass
+class RequestHandle:
+    """Live view of one request; token_ids grows as the engine steps."""
+
+    uid: int
+    prompt: list[int]
+    sampling: SamplingParams
+    token_ids: list[int] = dataclasses.field(default_factory=list)
+    finished: bool = False
+    finish_reason: Optional[str] = None      # "length" | "stop"
+    num_preemptions: int = 0
+    # internal: RNG stream position (== tokens sampled; differs from
+    # len(token_ids) only after a stripped stop token)
+    _n_sampled: int = 0
+
+    @property
+    def out(self) -> list[int]:              # legacy Scheduler alias
+        return self.token_ids
+
+    @property
+    def done(self) -> bool:                  # legacy Scheduler alias
+        return self.finished
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestOutput:
+    """One streaming increment: tokens a request gained this step."""
+
+    request_id: int
+    new_tokens: tuple[int, ...]
+    num_tokens: int                          # total emitted so far
+    finished: bool
+    finish_reason: Optional[str] = None
+
+
+def register_sample(req: RequestHandle, tok: int, eos_id: int,
+                    on_finish) -> RequestOutput:
+    """Shared token-acceptance state machine for all backends: advance
+    the request's RNG stream, strip stop tokens, retire on stop or
+    max_tokens, and emit the streaming increment. ``on_finish()`` runs
+    backend cleanup (free blocks / park the lane) after the handle's
+    finished/finish_reason flags are set — keeping both backends on
+    byte-identical emission semantics."""
+    req._n_sampled += 1
+    stop = (eos_id >= 0 and tok == eos_id) \
+        or tok in req.sampling.stop_token_ids
+    if not stop:
+        req.token_ids.append(tok)
+        if len(req.token_ids) < req.sampling.max_tokens:
+            return RequestOutput(req.uid, (tok,), len(req.token_ids),
+                                 False)
+    reason = "stop" if stop else "length"
+    req.finished = True
+    req.finish_reason = reason
+    on_finish()
+    return RequestOutput(req.uid, () if stop else (tok,),
+                         len(req.token_ids), True, reason)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    backend: str = "paged"       # "paged" | "static"
+    num_slots: int = 8           # decode batch width
+    block_size: int = 16         # paged: tokens per cache block
+    num_blocks: int = 512        # paged: pool size (block 0 reserved)
+    max_len: int = 256           # per-sequence position cap
+    eos_id: int = -1             # -1: length-based retirement only
+    watermark_blocks: int = 0    # paged: admission headroom (see alloc)
+    bucketed_prefill: bool = True  # pow-2 prompt buckets (when exact)
+
+
+class Engine:
+    """Single serving front-end over pluggable execution backends."""
+
+    def __init__(self, model: Model, params, cfg: EngineConfig = None,
+                 ctx: Optional[RunCtx] = None):
+        from repro.launch.engine.scheduler import PagedBackend
+        from repro.launch.engine.static import StaticBackend
+
+        self.cfg = cfg or EngineConfig()
+        self.model = model
+        mc = model.cfg
+        if mc.enc_dec or mc.rope_style == "mrope" or mc.visual_prefix \
+                or mc.pos_embed != "none":
+            # pos_embed gate: the backends decode with per-row (B,)
+            # positions, which _embed's sinusoidal path would
+            # mis-broadcast (no such decoder-only config exists today)
+            raise NotImplementedError(
+                "the serving engine targets decoder-only text LMs "
+                "with relative/absent positions")
+        ctx = ctx or RunCtx(kernel_mode="ref")
+        if self.cfg.backend == "paged":
+            self.backend = PagedBackend(model, params, self.cfg, ctx)
+        elif self.cfg.backend == "static":
+            self.backend = StaticBackend(model, params, self.cfg, ctx)
+        else:
+            raise ValueError(f"unknown backend {self.cfg.backend!r}")
+        self._uid = 0
+
+    # -- request lifecycle ----------------------------------------------
+
+    def add_request(self, prompt: Sequence[int],
+                    sampling: Optional[SamplingParams] = None
+                    ) -> RequestHandle:
+        sampling = sampling or SamplingParams()
+        prompt = list(prompt)
+        if len(prompt) < 1:
+            raise ValueError("empty prompt")
+        if len(prompt) + sampling.max_tokens > self.cfg.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_tokens "
+                f"({sampling.max_tokens}) exceeds max_len "
+                f"{self.cfg.max_len}")
+        # backend-specific capacity limits (e.g. the paged pool's
+        # worst-case bound) are validated by enqueue, which raises
+        # ValueError before the request enters the queue
+        handle = RequestHandle(self._uid, prompt, sampling)
+        self._uid += 1
+        self.backend.enqueue(handle)
+        return handle
+
+    def step(self) -> list[RequestOutput]:
+        """Admissions + one device step; streams per-request increments."""
+        return self.backend.step()
+
+    @property
+    def has_work(self) -> bool:
+        return self.backend.has_work
+
+    @property
+    def finished(self) -> list[RequestHandle]:
+        """Handles retired so far, in completion order."""
+        return self.backend.finished
+
+    def stats(self) -> dict:
+        return self.backend.stats()
+
+    # -- convenience drivers --------------------------------------------
+
+    def drain(self, max_steps: int = 100_000) -> list[RequestOutput]:
+        """Step until idle; returns the concatenated output stream."""
+        stream: list[RequestOutput] = []
+        steps = 0
+        while self.has_work:
+            outs = self.step()
+            stream.extend(outs)
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("step budget exceeded")
+            if not outs and not self.backend.made_progress:
+                raise RuntimeError(
+                    "engine stalled: waiting requests cannot be admitted")
+        return stream
+
+    def generate(self, prompts: Sequence[Sequence[int]],
+                 sampling=None, max_steps: int = 100_000
+                 ) -> list[list[int]]:
+        """Submit ``prompts`` and drive to completion; returns token ids
+        per prompt in submission order. ``sampling`` is one
+        SamplingParams for all or a per-prompt sequence."""
+        if sampling is None or isinstance(sampling, SamplingParams):
+            sampling = [sampling or SamplingParams()] * len(prompts)
+        if len(sampling) != len(prompts):
+            raise ValueError(f"{len(sampling)} sampling params for "
+                             f"{len(prompts)} prompts")
+        handles = [self.add_request(p, s)
+                   for p, s in zip(prompts, sampling)]
+        self.drain(max_steps=max_steps)
+        return [list(h.token_ids) for h in handles]

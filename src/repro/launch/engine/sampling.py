@@ -1,0 +1,119 @@
+"""Vectorized on-device sampling step for the serving engine.
+
+One jit'd function samples every decode slot at once from per-slot
+parameter arrays (temperature / top-k / top-p / seed / RNG-stream step)
+— replacing the old host-side per-row argmax/softmax loop. Retired or
+empty slots ride along with default parameters; their draws are
+discarded by the scheduler, keeping the call shape-stable.
+
+Determinism contract: token t of a request is drawn from
+``fold_in(PRNGKey(seed), t)`` — a pure function of the request's own
+(seed, t) and its own logits — so sampled outputs do not depend on
+admission order, slot index, co-batched requests, or preemption/resume
+history (the stream position survives a preemption in the request's
+recompute record).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fold_seed(seed: int) -> int:
+    """Fold an arbitrary Python int seed into the non-negative int32
+    range the device-side param arrays carry (numpy 2.x raises on
+    out-of-range int32 assignment). Pure masking — a given seed always
+    selects the same stream through every entry point."""
+    return int(seed) & 0x7FFFFFFF
+
+
+def _sample_row(logits, seed, step, temp, top_k, top_p):
+    """One slot: logits (V,) f32 -> sampled token id (int32)."""
+    V = logits.shape[0]
+    greedy = jnp.argmax(logits).astype(jnp.int32)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    t = jnp.maximum(temp, 1e-6).astype(jnp.float32)
+    scaled = logits.astype(jnp.float32) / t
+    desc = jnp.flip(jnp.sort(scaled))               # descending
+    # top-k: logits below the k-th highest are cut (k <= 0 disables;
+    # ties at the threshold survive — the standard caveat)
+    k_eff = jnp.where(top_k <= 0, V, jnp.clip(top_k, 1, V))
+    thresh_k = desc[jnp.clip(k_eff - 1, 0, V - 1)]
+    # top-p (nucleus): keep the smallest descending-probability prefix
+    # whose mass reaches top_p — i.e. tokens whose PRECEDING cumulative
+    # mass is < p. The argmax token is always kept.
+    probs = jax.nn.softmax(desc)
+    cum = jnp.cumsum(probs)
+    kept = (cum - probs) < jnp.clip(top_p, 1e-6, 1.0)
+    thresh_p = desc[jnp.maximum(jnp.sum(kept) - 1, 0)]
+    allowed = (scaled >= thresh_k) & (scaled >= thresh_p)
+    masked = jnp.where(allowed, scaled, -jnp.inf)
+    sampled = jax.random.categorical(key, masked).astype(jnp.int32)
+    return jnp.where(temp <= 0.0, greedy, sampled)
+
+
+@jax.jit
+def sample_tokens(logits, seeds, steps, temps, top_ks, top_ps):
+    """logits (B, V) f32 + per-slot param arrays (B,) -> (B,) int32."""
+    return jax.vmap(_sample_row)(logits, seeds, steps, temps, top_ks,
+                                 top_ps)
+
+
+class SlotSampler:
+    """Host-side mirror of the per-slot sampling parameter arrays.
+
+    The backend installs a request's SamplingParams at admission and
+    resets the slot at retirement; ``sample`` forwards the arrays to the
+    jit'd step. ``steps[i]`` is the owning request's RNG-stream position
+    and must be advanced by the backend after every accepted draw.
+    """
+
+    def __init__(self, num_slots: int):
+        self.temps = np.zeros((num_slots,), np.float32)
+        self.top_ks = np.zeros((num_slots,), np.int32)
+        self.top_ps = np.ones((num_slots,), np.float32)
+        self.seeds = np.zeros((num_slots,), np.int32)
+        self.steps = np.zeros((num_slots,), np.int32)
+
+    def install(self, slot: int, sampling, n_sampled: int):
+        self.temps[slot] = sampling.temperature
+        self.top_ks[slot] = sampling.top_k
+        self.top_ps[slot] = sampling.top_p
+        self.seeds[slot] = fold_seed(sampling.seed)
+        self.steps[slot] = n_sampled
+
+    def clear(self, slot: int):
+        self.temps[slot] = 0.0
+        self.top_ks[slot] = 0
+        self.top_ps[slot] = 1.0
+        self.seeds[slot] = 0
+        self.steps[slot] = 0
+
+    def sample(self, logits):
+        """logits: (B, V) device array -> (B,) numpy int32 tokens."""
+        if (self.temps <= 0.0).all():
+            # all-greedy fast path (the default): skip the per-slot
+            # sort/softmax/cumsum machinery the stochastic step needs
+            return np.argmax(np.asarray(logits), -1).astype(np.int32)
+        toks = sample_tokens(logits, jnp.asarray(self.seeds),
+                             jnp.asarray(self.steps),
+                             jnp.asarray(self.temps),
+                             jnp.asarray(self.top_ks),
+                             jnp.asarray(self.top_ps))
+        return np.asarray(toks)
+
+    def sample_one(self, slot: int, row_logits):
+        """Sample for ONE slot (prefill admission) from the parameters
+        just installed — same streams as the batch path, no duplicate
+        parameter marshalling. row_logits: (1, V)."""
+        if self.temps[slot] <= 0.0:
+            return int(np.argmax(np.asarray(row_logits)[0]))
+        sl = slice(slot, slot + 1)
+        toks = sample_tokens(row_logits, jnp.asarray(self.seeds[sl]),
+                             jnp.asarray(self.steps[sl]),
+                             jnp.asarray(self.temps[sl]),
+                             jnp.asarray(self.top_ks[sl]),
+                             jnp.asarray(self.top_ps[sl]))
+        return int(np.asarray(toks)[0])

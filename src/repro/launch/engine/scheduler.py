@@ -1,0 +1,341 @@
+"""PagedBackend: continuous batching over the block-paged KV cache.
+
+Successor of the PR-1 ``Scheduler`` with the three ROADMAP serving items
+landed:
+
+* **Optimistic admission** — a request is admitted when the pool covers
+  its *current* footprint (plus an optional free-block watermark), not
+  its worst case. More concurrency on skewed traces; the pool can now
+  genuinely run out mid-flight, which is handled by —
+* **LIFO preemption** — when a sequence needs a growth block and the
+  pool is dry, the most recently admitted active sequence is evicted:
+  its blocks are freed, its state collapses to a host-side *recompute
+  record* (prompt + emitted tokens + RNG-stream position), and it
+  re-prefills over its full history on re-admission (front of queue).
+  The oldest admission is never evicted, so it always runs to
+  completion and the engine cannot livelock. Sampled outputs survive
+  preemption bit-exactly because each request's RNG stream is a pure
+  function of (seed, stream position).
+* **Bucketed prefill** — prompts are right-padded to the next
+  power-of-two bucket and prefilled through one jit per *bucket*
+  (O(log max_len) compiles instead of one per distinct length). Causal
+  attention keeps padded keys invisible; per-row true lengths thread
+  through ``model.prefill`` so ring/recurrent caches capture state at
+  the real boundary; pad-tail cache blocks are routed to the reserved
+  null block. Models whose state cannot be re-extracted at a traced
+  length (mlstm/slstm) fall back to exact-length prefill automatically.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.engine.api import (EngineConfig, RequestHandle,
+                                     RequestOutput, register_sample)
+from repro.launch.engine.sampling import SlotSampler
+from repro.models import paged_kv
+from repro.models.model import Model
+from repro.models.transformer import RunCtx
+
+
+def next_bucket(n: int, floor: int) -> int:
+    """Smallest power of two >= max(n, floor)."""
+    return max(1 << max(n - 1, 0).bit_length(), floor)
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[RequestHandle] = None
+    blocks: list[int] = dataclasses.field(default_factory=list)
+    last_token: int = 0
+    ticket: int = -1             # admission order; LIFO preemption key
+
+
+class PagedBackend:
+    """Host-side scheduler state + jit'd device steps (paged pools)."""
+
+    def __init__(self, model: Model, params, cfg: EngineConfig,
+                 ctx: RunCtx):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.ctx = ctx
+        self.layout = paged_kv.PagedLayout(
+            num_slots=cfg.num_slots, num_blocks=cfg.num_blocks,
+            block_size=cfg.block_size, max_len=cfg.max_len)
+        self.alloc = paged_kv.BlockAllocator(
+            self.layout, watermark=cfg.watermark_blocks)
+        self.pools = model.init_paged_cache(self.layout)
+        self.table = np.full(
+            (cfg.num_slots, self.layout.max_blocks_per_seq),
+            paged_kv.NULL_BLOCK, np.int32)
+        self.lengths = np.zeros((cfg.num_slots,), np.int32)
+        self.slots = [_Slot() for _ in range(cfg.num_slots)]
+        self.sampler = SlotSampler(cfg.num_slots)
+        self.waiting: collections.deque[RequestHandle] = collections.deque()
+        self.finished: list[RequestHandle] = []
+        self.ragged_prefill = (cfg.bucketed_prefill
+                               and model.supports_ragged_prefill())
+        self.made_progress = False
+        self._ticket = 0
+        # telemetry
+        self.steps = 0
+        self.slot_steps = 0          # active slots summed over steps
+        self.block_token_steps = 0   # allocated token capacity x steps
+        self.live_token_steps = 0    # live tokens x steps
+        self.preemptions = 0
+
+        def decode_fn(params, pools, table, lengths, tokens):
+            return model.decode_step_paged(params, pools, table, lengths,
+                                           tokens, self.ctx)
+
+        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+        self._prefill_cache = {}
+
+    # -- public backend API ---------------------------------------------
+
+    def enqueue(self, req: RequestHandle):
+        worst = paged_kv.blocks_for(
+            len(req.prompt) + req.sampling.max_tokens, self.cfg.block_size)
+        if worst > self.layout.usable_blocks:
+            raise ValueError(
+                f"request worst case ({worst} blocks) exceeds pool "
+                f"capacity ({self.layout.usable_blocks} usable blocks) — "
+                "it could never run to completion even alone")
+        self.waiting.append(req)
+
+    @property
+    def num_active(self) -> int:
+        return sum(s.req is not None for s in self.slots)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting) or self.num_active > 0
+
+    def step(self) -> list[RequestOutput]:
+        """Admissions, growth (with preemption), one decode, sampling."""
+        outs: list[RequestOutput] = []
+        self.made_progress = False
+        self._admit(outs)
+        self._grow_blocks()
+        active = [i for i, s in enumerate(self.slots) if s.req is not None]
+        if not active:
+            return outs
+        tokens = np.zeros((self.cfg.num_slots, 1), np.int32)
+        for i in active:
+            tokens[i, 0] = self.slots[i].last_token
+        logits, self.pools = self._decode(
+            self.params, self.pools, jnp.asarray(self.table),
+            jnp.asarray(self.lengths), jnp.asarray(tokens))
+        toks = self.sampler.sample(logits)
+        self.steps += 1
+        self.slot_steps += len(active)
+        self.block_token_steps += self.alloc.used_count * self.cfg.block_size
+        self.made_progress = True
+        for i in active:
+            self.lengths[i] += 1          # the fed token got cached
+            self.live_token_steps += int(self.lengths[i])
+            outs.append(self._accept(i, int(toks[i])))
+        return outs
+
+    # -- internals ------------------------------------------------------
+
+    def _accept(self, i: int, tok: int) -> RequestOutput:
+        """Register one sampled token for slot i; emit/stop/retire."""
+        slot = self.slots[i]
+        out = register_sample(slot.req, tok, self.cfg.eos_id,
+                              lambda: self._retire(i))
+        if not out.finished:
+            self.sampler.steps[i] = slot.req._n_sampled
+            slot.last_token = tok
+        return out
+
+    def _grow_blocks(self):
+        """Allocate growth blocks oldest-admission-first; when the pool
+        is dry, preempt LIFO until the allocation fits (a sequence may
+        preempt itself if it is the newest — it then waits in queue)."""
+        order = sorted(
+            (i for i, s in enumerate(self.slots) if s.req is not None),
+            key=lambda i: self.slots[i].ticket)
+        for i in order:
+            slot = self.slots[i]
+            if slot.req is None:          # preempted earlier in this pass
+                continue
+            L = int(self.lengths[i])
+            if L % self.cfg.block_size != 0 or \
+                    L // self.cfg.block_size < len(slot.blocks):
+                continue
+            while not self.alloc.can_alloc(1):
+                cands = [(j, self.slots[j].ticket)
+                         for j, s in enumerate(self.slots)
+                         if s.req is not None]
+                victim = self.alloc.select_victim(cands)
+                self._preempt(victim)
+                if victim == i:
+                    break
+            if slot.req is None:
+                continue
+            (nb,) = self.alloc.alloc(1)
+            slot.blocks.append(nb)
+            self.table[i, len(slot.blocks) - 1] = nb
+
+    def _imminent_growth(self) -> int:
+        """Growth blocks active sequences will claim THIS step. Counted
+        into admission so a new request cannot grab the last free blocks
+        only to be LIFO-preempted by an older sequence's growth in the
+        same step — a full prefill wasted per step until something
+        retires."""
+        bs = self.cfg.block_size
+        return sum(1 for i, s in enumerate(self.slots)
+                   if s.req is not None
+                   and int(self.lengths[i]) % bs == 0
+                   and int(self.lengths[i]) // bs >= len(s.blocks))
+
+    def _admit(self, outs: list[RequestOutput]):
+        while self.waiting:
+            req = self.waiting[0]
+            free_slots = [i for i, s in enumerate(self.slots)
+                          if s.req is None]
+            if not free_slots:
+                return
+            cached = len(req.prompt) + max(len(req.token_ids) - 1, 0)
+            # + 1: the admitted slot decodes THIS step, caching the fed
+            # token at position ``cached`` — without that block counted
+            # a boundary-length request admits then self-preempts,
+            # wasting a full prefill every step
+            need = paged_kv.blocks_for(cached + 1, self.cfg.block_size) \
+                + self._imminent_growth()
+            # watermark headroom only matters while others are running;
+            # a sole request must always pass (progress guarantee)
+            if not self.alloc.can_admit(need, strict=self.num_active > 0):
+                return                    # FCFS: no skipping ahead
+            self.waiting.popleft()
+            self._place(free_slots[0], req, outs)
+
+    def _place(self, i: int, req: RequestHandle,
+               outs: list[RequestOutput]):
+        resume = req._n_sampled > 0       # preempted: re-prefill history
+        cached = list(req.prompt) + (req.token_ids[:-1] if resume else [])
+        S = len(cached)
+        nbp = paged_kv.blocks_for(S, self.cfg.block_size)
+        block_ids = self.alloc.alloc(nbp)
+        slot = self.slots[i]
+        slot.req = req
+        slot.blocks = block_ids
+        slot.ticket = self._ticket
+        self._ticket += 1
+        fn, tok_w, cache_w = self._prefill(S)
+        toks = np.zeros((1, tok_w), np.int32)
+        toks[0, :S] = cached              # exact path: tok_w == S, no pad
+        ids = np.full((cache_w // self.cfg.block_size,),
+                      paged_kv.NULL_BLOCK, np.int32)
+        ids[:nbp] = block_ids             # pad-tail blocks -> null block
+        if self.ragged_prefill:
+            logits, self.pools = fn(
+                self.params, self.pools, jnp.asarray(toks),
+                jnp.asarray(ids), jnp.int32(i),
+                jnp.asarray([S], jnp.int32))
+        else:
+            logits, self.pools = fn(
+                self.params, self.pools, jnp.asarray(toks),
+                jnp.asarray(ids), jnp.int32(i))
+        self.table[i, :] = paged_kv.NULL_BLOCK
+        self.table[i, :nbp] = block_ids
+        self.lengths[i] = S
+        self.sampler.install(i, req.sampling, req._n_sampled)
+        self.made_progress = True
+        if resume:
+            slot.last_token = req.token_ids[-1]
+            return
+        outs.append(self._accept(
+            i, self.sampler.sample_one(i, logits[:, S - 1])))
+
+    def _prefill(self, S: int):
+        """Prefill+pack, jit-cached per power-of-two BUCKET (ragged
+        models) or per exact length (fallback — tokens stay width S, so
+        recurrent chunk scans never see a pad token). Returns
+        (fn, token_width, cache_width); cache_width is always a block
+        multiple (pow-2 buckets are rounded up for non-pow-2 blocks)."""
+        bs = self.cfg.block_size
+        if self.ragged_prefill:
+            cap = paged_kv.blocks_for(self.cfg.max_len, bs) * bs
+            Sb = min(paged_kv.blocks_for(next_bucket(S, bs), bs) * bs, cap)
+            tok_w, key = Sb, Sb
+        else:
+            Sb = paged_kv.blocks_for(S, bs) * bs
+            tok_w, key = S, ("exact", S)
+        fn = self._prefill_cache.get(key)
+        if fn is None:
+            model, layout, ctx = self.model, self.layout, self.ctx
+            ragged = self.ragged_prefill
+
+            def prefill_fn(params, pools, tokens, block_ids, slot,
+                           length=None):
+                logits, dense = model.prefill(
+                    params, {"tokens": tokens}, ctx, max_len=Sb,
+                    length=length if ragged else None)
+                pools = model.pack_prefill_into_paged(layout, pools, dense,
+                                                      slot, block_ids)
+                return logits, pools
+
+            fn = jax.jit(prefill_fn, donate_argnums=(1,))
+            self._prefill_cache[key] = fn
+        return fn, tok_w, Sb
+
+    def _preempt(self, i: int):
+        """Evict slot i to a host-side recompute record (LIFO victim)."""
+        slot = self.slots[i]
+        req = slot.req
+        req.num_preemptions += 1
+        self.preemptions += 1
+        self.alloc.free(slot.blocks)
+        self._clear_slot(i)
+        self.waiting.appendleft(req)      # preempted work goes first
+        self.made_progress = True
+
+    def _retire(self, i: int):
+        """Backend cleanup after register_sample flagged the handle."""
+        slot = self.slots[i]
+        self.finished.append(slot.req)
+        self.alloc.free(slot.blocks)
+        self._clear_slot(i)
+
+    def _clear_slot(self, i: int):
+        slot = self.slots[i]
+        slot.req = None
+        slot.blocks = []
+        slot.last_token = 0
+        slot.ticket = -1
+        self.table[i, :] = paged_kv.NULL_BLOCK
+        self.lengths[i] = 0
+        self.sampler.clear(i)
+
+    # -- reporting ------------------------------------------------------
+
+    def reset_telemetry(self):
+        """Zero the counters behind ``stats()`` (e.g. after bench
+        warmup); does not touch scheduling state or jit caches."""
+        self.finished.clear()
+        self.steps = self.slot_steps = 0
+        self.block_token_steps = self.live_token_steps = 0
+        self.preemptions = 0
+
+    def stats(self) -> dict:
+        """Cache/occupancy/scheduling telemetry for the run so far."""
+        cap = self.block_token_steps or 1
+        return {
+            "steps": self.steps,
+            "mean_active_slots": self.slot_steps / max(self.steps, 1),
+            "cache_utilization": self.live_token_steps / cap,
+            "blocks_free": self.alloc.free_count,
+            "blocks_used": self.alloc.used_count,
+            "preemptions": self.preemptions,
+            "prefill_compiles": len(self._prefill_cache),
+            "bucketed_prefill": self.ragged_prefill,
+        }

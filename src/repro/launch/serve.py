@@ -1,30 +1,20 @@
-"""Serving drivers: static batcher + continuous-batching engine.
+"""Serving CLI + deprecated PR-1 shims. The engine moved to
+``repro.launch.engine`` — one ``Engine`` front-end
+(``add_request``/``step``/``generate``) over the ``paged`` (continuous
+batching, optimistic admission + preemption, bucketed prefill) and
+``static`` (lockstep) backends. Import from there for new code:
 
-EPAC's dual execution model: accelerators serve offloaded work from a
-host *or* run standalone. launch/train.py is the standalone mode; this is
-the host-device mode — the host packs offloaded work and drives jit'd
-device steps.
+    from repro.launch.engine import Engine, EngineConfig, SamplingParams
 
-Two engines live here:
+This module keeps the old entry points alive through one deprecation
+cycle:
 
-* ``Server`` — the original static batcher: prefill a fixed batch, decode
-  all sequences in lockstep. Simple, but finished/short requests keep
-  burning cache memory and decode FLOPs until the longest one ends.
-* ``Scheduler`` — continuous batching over a block-paged KV cache
-  (models/paged_kv.py): a fixed set of decode *slots*, per-slot positions,
-  EOS/length-based retirement that frees cache blocks immediately, and
-  admission of waiting requests into freed slots mid-flight. The jit'd
-  decode step is shape-stable — (B, 1) tokens, (B,) lengths, (B, NBMAX)
-  block table — so continuous batching costs zero recompiles. Prefill
-  runs per-admission at the request's exact prompt length (one compile
-  per distinct length; callers wanting fewer compiles quantize prompt
-  lengths themselves).
-
-Admission policy: a request is admitted only if the pool can cover its
-full worst-case footprint (prompt + max_new tokens). Conservative — no
-preemption/swap path is needed, the engine cannot deadlock mid-sequence —
-at the cost of some admission headroom. vLLM-style optimistic admission
-with preemption is future work.
+* ``Server`` / ``ServeConfig``   -> Engine(backend="static"). The old
+  left-pad-and-attend-the-pads prefill is gone; ragged prompts now match
+  the unbatched reference exactly.
+* ``Scheduler`` / ``SchedulerConfig`` -> Engine(backend="paged") with
+  ``submit``/``run``/``stats`` adapters (request handles still expose
+  ``.out``/``.done``).
 
 Run: PYTHONPATH=src python -m repro.launch.serve --arch olmo_1b --smoke
 """
@@ -32,18 +22,15 @@ Run: PYTHONPATH=src python -m repro.launch.serve --arch olmo_1b --smoke
 from __future__ import annotations
 
 import argparse
-import collections
 import dataclasses
 import time
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch import sharding as shlib
-from repro.models import paged_kv
+from repro.launch.engine import Engine, EngineConfig, SamplingParams
 from repro.models.model import Model
 from repro.models.transformer import RunCtx
 
@@ -55,318 +42,101 @@ class ServeConfig:
 
 
 class Server:
+    """DEPRECATED: thin adapter over Engine(backend="static").
+
+    Narrower than the PR-1 Server: decoder-only text LMs only (enc-dec
+    raises NotImplementedError from the Engine) and no ``mesh=`` —
+    sharded serving returns at the backend level (see ROADMAP)."""
+
     def __init__(self, model: Model, params, serve_cfg: ServeConfig,
                  ctx: Optional[RunCtx] = None, mesh=None):
-        self.model = model
-        self.cfg = model.cfg
-        self.serve_cfg = serve_cfg
-        self.ctx = ctx or RunCtx(kernel_mode="ref")
-        self.params = params
-        ml = serve_cfg.max_len
-
-        def prefill_step(params, batch):
-            return model.prefill(params, batch, self.ctx, max_len=ml)
-
-        def serve_step(params, cache, tokens, pos):
-            return model.decode_step(params, cache, tokens, pos, self.ctx)
-
         if mesh is not None:
-            shard = shlib.make_shard_ctx(mesh)
-            pspecs = shlib.named(mesh, shlib.param_specs(
-                jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0))),
-                shard))
-            self.params = jax.device_put(params, pspecs)
-            self.prefill_step = jax.jit(prefill_step)
-            self.serve_step = jax.jit(serve_step, donate_argnums=(1,))
-        else:
-            self.prefill_step = jax.jit(prefill_step)
-            self.serve_step = jax.jit(serve_step, donate_argnums=(1,))
+            raise NotImplementedError(
+                "mesh sharding moved to the engine backends (ROADMAP)")
+        self.engine = Engine(model, params,
+                             EngineConfig(backend="static",
+                                          num_slots=serve_cfg.batch_size,
+                                          max_len=serve_cfg.max_len),
+                             ctx=ctx)
 
     def generate(self, prompts: list[list[int]], n_new: int,
                  greedy: bool = True, seed: int = 0):
-        """Pack ragged prompts into one batch; decode n_new tokens each."""
-        B = self.serve_cfg.batch_size
-        assert len(prompts) <= B
-        plen = max(len(p) for p in prompts)
-        toks = np.zeros((B, plen), np.int32)
-        for i, p in enumerate(prompts):
-            toks[i, plen - len(p):] = p          # left-pad (aligned decode)
-        batch = {"tokens": jnp.asarray(toks)}
-        if self.cfg.enc_dec:
-            batch["frames"] = jnp.zeros(
-                (B, self.cfg.encoder_len, self.cfg.d_model), jnp.float32)
-        logits, cache = self.prefill_step(self.params, batch)
-        out = [[] for _ in range(B)]
-        last = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-        key = jax.random.PRNGKey(seed)
-        for t in range(n_new):
-            tok = last[:, None]
-            for i in range(len(prompts)):
-                out[i].append(int(last[i]))
-            logits_t, cache = self.serve_step(self.params, cache, tok,
-                                              jnp.int32(plen + t))
-            if greedy:
-                last = jnp.argmax(logits_t, -1).astype(jnp.int32)
-            else:
-                key, sub = jax.random.split(key)
-                last = jax.random.categorical(sub, logits_t).astype(jnp.int32)
-        return out[: len(prompts)]
-
-
-# ---------------------------------------------------------------------------
-# Continuous batching over the paged KV cache
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: list[int]
-    max_new: int
-    out: list[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+        # per-row derived seeds: requests sharing a SamplingParams.seed
+        # share an RNG stream by design (identical prompts would sample
+        # identically); the old Server drew independent per-row noise,
+        # so the shim preserves that
+        sps = [SamplingParams(max_tokens=n_new,
+                              temperature=0.0 if greedy else 1.0,
+                              seed=seed * 100_003 + i)
+               for i in range(len(prompts))]
+        return self.engine.generate(prompts, sps)
 
 
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
-    num_slots: int = 8          # decode batch width
-    block_size: int = 16        # tokens per cache block
-    num_blocks: int = 512       # pool size (block 0 reserved)
-    max_len: int = 256          # per-sequence position cap
-    eos_id: int = -1            # -1: length-based retirement only
+    num_slots: int = 8
+    block_size: int = 16
+    num_blocks: int = 512
+    max_len: int = 256
+    eos_id: int = -1
     greedy: bool = True
     seed: int = 0
 
 
-@dataclasses.dataclass
-class _Slot:
-    req: Optional[Request] = None
-    blocks: list[int] = dataclasses.field(default_factory=list)
-    last_token: int = 0
-    reserve: int = 0       # worst-case blocks this request may ever hold
-
-
 class Scheduler:
-    """Continuous-batching serve engine over a paged KV cache.
-
-    Host-side state (this object) owns the block allocator, the waiting
-    queue and the numpy mirrors of the block table / lengths; device-side
-    state is the paged pool pytree threaded through the jit'd step. One
-    ``step()`` = admissions + one shape-stable decode step + retirements.
-    """
+    """DEPRECATED: thin adapter over Engine(backend="paged")."""
 
     def __init__(self, model: Model, params, cfg: SchedulerConfig,
                  ctx: Optional[RunCtx] = None):
-        mc = model.cfg
-        if mc.enc_dec or mc.rope_style == "mrope" or mc.visual_prefix:
-            raise NotImplementedError(
-                "continuous batching targets decoder-only text LMs")
-        self.model = model
-        self.params = params
         self.cfg = cfg
-        self.ctx = ctx or RunCtx(kernel_mode="ref")
-        self.layout = paged_kv.PagedLayout(
-            num_slots=cfg.num_slots, num_blocks=cfg.num_blocks,
-            block_size=cfg.block_size, max_len=cfg.max_len)
-        self.alloc = paged_kv.BlockAllocator(self.layout)
-        self.pools = model.init_paged_cache(self.layout)
-        self.table = np.full(
-            (cfg.num_slots, self.layout.max_blocks_per_seq),
-            paged_kv.NULL_BLOCK, np.int32)
-        self.lengths = np.zeros((cfg.num_slots,), np.int32)
-        self.slots = [_Slot() for _ in range(cfg.num_slots)]
-        self.waiting: collections.deque[Request] = collections.deque()
-        self.finished: list[Request] = []
-        self._rng = np.random.default_rng(cfg.seed)
-        self._uid = 0
-        # telemetry for bench_serve
-        self.steps = 0
-        self.slot_steps = 0          # active slots summed over steps
-        self.block_token_steps = 0   # allocated token capacity x steps
-        self.live_token_steps = 0    # live tokens x steps
+        self._n_submitted = 0
+        self.engine = Engine(model, params,
+                             EngineConfig(backend="paged",
+                                          num_slots=cfg.num_slots,
+                                          block_size=cfg.block_size,
+                                          num_blocks=cfg.num_blocks,
+                                          max_len=cfg.max_len,
+                                          eos_id=cfg.eos_id),
+                             ctx=ctx)
 
-        def decode_fn(params, pools, table, lengths, tokens):
-            return model.decode_step_paged(params, pools, table, lengths,
-                                           tokens, self.ctx)
-
-        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
-        self._prefill_cache = {}
-
-    # -- public API -----------------------------------------------------
-
-    def submit(self, prompt: list[int], max_new: int) -> Request:
-        assert len(prompt) >= 1 and max_new >= 1
-        assert len(prompt) + max_new <= self.cfg.max_len, "request too long"
-        assert paged_kv.blocks_for(len(prompt) + max_new,
-                                   self.cfg.block_size) \
-            <= self.layout.usable_blocks, "request exceeds pool capacity"
-        req = Request(self._uid, list(prompt), max_new)
-        self._uid += 1
-        self.waiting.append(req)
-        return req
-
-    @property
-    def num_active(self) -> int:
-        return sum(s.req is not None for s in self.slots)
-
-    @property
-    def has_work(self) -> bool:
-        return bool(self.waiting) or self.num_active > 0
-
-    def run(self, max_steps: int = 100_000) -> list[Request]:
-        """Drive until every submitted request finished; return them."""
-        while self.has_work:
-            before = (self.steps, len(self.finished))
-            self.step()
-            # progress = a decode step ran, or an admission finished a
-            # request outright (EOS straight out of prefill)
-            if before == (self.steps, len(self.finished)) \
-                    and self.num_active == 0:
-                raise RuntimeError(
-                    "scheduler stalled: waiting requests cannot be admitted")
-            if self.steps > max_steps:
-                raise RuntimeError("step budget exceeded")
-        return self.finished
+    def submit(self, prompt: list[int], max_new: int):
+        # per-request derived seeds, as in Server.generate: the PR-1
+        # Scheduler drew independent noise per request, so sharing one
+        # stream (identical prompts -> identical samples) would be a
+        # silent semantics change for non-greedy callers
+        seed = self.cfg.seed * 100_003 + self._n_submitted
+        self._n_submitted += 1
+        sp = SamplingParams(
+            max_tokens=max_new,
+            temperature=0.0 if self.cfg.greedy else 1.0,
+            seed=seed)
+        return self.engine.add_request(prompt, sp)
 
     def step(self):
-        """Admissions, then one decode step over all slots, retirements."""
-        self._admit()
-        active = [i for i, s in enumerate(self.slots) if s.req is not None]
-        if not active:
-            return
-        tokens = np.zeros((self.cfg.num_slots, 1), np.int32)
-        for i in active:
-            # grow into a fresh block when the next write crosses a
-            # block boundary (admission reserved the worst case)
-            L = int(self.lengths[i])
-            if L % self.cfg.block_size == 0 and \
-                    L // self.cfg.block_size >= len(self.slots[i].blocks):
-                (nb,) = self.alloc.alloc(1)
-                self.slots[i].blocks.append(nb)
-                self.table[i, len(self.slots[i].blocks) - 1] = nb
-            tokens[i, 0] = self.slots[i].last_token
-        logits, self.pools = self._decode(
-            self.params, self.pools, jnp.asarray(self.table),
-            jnp.asarray(self.lengths), jnp.asarray(tokens))
-        logits = np.asarray(logits)
-        self.steps += 1
-        self.slot_steps += len(active)
-        self.block_token_steps += self.alloc.used_count * self.cfg.block_size
-        for i in active:
-            slot = self.slots[i]
-            req = slot.req
-            req.out.append(slot.last_token)
-            self.lengths[i] += 1
-            self.live_token_steps += int(self.lengths[i])
-            nxt = self._sample(logits[i])
-            hit_eos = self.cfg.eos_id >= 0 and nxt == self.cfg.eos_id
-            if len(req.out) >= req.max_new or hit_eos:
-                self._retire(i)
-            else:
-                slot.last_token = nxt
+        return self.engine.step()
 
-    # -- internals ------------------------------------------------------
-
-    def _sample(self, logits_row) -> int:
-        if self.cfg.greedy:
-            return int(np.argmax(logits_row))
-        z = logits_row - logits_row.max()
-        p = np.exp(z) / np.exp(z).sum()
-        return int(self._rng.choice(len(p), p=p))
-
-    def _admit(self):
-        while self.waiting:
-            req = self.waiting[0]
-            free_slots = [i for i, s in enumerate(self.slots)
-                          if s.req is None]
-            if not free_slots:
-                return
-            worst = paged_kv.blocks_for(len(req.prompt) + req.max_new,
-                                        self.cfg.block_size)
-            # blocks already promised to active sequences' future growth
-            outstanding = sum(s.reserve - len(s.blocks) for s in self.slots
-                              if s.req is not None)
-            if self.alloc.free_count - outstanding < worst:
-                return                      # FCFS: no skipping ahead
-            self.waiting.popleft()
-            self._place(free_slots[0], req)
-
-    def _place(self, i: int, req: Request):
-        S = len(req.prompt)
-        nbp = paged_kv.blocks_for(S, self.cfg.block_size)
-        block_ids = self.alloc.alloc(nbp)
-        slot = self.slots[i]
-        slot.req = req
-        slot.blocks = block_ids
-        slot.reserve = paged_kv.blocks_for(S + req.max_new,
-                                           self.cfg.block_size)
-        logits, self.pools = self._prefill(S)(
-            self.params, self.pools,
-            jnp.asarray([req.prompt], jnp.int32),
-            jnp.asarray(block_ids, jnp.int32), jnp.int32(i))
-        self.table[i, :] = paged_kv.NULL_BLOCK
-        self.table[i, :nbp] = block_ids
-        self.lengths[i] = S
-        slot.last_token = self._sample(np.asarray(logits)[0, S - 1])
-        # EOS straight out of prefill: retire with zero emitted tokens,
-        # matching the mid-decode convention (EOS is stripped, not sent)
-        if self.cfg.eos_id >= 0 and slot.last_token == self.cfg.eos_id:
-            self._retire(i)
-
-    def _prefill(self, S: int):
-        """Exact-length prefill+pack, jit-cached per prompt length."""
-        fn = self._prefill_cache.get(S)
-        if fn is None:
-            nbp = paged_kv.blocks_for(S, self.cfg.block_size)
-            Sb = nbp * self.cfg.block_size
-            model, layout, ctx = self.model, self.layout, self.ctx
-
-            def prefill_fn(params, pools, tokens, block_ids, slot):
-                logits, dense = model.prefill(params, {"tokens": tokens},
-                                              ctx, max_len=Sb)
-                pools = model.pack_prefill_into_paged(layout, pools, dense,
-                                                      slot, block_ids)
-                return logits, pools
-
-            fn = jax.jit(prefill_fn, donate_argnums=(1,))
-            self._prefill_cache[S] = fn
-        return fn
-
-    def _retire(self, i: int):
-        slot = self.slots[i]
-        slot.req.done = True
-        self.finished.append(slot.req)
-        self.alloc.free(slot.blocks)
-        slot.blocks = []
-        slot.req = None
-        slot.last_token = 0
-        slot.reserve = 0
-        self.table[i, :] = paged_kv.NULL_BLOCK
-        self.lengths[i] = 0
-
-    # -- reporting ------------------------------------------------------
+    def run(self, max_steps: int = 100_000):
+        self.engine.drain(max_steps=max_steps)
+        return self.engine.finished
 
     def stats(self) -> dict:
-        """Cache/occupancy telemetry averaged over the run so far."""
-        cap = self.block_token_steps or 1
-        return {
-            "steps": self.steps,
-            "mean_active_slots": self.slot_steps / max(self.steps, 1),
-            "cache_utilization": self.live_token_steps / cap,
-            "blocks_free": self.alloc.free_count,
-            "blocks_used": self.alloc.used_count,
-        }
+        return self.engine.stats()
+
+    @property
+    def finished(self):
+        return self.engine.finished
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo_1b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--engine", choices=("static", "continuous"),
-                    default="continuous")
+    ap.add_argument("--backend", choices=("static", "paged"),
+                    default="paged")
     ap.add_argument("--n-new", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if args.smoke:
@@ -374,34 +144,23 @@ def main():
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    if args.engine == "static":
-        server = Server(model, params, ServeConfig(batch_size=args.batch,
-                                                   max_len=128))
-        prompts = [list(rng.integers(0, cfg.vocab_size, rng.integers(4, 16)))
-                   for _ in range(args.batch)]
-        t0 = time.time()
-        outs = server.generate(prompts, args.n_new)
-        dt = time.time() - t0
-        tps = args.batch * args.n_new / dt
-        print(f"[static] {args.n_new} tokens x {args.batch} reqs "
-              f"in {dt:.2f}s ({tps:.1f} tok/s)")
-        for i, o in enumerate(outs[:2]):
-            print(f"req{i}: {o[:12]}...")
-        return
-    sched = Scheduler(model, params,
-                      SchedulerConfig(num_slots=args.batch, max_len=128))
-    for _ in range(args.requests):
-        prompt = list(rng.integers(0, cfg.vocab_size,
-                                   int(rng.integers(4, 16))))
-        sched.submit(prompt, int(rng.integers(4, args.n_new + 1)))
+    engine = Engine(model, params,
+                    EngineConfig(backend=args.backend,
+                                 num_slots=args.slots, max_len=128))
+    prompts = [list(rng.integers(0, cfg.vocab_size,
+                                 int(rng.integers(4, 16))))
+               for _ in range(args.requests)]
+    sp = [SamplingParams(max_tokens=int(rng.integers(4, args.n_new + 1)),
+                         temperature=args.temperature, seed=i)
+          for i in range(args.requests)]
     t0 = time.time()
-    done = sched.run()
+    outs = engine.generate(prompts, sp)
     dt = time.time() - t0
-    total = sum(len(r.out) for r in done)
-    print(f"[continuous] {total} tokens over {len(done)} reqs "
-          f"in {dt:.2f}s ({total / dt:.1f} tok/s)  stats={sched.stats()}")
-    for r in done[:2]:
-        print(f"req{r.uid}: {r.out[:12]}...")
+    total = sum(len(o) for o in outs)
+    print(f"[{args.backend}] {total} tokens over {len(outs)} reqs "
+          f"in {dt:.2f}s ({total / dt:.1f} tok/s)  stats={engine.stats()}")
+    for i, o in enumerate(outs[:2]):
+        print(f"req{i}: {o[:12]}...")
 
 
 if __name__ == "__main__":

@@ -116,10 +116,10 @@ def init_kv_cache(cfg, batch: int, max_len: int, dtype, *, window=None):
 
 def decode_attend(params, cfg, x, cache, pos, *, window=None,
                   mrope_positions=None):
-    """Single-token decode. x: (B, 1, d); pos: scalar int32 (same across
-    batch — contiguous decode). The scalar-pos special case of
-    ``decode_attend_batched``. Returns (out, new_cache)."""
-    posv = jnp.full((x.shape[0],), pos, jnp.int32)
+    """Single-token decode. x: (B, 1, d); pos: scalar int32 (contiguous
+    decode) or (B,) int32 (ragged decode — each row at its own depth).
+    The broadcast front-end of ``decode_attend_batched``."""
+    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (x.shape[0],))
     return decode_attend_batched(params, cfg, x, cache, posv, window=window,
                                  mrope_positions=mrope_positions)
 
@@ -171,6 +171,28 @@ def decode_attend_batched(params, cfg, x, cache, pos, *, window=None,
     out = jnp.einsum("bhgs,bhsd->bhgd", probs, vf)
     out = out.reshape(B, 1, hq * hd).astype(x.dtype)
     return out @ params["wo"], {"k": ck, "v": cv}
+
+
+def ring_from_prefill(kv, size, length):
+    """Length-aware ring-cache extraction for right-padded prefill.
+
+    kv: (B, S, Hkv, D) full-sequence keys or values whose first
+    ``length[b]`` positions are real (the rest is bucket padding);
+    size: ring capacity; length: (B,) int32 true lengths (traced).
+    Returns the (B, size, Hkv, D) ring holding positions
+    [max(0, length-size), length) at slot ``pos % size`` — exactly the
+    layout ``decode_attend_batched`` continues from — with never-written
+    slots zeroed (masked by the decode validity predicate).
+    """
+    B = kv.shape[0]
+    s = jnp.arange(size)[None, :]
+    last = length[:, None] - 1                        # (B, 1)
+    # largest position p < length with p % size == s (negative -> unset)
+    p = last - jnp.mod(last - s, size)
+    valid = p >= 0
+    pc = jnp.clip(p, 0, kv.shape[1] - 1)
+    ring = kv[jnp.arange(B)[:, None], pc]             # (B, size, Hkv, D)
+    return jnp.where(valid[..., None, None], ring, 0).astype(kv.dtype)
 
 
 def decode_attend_paged(params, cfg, x, pool, block_table, lengths, *,

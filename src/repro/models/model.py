@@ -44,14 +44,21 @@ class Model:
 
     # -- serving --------------------------------------------------------
 
-    def prefill(self, params, batch, ctx: RunCtx, max_len=None):
+    def prefill(self, params, batch, ctx: RunCtx, max_len=None, length=None):
         if self.cfg.enc_dec:
+            assert length is None, "padded prefill is decoder-only"
             return encdec.prefill(params, self.cfg, batch["tokens"],
                                   batch["frames"], ctx, max_len=max_len)
         return transformer.prefill(params, self.cfg, batch["tokens"], ctx,
                                    max_len=max_len,
                                    visual_embeds=batch.get("visual_embeds"),
-                                   mrope_positions=batch.get("mrope_positions"))
+                                   mrope_positions=batch.get("mrope_positions"),
+                                   length=length)
+
+    def supports_ragged_prefill(self) -> bool:
+        """Right-padded (bucketed) prefill is exact for this model."""
+        return (not self.cfg.enc_dec
+                and transformer.prefill_supports_ragged(self.cfg))
 
     def init_cache(self, batch: int, max_len: int):
         if self.cfg.enc_dec:

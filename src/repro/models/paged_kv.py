@@ -65,10 +65,17 @@ class BlockAllocator:
     """Host-side free-list allocator over physical blocks 1..num_blocks-1.
 
     Tracks ownership so double-frees and leaks are detectable (the
-    scheduler invariant tests rely on this)."""
+    scheduler invariant tests rely on this). Supports the optimistic
+    admission policy of the serving engine: ``can_admit`` applies a
+    free-block *watermark* so new sequences leave headroom for the
+    in-flight ones to grow, and ``select_victim`` encodes the preemption
+    order (LIFO — the most recently admitted sequence is evicted first,
+    so the oldest admission always runs to completion and the engine
+    cannot livelock)."""
 
-    def __init__(self, layout: PagedLayout):
+    def __init__(self, layout: PagedLayout, watermark: int = 0):
         self.layout = layout
+        self.watermark = watermark
         self._free = list(range(layout.num_blocks - 1, 0, -1))  # pop -> 1,2,..
         self._owned: set[int] = set()
 
@@ -82,6 +89,25 @@ class BlockAllocator:
 
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
+
+    def can_admit(self, n: int, *, strict: bool = True) -> bool:
+        """Admission check for a NEW sequence needing ``n`` blocks now.
+
+        ``strict`` keeps ``watermark`` blocks free as growth headroom for
+        already-running sequences; callers pass ``strict=False`` when
+        nothing else is running (the watermark must never starve a sole
+        request — progress beats headroom)."""
+        if not strict:
+            return n <= len(self._free)
+        return n + self.watermark <= len(self._free)
+
+    @staticmethod
+    def select_victim(candidates: list[tuple[int, int]]) -> int:
+        """Pick the preemption victim from ``(slot, admission_ticket)``
+        pairs: LIFO — highest ticket (latest admission) loses."""
+        if not candidates:
+            raise ValueError("no preemption candidates")
+        return max(candidates, key=lambda c: c[1])[0]
 
     def alloc(self, n: int) -> list[int]:
         if n > len(self._free):

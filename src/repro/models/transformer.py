@@ -111,8 +111,18 @@ def _ffn_part(p, cfg, x, ctx):
 
 def apply_block(p, cfg: ModelConfig, kind: str, x, positions, ctx: RunCtx,
                 mrope_positions=None, with_cache: bool = False,
-                cache_len: Optional[int] = None):
-    """Full-sequence block. Returns (x, aux, cache-or-None)."""
+                cache_len: Optional[int] = None, prefill_length=None):
+    """Full-sequence block. Returns (x, aux, cache-or-None).
+
+    ``prefill_length`` ((B,) int32, traced) marks RIGHT-padded prefill:
+    only the first ``prefill_length[b]`` tokens of row b are real. Causal
+    masking already keeps padded keys out of every real query's window,
+    so the forward math needs no change — but emitted decode caches must
+    capture state *at the true length*, not at the padded end (ring
+    buffers, recurrent states, conv tails). Kinds whose state cannot be
+    re-extracted at a traced offset (mlstm/slstm chunk scans) reject it;
+    engines gate on ``prefill_supports_ragged``.
+    """
     xn = layers.apply_norm(cfg.norm, p["ln1"], x)
     cache = None
     if kind in ("attn", "local"):
@@ -120,7 +130,7 @@ def apply_block(p, cfg: ModelConfig, kind: str, x, positions, ctx: RunCtx,
         if with_cache:
             out, cache = _attend_with_cache(p["attn"], cfg, xn, positions,
                                             window, ctx, mrope_positions,
-                                            cache_len)
+                                            cache_len, prefill_length)
         else:
             out = attn_lib.attend(p["attn"], cfg, xn, positions,
                                   window=window, causal=ctx.causal,
@@ -131,13 +141,18 @@ def apply_block(p, cfg: ModelConfig, kind: str, x, positions, ctx: RunCtx,
         return x, aux, cache
     if kind == "rglru":
         if with_cache:
-            out, cache = _rglru_with_cache(p["rec"], cfg, xn, ctx)
+            out, cache = _rglru_with_cache(p["rec"], cfg, xn, ctx,
+                                           prefill_length)
         else:
             out = ssm.apply_rglru_block(p["rec"], cfg, xn,
                                         kernel_mode=ctx.kernel_mode)
         x = _constrain_residual(x + out, ctx)
         x, aux = _ffn_part(p, cfg, x, ctx)
         return x, aux, cache
+    if prefill_length is not None and kind in ("mlstm", "slstm"):
+        raise NotImplementedError(
+            f"{kind} prefill state cannot be extracted at a padded "
+            "length; use exact-length prefill (prefill_supports_ragged)")
     if kind == "mlstm":
         # NOTE: the mLSTM chunk scan stays a loop even in unrolled cost
         # variants (fully unrolling 16 chunks x 7 layers x ~30 einsums
@@ -164,7 +179,7 @@ def apply_block(p, cfg: ModelConfig, kind: str, x, positions, ctx: RunCtx,
 
 
 def _attend_with_cache(params, cfg, xn, positions, window, ctx,
-                       mrope_positions, cache_len):
+                       mrope_positions, cache_len, length=None):
     B, S, _ = xn.shape
     q, k, v = attn_lib._project_qkv(params, cfg, xn, xn)
     if cfg.rope_style == "mrope":
@@ -180,7 +195,14 @@ def _attend_with_cache(params, cfg, xn, positions, window, ctx,
     out = out.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.head_dim)
     out = out @ params["wo"]
     size = min(window, cache_len or S) if window else (cache_len or S)
-    if window and S >= size:
+    if window and length is not None:
+        # Right-padded prefill: rebuild the ring from the true per-row
+        # tail, not the padded one. Linear caches need nothing — pad-key
+        # garbage past ``length`` is masked by the decode validity
+        # predicate and overwritten as decode advances.
+        ck = attn_lib.ring_from_prefill(k, size, length)
+        cv = attn_lib.ring_from_prefill(v, size, length)
+    elif window and S >= size:
         ck, cv = k[:, -size:], v[:, -size:]
         # ring-order the tail so slot (pos % size) stays consistent
         roll = (S % size)
@@ -193,7 +215,7 @@ def _attend_with_cache(params, cfg, xn, positions, window, ctx,
     return out, {"k": ck, "v": cv}
 
 
-def _rglru_with_cache(params, cfg, xn, ctx):
+def _rglru_with_cache(params, cfg, xn, ctx, length=None):
     gate = jax.nn.gelu(xn @ params["w_gate"], approximate=True)
     xb = xn @ params["w_x"]
     y, conv_state = layers.apply_conv1d(params["conv"], xb)
@@ -201,7 +223,21 @@ def _rglru_with_cache(params, cfg, xn, ctx):
     h = __import__("repro.kernels.ops", fromlist=["x"]).rglru_scan(
         a, b, mode=ctx.kernel_mode)
     out = (gate * h.astype(xn.dtype)) @ params["w_out"]
-    return out, {"h": h[:, -1].astype(jnp.float32), "conv": conv_state}
+    if length is None:
+        return out, {"h": h[:, -1].astype(jnp.float32), "conv": conv_state}
+    # Right-padded prefill: the recurrence is causal, so the state at the
+    # true length is just an interior scan step — gather it, and rebuild
+    # the conv tail from the last (width-1) REAL inputs (zero-prefixed,
+    # matching apply_conv1d's initial state for short prompts).
+    B = xn.shape[0]
+    bidx = jnp.arange(B)
+    h_true = h[bidx, jnp.maximum(length - 1, 0)].astype(jnp.float32)
+    width = params["conv"]["w"].shape[0]
+    xc = jnp.concatenate(
+        [jnp.zeros((B, width - 1) + xb.shape[2:], xb.dtype), xb], axis=1)
+    idx = length[:, None] + jnp.arange(width - 1)[None, :]
+    conv_true = xc[bidx[:, None], idx]
+    return out, {"h": h_true, "conv": conv_true}
 
 
 def _mlstm_with_cache(params, cfg, xn, unroll=False):
@@ -387,7 +423,7 @@ def _pattern_runs(pattern):
 
 
 def _apply_groups(params, cfg, x, positions, ctx, mrope_positions=None,
-                  with_cache=False, cache_len=None):
+                  with_cache=False, cache_len=None, prefill_length=None):
     aux_total = jnp.zeros((), jnp.float32)
     caches = {}
     for g, (pattern, count) in enumerate(layer_groups(cfg)):
@@ -401,7 +437,7 @@ def _apply_groups(params, cfg, x, positions, ctx, mrope_positions=None,
                 def one(xb, lp, kind=kind):
                     return apply_block(lp, cfg, kind, xb, positions, ctx,
                                        mrope_positions, with_cache,
-                                       cache_len)
+                                       cache_len, prefill_length)
                 if ctx.remat == "full":
                     one = jax.checkpoint(one)
                 if n == 1:
@@ -625,15 +661,41 @@ def decode_step_paged(params, cfg: ModelConfig, pools, block_table, lengths,
     return _logits(params, cfg, x)[:, 0], new_pools
 
 
+def prefill_supports_ragged(cfg: ModelConfig) -> bool:
+    """True when right-padded (bucketed / ragged-batch) prefill is exact
+    for this architecture: every block kind can re-extract its decode
+    state at a traced true-length offset, and positions are either
+    relative (rope) or absent. The serving engines gate on this and fall
+    back to exact-length prefill otherwise."""
+    kinds = set(cfg.block_pattern)
+    return (kinds <= {"attn", "local", "rglru"}
+            and not cfg.enc_dec and not cfg.visual_prefix
+            and cfg.rope_style in ("rope", "none")
+            and cfg.pos_embed == "none")
+
+
 def prefill(params, cfg: ModelConfig, tokens, ctx: RunCtx, max_len=None,
-            visual_embeds=None, mrope_positions=None):
-    """Prefill: logits for the full prompt + a decode cache at max_len."""
+            visual_embeds=None, mrope_positions=None, length=None):
+    """Prefill: logits for the full prompt + a decode cache at max_len.
+
+    ``length`` ((B,) int32, traced) marks RIGHT-padded prompts: row b's
+    real tokens are ``tokens[b, :length[b]]``. Causal attention already
+    ignores the padded tail for every real query, so logits at real
+    positions are exact; the emitted caches capture per-row state at the
+    true length (see ``apply_block``). Requires
+    ``prefill_supports_ragged(cfg)``.
+    """
     B, S = tokens.shape
+    if length is not None and not prefill_supports_ragged(cfg):
+        raise NotImplementedError(
+            f"{cfg.name}: padded prefill needs attn/local/rglru blocks "
+            "and relative/absent positions")
     x = _embed(params, cfg, tokens, visual_embeds, shard=ctx.shard)
     positions = jnp.arange(S, dtype=jnp.int32)
     x, aux, caches = _apply_groups(params, cfg, x, positions, ctx,
                                    mrope_positions, with_cache=True,
-                                   cache_len=max_len or S)
+                                   cache_len=max_len or S,
+                                   prefill_length=length)
     x = layers.apply_norm(cfg.norm, params["final_norm"], x)
     return _logits(params, cfg, x), caches
 

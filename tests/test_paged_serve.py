@@ -1,14 +1,19 @@
-"""Paged KV cache + continuous batching: kernel/layer/engine equivalence
-and scheduler invariants (tentpole coverage).
+"""Paged KV cache + the unified serving Engine: kernel/layer/engine
+equivalence and scheduler invariants (tentpole coverage).
 
 Contract chain, weakest to strongest:
   1. paged kernel (interpret) == jnp ref oracle, over GQA/MQA, sliding
      window, ragged lengths and block-boundary cases;
   2. paged layer decode == dense layer decode on identical histories;
-  3. continuous-batching Scheduler == static Server greedy outputs,
-     end-to-end through real smoke models;
-  4. scheduler invariants: no block leaked/double-freed, retired slots
-     reused, outputs independent of admission order and slot count.
+  3. right-padded (bucketed) prefill == exact-length prefill, logits and
+     downstream decode;
+  4. Engine equivalence: paged backend == static backend == unbatched
+     oracle, greedy, on ragged prompts (the PR-1 left-pad leak is the
+     regression target), through real smoke models;
+  5. scheduler invariants: no block leaked/double-freed under optimistic
+     admission + LIFO preemption, retired slots reused, outputs
+     independent of admission order and preemption history, bucketed
+     prefill compile cap.
 """
 
 import jax
@@ -19,7 +24,9 @@ from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.kernels import ops, ref
-from repro.launch.serve import Scheduler, SchedulerConfig, ServeConfig, Server
+from repro.launch.engine import Engine, EngineConfig, SamplingParams
+from repro.launch.serve import (Scheduler, SchedulerConfig, ServeConfig,
+                                Server)
 from repro.models import attention as attn_lib
 from repro.models import paged_kv
 from repro.models.model import Model
@@ -103,9 +110,6 @@ def test_paged_ref_matches_dense_gather(rng):
                                    rtol=1e-5, atol=1e-5)
 
 
-# -- 3. layer-level: paged/batched decode vs stock decode ---------------
-
-
 @pytest.mark.parametrize("arch,window", [("olmo_1b", None),
                                          ("h2o_danube_3_4b", 16)])
 def test_layer_decode_paged_matches_dense(rng, arch, window):
@@ -122,8 +126,7 @@ def test_layer_decode_paged_matches_dense(rng, arch, window):
         table = np.zeros((B, layout.max_blocks_per_seq), np.int32)
         alloc = paged_kv.BlockAllocator(layout)
         for b in range(B):
-            ids = alloc.alloc(layout.max_blocks_per_seq)
-            table[b] = ids
+            table[b] = alloc.alloc(layout.max_blocks_per_seq)
         table = jnp.asarray(table)
     else:
         paged = attn_lib.init_kv_cache(cfg, B, 16, jnp.float32,
@@ -144,86 +147,192 @@ def test_layer_decode_paged_matches_dense(rng, arch, window):
                                    err_msg=f"step {t}")
 
 
-# -- 4. engine-level: Scheduler == static Server ------------------------
-
-
-def _greedy_static(model, params, prompts, n_new):
-    server = Server(model, params,
-                    ServeConfig(batch_size=len(prompts), max_len=64))
-    return server.generate(prompts, n_new)
+# -- 3. right-padded (bucketed) prefill == exact-length prefill ---------
 
 
 @pytest.mark.parametrize("arch", ["olmo_1b", "h2o_danube_3_4b",
                                   "recurrentgemma_2b"])
-def test_scheduler_matches_static_server(rng, arch):
-    """Same-length prompts (so the static batcher adds no padding): both
-    engines must produce identical greedy continuations."""
+def test_padded_prefill_matches_exact(rng, arch):
+    """Masked (right-padded) prefill must reproduce exact-length prefill:
+    logits at every real position AND the downstream decode logits (i.e.
+    ring/recurrent/conv cache state was extracted at the true length)."""
     cfg = get_config(arch).smoke()
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    n_new, plen = 6, 7
-    prompts = [list(rng.integers(0, cfg.vocab_size, plen))
-               for _ in range(3)]
-    want = _greedy_static(model, params, prompts, n_new)
-    sched = Scheduler(model, params,
-                      SchedulerConfig(num_slots=2, block_size=4,
-                                      num_blocks=17, max_len=32))
-    reqs = [sched.submit(p, n_new) for p in prompts]
-    sched.run()
-    for r, w in zip(reqs, want):
-        assert r.out == w, f"req{r.uid}: {r.out} != {w}"
+    S, Sb, ML = 11, 16, 32
+    prompt = rng.integers(0, cfg.vocab_size, S)
+    exact_t = jnp.asarray([prompt], jnp.int32)
+    pad_t = jnp.zeros((1, Sb), jnp.int32).at[0, :S].set(exact_t[0])
+    lg_e, cache_e = model.prefill(params, {"tokens": exact_t}, CTX,
+                                  max_len=ML)
+    lg_p, cache_p = model.prefill(params, {"tokens": pad_t}, CTX,
+                                  max_len=ML,
+                                  length=jnp.asarray([S], jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg_p[:, :S]), np.asarray(lg_e),
+                               rtol=1e-5, atol=1e-5)
+    tok = jnp.argmax(lg_e[:, S - 1:S], -1).astype(jnp.int32)
+    for t in range(4):
+        de, cache_e = model.decode_step(params, cache_e, tok,
+                                        jnp.int32(S + t), CTX)
+        dp, cache_p = model.decode_step(params, cache_p, tok,
+                                        jnp.int32(S + t), CTX)
+        np.testing.assert_allclose(np.asarray(dp), np.asarray(de),
+                                   rtol=1e-4, atol=1e-5,
+                                   err_msg=f"decode step {t}")
+        tok = jnp.argmax(dp, -1)[:, None].astype(jnp.int32)
 
 
-def test_scheduler_single_long_prompt_spans_blocks(rng):
+# -- 4. engine-level: paged == static == unbatched oracle ---------------
+
+
+def _oracle_greedy(model, params, prompt, n_new, max_len=64):
+    """Unbatched reference: exact prefill + scalar decode loop."""
+    logits, cache = model.prefill(
+        params, {"tokens": jnp.asarray([prompt], jnp.int32)}, CTX,
+        max_len=max_len)
+    out = [int(jnp.argmax(logits[0, len(prompt) - 1]))]
+    while len(out) < n_new:
+        lg, cache = model.decode_step(
+            params, cache, jnp.asarray([[out[-1]]], jnp.int32),
+            jnp.int32(len(prompt) + len(out) - 1), CTX)
+        out.append(int(jnp.argmax(lg[0])))
+    return out
+
+
+def _engine(model, params, backend, **kw):
+    base = dict(backend=backend, num_slots=2, block_size=4, num_blocks=17,
+                max_len=32)
+    base.update(kw)
+    return Engine(model, params, EngineConfig(**base))
+
+
+@pytest.mark.parametrize("arch", ["olmo_1b", "h2o_danube_3_4b",
+                                  "recurrentgemma_2b"])
+def test_engine_backends_match_oracle_ragged(rng, arch):
+    """RAGGED prompts through one Engine API, both backends: greedy
+    paged == static == unbatched oracle. Regression for the PR-1 static
+    left-pad leak (prefill attended pad keys, shifting short-prompt
+    outputs) — right-padded prefill with true-length cache extraction
+    must match the per-request reference exactly."""
+    cfg = get_config(arch).smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_new = 6
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, L)))
+               for L in (3, 7, 12)]
+    want = [_oracle_greedy(model, params, p, n_new) for p in prompts]
+    sp = SamplingParams(max_tokens=n_new)
+    got_p = _engine(model, params, "paged").generate(prompts, sp)
+    got_s = _engine(model, params, "static",
+                    num_slots=3, max_len=64).generate(prompts, sp)
+    assert got_p == want, f"paged != oracle: {got_p} vs {want}"
+    assert got_s == want, f"static != oracle: {got_s} vs {want}"
+
+
+def test_engine_single_long_prompt_spans_blocks(rng):
     """One prompt spanning several blocks decodes identically to the
     dense path (block-table indirection is invisible)."""
     cfg = get_config("olmo_1b").smoke()
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     prompt = list(rng.integers(0, cfg.vocab_size, 19))  # 5 blocks of 4
-    want = _greedy_static(model, params, [prompt], 8)[0]
+    want = _oracle_greedy(model, params, prompt, 8)
+    eng = _engine(model, params, "paged", num_slots=1, max_len=40)
+    assert eng.generate([prompt], SamplingParams(max_tokens=8)) == [want]
+
+
+def test_engine_exact_prefill_fallback_xlstm(rng):
+    """mlstm/slstm models cannot take padded prefill (chunk-scan state
+    has no traced-length extraction), so the paged backend must fall
+    back to EXACT-length prefill — feeding even one pad token through
+    the recurrence corrupts the decode state — and the static backend
+    must batch equal-length runs. Both must match the unbatched oracle
+    on prompts that are NOT block multiples."""
+    cfg = get_config("xlstm_1_3b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, L)))
+               for L in (3, 7, 7)]       # 7 % block_size(4) != 0
+    want = [_oracle_greedy(model, params, p, 4, max_len=32)
+            for p in prompts]
+    sp = SamplingParams(max_tokens=4)
+    eng = _engine(model, params, "paged")
+    assert eng.generate(prompts, sp) == want
+    assert not eng.stats()["bucketed_prefill"]
+    got_s = _engine(model, params, "static", num_slots=3).generate(
+        prompts, sp)                     # ragged: equal-length grouping
+    assert got_s == want
+
+
+def test_engine_non_pow2_block_size(rng):
+    """Bucketed prefill must round pow-2 buckets up to a block multiple
+    when block_size itself is not a power of two."""
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, L)))
+               for L in (5, 13)]
+    want = [_oracle_greedy(model, params, p, 4) for p in prompts]
+    eng = _engine(model, params, "paged", block_size=6, num_blocks=23)
+    assert eng.generate(prompts, SamplingParams(max_tokens=4)) == want
+    assert eng.stats()["blocks_used"] == 0
+
+
+def test_legacy_server_and_scheduler_shims(rng):
+    """The deprecated launch.serve entry points still work and now agree
+    with the unbatched oracle on ragged prompts."""
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = [[1, 2, 3], [4, 5, 6, 7, 8, 9, 10]]
+    want = [_oracle_greedy(model, params, p, 5) for p in prompts]
+    server = Server(model, params, ServeConfig(batch_size=2, max_len=64))
+    assert server.generate(prompts, 5) == want
     sched = Scheduler(model, params,
-                      SchedulerConfig(num_slots=1, block_size=4,
-                                      num_blocks=17, max_len=40))
-    req = sched.submit(prompt, 8)
+                      SchedulerConfig(num_slots=2, block_size=4,
+                                      num_blocks=17, max_len=32))
+    reqs = [sched.submit(p, 5) for p in prompts]
     sched.run()
-    assert req.out == want
+    assert [r.out for r in reqs] == want and all(r.done for r in reqs)
 
 
 # -- 5. scheduler invariants --------------------------------------------
 
 
-def _run_trace(model, params, prompts_and_targets, *, num_slots,
-               num_blocks=33):
-    sched = Scheduler(model, params,
-                      SchedulerConfig(num_slots=num_slots, block_size=4,
-                                      num_blocks=num_blocks, max_len=32))
-    reqs = [sched.submit(p, n) for p, n in prompts_and_targets]
-    sched.run()
-    return sched, reqs
+def _run_trace(model, params, work, *, num_slots, num_blocks=33,
+               watermark=0):
+    eng = Engine(model, params,
+                 EngineConfig(backend="paged", num_slots=num_slots,
+                              block_size=4, num_blocks=num_blocks,
+                              max_len=32, watermark_blocks=watermark))
+    handles = [eng.add_request(p, SamplingParams(max_tokens=n))
+               for p, n in work]
+    eng.drain()
+    return eng, handles
 
 
-def test_scheduler_no_block_leak_and_slot_reuse(rng):
+def test_engine_no_block_leak_and_slot_reuse(rng):
     cfg = get_config("olmo_1b").smoke()
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     work = [(list(rng.integers(0, cfg.vocab_size,
                                int(rng.integers(2, 12)))),
              int(rng.integers(1, 10))) for _ in range(9)]
-    sched, reqs = _run_trace(model, params, work, num_slots=3)
+    eng, handles = _run_trace(model, params, work, num_slots=3)
+    be = eng.backend
     # more requests than slots -> retired slots were reused
-    assert len(sched.finished) == 9
+    assert len(be.finished) == 9
     # every block returned to the free list; allocator saw no double-free
     # (it raises on double-free) and nothing leaked:
-    assert sched.alloc.used_count == 0
-    assert sched.alloc.free_count == sched.layout.usable_blocks
-    assert np.all(sched.table == paged_kv.NULL_BLOCK)
-    assert np.all(sched.lengths == 0)
-    for r, (p, n) in zip(reqs, work):
-        assert r.done and len(r.out) == n
+    assert be.alloc.used_count == 0
+    assert be.alloc.free_count == be.layout.usable_blocks
+    assert np.all(be.table == paged_kv.NULL_BLOCK)
+    assert np.all(be.lengths == 0)
+    for h, (p, n) in zip(handles, work):
+        assert h.finished and len(h.token_ids) == n
 
 
-def test_scheduler_outputs_independent_of_admission_order(rng):
+def test_engine_outputs_independent_of_admission_order(rng):
     """Greedy outputs are a pure function of (params, prompt): shuffling
     submission order and changing slot count must not change any
     request's tokens (no cross-request contamination through the shared
@@ -234,32 +343,94 @@ def test_scheduler_outputs_independent_of_admission_order(rng):
     work = [(list(rng.integers(0, cfg.vocab_size,
                                int(rng.integers(2, 10)))),
              int(rng.integers(2, 8))) for _ in range(6)]
-    _, reqs_a = _run_trace(model, params, work, num_slots=2)
+    _, hs_a = _run_trace(model, params, work, num_slots=2)
     order = [3, 0, 5, 1, 4, 2]
-    _, reqs_b = _run_trace(model, params, [work[i] for i in order],
-                           num_slots=4)
-    outs_a = {tuple(work[i][0]): reqs_a[i].out for i in range(6)}
+    _, hs_b = _run_trace(model, params, [work[i] for i in order],
+                         num_slots=4)
+    outs_a = {tuple(work[i][0]): hs_a[i].token_ids for i in range(6)}
     for j, i in enumerate(order):
-        assert reqs_b[j].out == outs_a[tuple(work[i][0])]
+        assert hs_b[j].token_ids == outs_a[tuple(work[i][0])]
 
 
-def test_scheduler_queues_when_pool_tight(rng):
-    """Pool too small for all requests at once: admission must block and
-    later admit from the queue, not fail or corrupt."""
+def test_optimistic_admission_with_preemption(rng):
+    """Acceptance: a trace whose WORST-CASE footprints can never be
+    co-resident under PR-1 full reservation (sum exceeds the pool, so
+    admission was serialized) runs fully concurrent under optimistic
+    admission, survives pool exhaustion via LIFO preemption + recompute,
+    finishes with bit-identical greedy outputs and leaks zero blocks
+    (allocator returns to all-free)."""
     cfg = get_config("olmo_1b").smoke()
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    # each request reserves ceil((8+8)/4)=4 blocks; pool has 9 usable ->
-    # at most 2 concurrent of 5 requests
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, 8)))
+               for _ in range(3)]
+    n_new, bs, num_blocks = 16, 4, 14        # 13 usable blocks
+    worst = paged_kv.blocks_for(8 + n_new, bs)
+    assert 3 * worst > num_blocks - 1        # full reservation: never 3-up
+    # uncontended reference (big pool, no preemption possible)
+    ref_eng = Engine(model, params,
+                     EngineConfig(backend="paged", num_slots=3,
+                                  block_size=bs, num_blocks=65,
+                                  max_len=64))
+    want = ref_eng.generate(prompts, SamplingParams(max_tokens=n_new))
+    assert ref_eng.stats()["preemptions"] == 0
+
+    eng = Engine(model, params,
+                 EngineConfig(backend="paged", num_slots=3, block_size=bs,
+                              num_blocks=num_blocks, max_len=64))
+    handles = [eng.add_request(p, SamplingParams(max_tokens=n_new))
+               for p in prompts]
+    max_active = 0
+    while eng.has_work:
+        eng.step()
+        max_active = max(max_active, eng.backend.num_active)
+    st = eng.stats()
+    assert max_active == 3, "optimistic admission never co-admitted all"
+    assert st["preemptions"] >= 1, "pool pressure never triggered"
+    assert [h.token_ids for h in handles] == want
+    assert st["blocks_used"] == 0
+    assert eng.backend.alloc.free_count == eng.backend.layout.usable_blocks
+    assert np.all(eng.backend.table == paged_kv.NULL_BLOCK)
+
+
+def test_bucketed_prefill_compile_cap(rng):
+    """Acceptance: 32 requests over >= 12 distinct prompt lengths compile
+    at most 5 prefill entries (power-of-two buckets, asserted via the jit
+    cache), and every output still matches the unbatched oracle."""
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    lens = [int(rng.integers(3, 21)) for _ in range(32)]
+    assert len(set(lens)) >= 12, "trace not ragged enough"
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, L)))
+               for L in lens]
+    eng = Engine(model, params,
+                 EngineConfig(backend="paged", num_slots=4, block_size=4,
+                              num_blocks=129, max_len=64))
+    got = eng.generate(prompts, SamplingParams(max_tokens=3))
+    st = eng.stats()
+    assert st["bucketed_prefill"]
+    assert st["prefill_compiles"] <= 5, st
+    # spot-check correctness across buckets (cheap subset)
+    for i in (0, 7, 19, 31):
+        assert got[i] == _oracle_greedy(model, params, prompts[i], 3)
+
+
+def test_engine_queues_when_pool_tight(rng):
+    """Pool too small for all requests at once: the engine must finish
+    everything via queueing/preemption without corruption or leaks."""
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
     work = [(list(rng.integers(0, cfg.vocab_size, 8)), 8)
             for _ in range(5)]
-    sched, reqs = _run_trace(model, params, work, num_slots=4,
-                             num_blocks=10)
-    assert all(len(r.out) == 8 for r in reqs)
-    assert sched.alloc.used_count == 0
+    eng, handles = _run_trace(model, params, work, num_slots=4,
+                              num_blocks=10)
+    assert all(len(h.token_ids) == 8 for h in handles)
+    assert eng.backend.alloc.used_count == 0
 
 
-def test_scheduler_eos_retirement(rng):
+def test_engine_eos_retirement(rng):
     """EOS is stripped, never emitted — whether it arrives straight out
     of prefill (zero tokens) or mid-decode — and retirement frees the
     slot for queued work."""
@@ -267,23 +438,18 @@ def test_scheduler_eos_retirement(rng):
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     prompt = list(rng.integers(0, cfg.vocab_size, 7))
-    # discover what the model greedily emits for this prompt
-    probe = Scheduler(model, params,
-                      SchedulerConfig(num_slots=1, block_size=4,
-                                      num_blocks=17, max_len=32))
-    first = probe.submit(list(prompt), 1)
-    probe.run()
-    eos = first.out[0]
-    sched = Scheduler(model, params,
-                      SchedulerConfig(num_slots=1, block_size=4,
-                                      num_blocks=17, max_len=32,
-                                      eos_id=eos))
-    r1 = sched.submit(list(prompt), 20)          # prefill-EOS case
-    r2 = sched.submit(list(rng.integers(0, cfg.vocab_size, 5)), 3)
-    sched.run()
-    assert r1.done and r1.out == []              # stripped, not emitted
-    assert r2.done and len(r2.out) <= 3 and eos not in r2.out
-    assert sched.alloc.used_count == 0
+    eos = _oracle_greedy(model, params, prompt, 1)[0]
+    eng = Engine(model, params,
+                 EngineConfig(backend="paged", num_slots=1, block_size=4,
+                              num_blocks=17, max_len=32, eos_id=eos))
+    r1 = eng.add_request(list(prompt), SamplingParams(max_tokens=20))
+    r2 = eng.add_request(list(rng.integers(0, cfg.vocab_size, 5)),
+                         SamplingParams(max_tokens=3))
+    eng.drain()
+    assert r1.finished and r1.token_ids == []        # stripped, not emitted
+    assert r1.finish_reason == "stop"
+    assert r2.finished and len(r2.token_ids) <= 3 and eos not in r2.token_ids
+    assert eng.backend.alloc.used_count == 0
 
 
 def test_allocator_double_free_detected():
@@ -298,3 +464,59 @@ def test_allocator_double_free_detected():
         alloc.free([paged_kv.NULL_BLOCK])
     with pytest.raises(MemoryError):
         alloc.alloc(4)
+
+
+def test_admission_counts_first_step_growth(rng):
+    """Regression: admission must reserve the candidate's OWN first-step
+    growth block (the fed token is cached the same step). Without
+    blocks_for(cached + 1) a boundary-length request admits, immediately
+    self-preempts in _grow_blocks, and wastes a full prefill per step
+    until the older sequence retires (observed: 5 thrash preemptions on
+    this exact trace)."""
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params,
+                 EngineConfig(backend="paged", num_slots=2, block_size=8,
+                              num_blocks=7, max_len=48))    # 6 usable
+    a = eng.add_request(list(rng.integers(0, cfg.vocab_size, 8)),
+                        SamplingParams(max_tokens=40))
+    for _ in range(27):                  # drive A deep into the pool
+        eng.step()
+    b_prompt = list(map(int, rng.integers(0, cfg.vocab_size, 8)))
+    b = eng.add_request(b_prompt, SamplingParams(max_tokens=4))
+    eng.drain()
+    st = eng.stats()
+    assert st["preemptions"] == 0, f"admission thrash: {st}"
+    assert st["blocks_used"] == 0
+    assert len(a.token_ids) == 40
+    assert b.token_ids == _oracle_greedy(model, params, b_prompt, 4,
+                                         max_len=48)
+
+
+def test_engine_rejects_oversized_request(rng):
+    """A request whose worst case could never fit the pool even alone is
+    a ValueError at add_request, not a mid-flight failure/livelock."""
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params,
+                 EngineConfig(backend="paged", num_slots=1, block_size=4,
+                              num_blocks=5, max_len=256))   # 16 tokens
+    with pytest.raises(ValueError):
+        eng.add_request(list(rng.integers(0, cfg.vocab_size, 10)),
+                        SamplingParams(max_tokens=20))
+
+
+def test_allocator_watermark_and_victim_selection():
+    layout = paged_kv.PagedLayout(num_slots=2, num_blocks=8, block_size=4,
+                                  max_len=16)
+    alloc = paged_kv.BlockAllocator(layout, watermark=2)   # 7 usable
+    assert alloc.can_admit(5, strict=True)
+    assert not alloc.can_admit(6, strict=True)      # watermark headroom
+    assert alloc.can_admit(7, strict=False)         # sole request bypass
+    # LIFO: the latest admission (highest ticket) is evicted first
+    assert paged_kv.BlockAllocator.select_victim(
+        [(0, 5), (2, 9), (1, 7)]) == 2
+    with pytest.raises(ValueError):
+        paged_kv.BlockAllocator.select_victim([])
