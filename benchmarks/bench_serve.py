@@ -11,6 +11,14 @@ through both backends of the unified serving ``Engine``
 * continuous — the paged backend: per-slot retirement + optimistic
   admission mid-flight, LIFO preemption under pool pressure, bucketed
   prefill, block-granular cache occupancy.
+* sharded    — the same paged backend over a (data, model) mesh of the
+  local devices (``--tp`` picks the model-axis degree): params sharded
+  by the 2-D FSDP x TP rules, the block pool head-sharded (each device
+  owns its kv-head shard of every block). Emits mesh shape, whether the
+  head-shard shard_map path was active, and per-device resident cache
+  bytes + utilization. Run under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise a
+  real multi-device mesh on CPU (the CI multi-device job does).
 
 The comparison is at EQUAL CACHE MEMORY (--mem-tokens of KV capacity):
 the static engine must preallocate max_len per lane, so its batch is
@@ -98,8 +106,14 @@ def _replay(engine: Engine, trace) -> dict:
         warm.add(min(b, engine.cfg.max_len - 2))
         b *= 2
     for plen in sorted(warm):
-        engine.generate([trace[0].prompt[:1] * plen],
-                        SamplingParams(max_tokens=2))
+        try:
+            engine.generate([trace[0].prompt[:1] * plen],
+                            SamplingParams(max_tokens=2))
+        except ValueError:
+            # tiny pools reject the top-bucket probe's worst case at
+            # admission — a length no real request can use either, so
+            # there is nothing to warm there
+            continue
     engine.backend.reset_telemetry()
     t0 = time.time()
     pending = list(trace)
@@ -127,6 +141,47 @@ def _replay(engine: Engine, trace) -> dict:
             "blocks_leaked": st.get("blocks_used", 0)}
 
 
+def _per_device_cache_bytes(engine: Engine) -> dict:
+    """Resident paged-cache bytes per device (the head-sharded pool puts
+    1/|tp| of every block on each TP device; per-slot state follows the
+    cache rules)."""
+    import collections
+
+    per = collections.defaultdict(int)
+    for leaf in jax.tree.leaves(engine.backend.pools):
+        for sh in leaf.addressable_shards:
+            per[sh.device.id] += sh.data.nbytes
+    return {str(k): int(v) for k, v in sorted(per.items())}
+
+
+def _replay_sharded(model, params, trace, args) -> dict:
+    """Replay the trace through the paged backend sharded over a
+    (data = n/tp, model = tp) mesh of the local devices. With one local
+    device this degenerates to a (1, 1) mesh — the sharded code path
+    still runs, which is what the single-device CI smoke checks."""
+    from repro.launch.mesh import make_local_mesh, mesh_summary
+
+    # fail loudly on a bad --tp rather than silently benchmarking an
+    # unsharded mesh under the "sharded" label (make_local_mesh raises)
+    mesh = make_local_mesh(args.tp)
+    eng = Engine(model, params, EngineConfig(
+        backend="paged", num_slots=args.slots,
+        block_size=args.block_size,
+        num_blocks=args.mem_tokens // args.block_size + 1,
+        max_len=args.max_len, watermark_blocks=args.watermark,
+        mesh=mesh))
+    res = _replay(eng, trace)
+    res["mesh"] = mesh_summary(mesh)
+    res["head_sharded"] = bool(eng.backend.ctx.decode_head_shard)
+    per_dev = _per_device_cache_bytes(eng)
+    # symmetric layout: every device sees the same live/allocated ratio,
+    # so per-device utilization is the global one over its resident share
+    res["per_device_cache"] = {
+        dev: {"bytes": b, "util": round(res["cache_util"], 4)}
+        for dev, b in per_dev.items()}
+    return res
+
+
 def run_bench(args) -> dict:
     cfg = get_config(args.arch)
     if args.smoke:
@@ -139,7 +194,8 @@ def run_bench(args) -> dict:
     static_batch = max(args.mem_tokens // args.max_len, 1)
     eng_s = Engine(model, params,
                    EngineConfig(backend="static", num_slots=static_batch,
-                                max_len=args.max_len))
+                                max_len=args.max_len,
+                                block_size=args.block_size))
     res_s = _replay(eng_s, trace)
     eng_c = Engine(model, params, EngineConfig(
         backend="paged", num_slots=args.slots,
@@ -147,11 +203,13 @@ def run_bench(args) -> dict:
         num_blocks=args.mem_tokens // args.block_size + 1,
         max_len=args.max_len, watermark_blocks=args.watermark))
     res_c = _replay(eng_c, trace)
+    res_sh = _replay_sharded(model, params, trace, args)
     return {
         "arch": cfg.name,
         "mem_tokens": args.mem_tokens,
         "static": res_s,
         "continuous": res_c,
+        "sharded": res_sh,
         "speedup": res_c["tok_s"] / max(res_s["tok_s"], 1e-9),
     }
 
@@ -161,12 +219,14 @@ def _write_json(result: dict, json_path: str):
     from EITHER entry point (CLI main or benchmarks/run.py)."""
     with open(json_path, "w") as f:
         json.dump(result, f, indent=2, sort_keys=True)
-    if result["continuous"]["blocks_leaked"]:
+    if result["continuous"]["blocks_leaked"] \
+            or result["sharded"]["blocks_leaked"]:
         raise SystemExit("block leak detected")
 
 
 def _emit(result: dict, json_path: str):
     res_s, res_c = result["static"], result["continuous"]
+    res_m = result["sharded"]
     print("name,tok_s,cache_util,lane_eff,useful_tokens,wall_s")
     print(f"serve_static,{res_s['tok_s']:.2f},{res_s['cache_util']:.3f},"
           f"{res_s['lane_eff']:.3f},{res_s['useful']},"
@@ -174,6 +234,12 @@ def _emit(result: dict, json_path: str):
     print(f"serve_continuous,{res_c['tok_s']:.2f},"
           f"{res_c['cache_util']:.3f},{res_c['lane_eff']:.3f},"
           f"{res_c['useful']},{res_c['wall_s']:.2f}")
+    print(f"serve_sharded,{res_m['tok_s']:.2f},"
+          f"{res_m['cache_util']:.3f},{res_m['lane_eff']:.3f},"
+          f"{res_m['useful']},{res_m['wall_s']:.2f}")
+    print(f"# sharded mesh {res_m['mesh']['axes']}; "
+          f"head_sharded={res_m['head_sharded']}; "
+          f"per-device cache {res_m['per_device_cache']}")
     print(f"# equal cache budget {result['mem_tokens']} tokens; "
           f"continuous/static tokens/s: {result['speedup']:.2f}x; "
           f"mean active slots {res_c['mean_active']:.2f}; "
@@ -200,6 +266,11 @@ def _parser():
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree for the sharded section "
+                         "(mesh over local devices; run under "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N to fake devices on CPU)")
     ap.add_argument("--json", default="BENCH_serve.json",
                     help="machine-readable results path")
     return ap
@@ -212,7 +283,8 @@ def run():
     args = _parser().parse_args(["--smoke"])
     result = run_bench(args)
     for name, r in (("serve_static", result["static"]),
-                    ("serve_continuous", result["continuous"])):
+                    ("serve_continuous", result["continuous"]),
+                    ("serve_sharded", result["sharded"])):
         emit(name, 1e6 / max(r["tok_s"], 1e-9),
              f"tok_s={r['tok_s']:.2f} util={r['cache_util']:.3f} "
              f"preemptions={r['preemptions']} "

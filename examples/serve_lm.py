@@ -38,6 +38,11 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: shard the backend over "
+                         "a (data = n/tp, model = tp) mesh of the local "
+                         "devices (fake N CPU devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace for CI")
     args = ap.parse_args()
@@ -49,9 +54,16 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
 
+    mesh = None
+    if args.tp > 1 or len(jax.devices()) > 1:
+        from repro.launch.mesh import make_local_mesh
+
+        mesh = make_local_mesh(args.tp)
+        print(f"mesh: {dict(zip(('data', 'model'), mesh.devices.shape))}")
+
     engine = Engine(model, params, EngineConfig(
         backend=args.backend, num_slots=args.slots, block_size=16,
-        num_blocks=args.mem_tokens // 16 + 1, max_len=128))
+        num_blocks=args.mem_tokens // 16 + 1, max_len=128, mesh=mesh))
 
     handles = []
     for i in range(args.requests):

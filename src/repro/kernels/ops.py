@@ -22,6 +22,8 @@ import jax.numpy as jnp
 
 from . import ref as _ref
 from .flash_attention import flash_attention_pallas
+from .paged_attention import (paged_decode_attention_headshard as
+                              _pa_headshard)
 from .paged_attention import paged_decode_attention_pallas
 from .rglru_scan import rglru_scan_pallas
 from .stx_matmul import stx_matmul_pallas
@@ -139,6 +141,26 @@ def paged_decode_attention(q, k_pool, v_pool, block_table, lengths, *,
     return paged_decode_attention_pallas(q, k_pool, v_pool, block_table,
                                          lengths, window=window, scale=scale,
                                          interpret=interp)
+
+
+def paged_decode_attention_headshard(q, k_pool, v_pool, block_table,
+                                     lengths, *, mesh, tp_axis="model",
+                                     window=None, scale=None, mode="auto",
+                                     interpret=False):
+    """Head-sharded multi-device paged decode attention: each device of
+    ``tp_axis`` runs the stock per-shard op over its kv-head shard of
+    every block (see kernels/paged_attention.py). Same backend dispatch
+    as ``paged_decode_attention``, applied per shard."""
+    use, interp = _use_pallas(mode)
+    interp = interp or interpret
+    if not use and not interp:
+        attend = _ref.paged_decode_attention
+    else:
+        attend = functools.partial(paged_decode_attention_pallas,
+                                   interpret=interp)
+    return _pa_headshard(q, k_pool, v_pool, block_table, lengths,
+                         mesh=mesh, tp_axis=tp_axis, window=window,
+                         scale=scale, attend=attend)
 
 
 def _finalize_expansion(lanes):

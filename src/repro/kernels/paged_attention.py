@@ -126,3 +126,45 @@ def paged_decode_attention_pallas(q, k_pool, v_pool, block_table, lengths, *,
         interpret=interpret,
     )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
       q, k_pool, v_pool)
+
+
+def paged_decode_attention_headshard(q, k_pool, v_pool, block_table,
+                                     lengths, *, mesh, tp_axis="model",
+                                     window=None, scale=None, attend=None,
+                                     interpret=False):
+    """Multi-device paged decode attention over a HEAD-sharded pool.
+
+    The ``decode_seq_shard`` idea applied to the pool layout (the
+    ROADMAP multi-device variant over the block pool): every device on
+    the ``tp_axis`` owns its kv-head shard of EVERY physical block —
+    the software analogue of slicing EPAC's distributed L2 by way
+    rather than by address — while block tables and lengths stay
+    replicated scalars. Because kv-head groups attend independently,
+    each shard runs the stock single-device kernel over its local heads
+    and the sharded output needs NO collective; no pool byte ever
+    crosses the interconnect.
+
+    q: (B, Hq, D) sharded over Hq; pools: (NB, BS, Hkv, D) sharded over
+    Hkv; requires Hq % |tp| == 0 and Hkv % |tp| == 0 (group alignment
+    then holds automatically — see ``paged_kv.head_shard_ok``).
+    ``attend`` is the per-shard op; defaults to the Pallas kernel.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.compat import shard_map
+
+    if attend is None:
+        attend = functools.partial(paged_decode_attention_pallas,
+                                   interpret=interpret)
+    tp = tp_axis
+
+    def local(qv, kp, vp, bt, ln):
+        return attend(qv, kp, vp, bt, ln, window=window, scale=scale)
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, tp, None), P(None, None, tp, None),
+                  P(None, None, tp, None), P(None, None), P(None)),
+        out_specs=P(None, tp, None),
+    )(q, k_pool, v_pool, block_table.astype(jnp.int32),
+      lengths.astype(jnp.int32))

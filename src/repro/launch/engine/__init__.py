@@ -23,6 +23,12 @@ Both sample on-device through one jit'd vectorized sampling step with
 per-slot parameter arrays and per-request RNG streams
 (engine/sampling.py), so outputs are independent of admission order and
 slot placement even for stochastic decoding.
+
+Both backends shard natively over a named mesh
+(``EngineConfig(mesh=...)``): params by the 2-D FSDP x TP rules, the KV
+block pool head-sharded over the TP axis (each device owns its kv-head
+shard of every block), prefill/decode steps compiled against
+NamedSharding — token-identical to single-device serving by contract.
 """
 
 from repro.launch.engine.api import (Engine, EngineConfig, RequestHandle,

@@ -11,10 +11,20 @@ request never pays for caching a token nobody will attend.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Any, Optional, Sequence
 
 from repro.models.model import Model
 from repro.models.transformer import RunCtx
+
+
+def prefill_bucket(n: int, floor: int, cap: int) -> int:
+    """Shared prompt-bucket policy for BOTH backends: the smallest power
+    of two >= max(n, floor), clamped to cap. One helper so static and
+    paged compile the SAME O(log(max_len / floor)) prefill buckets on any
+    trace — the floor (the engine's block size) cuts the sub-block
+    buckets the static backend used to compile on short prompts (7 vs 4
+    compiles on the bench smoke trace before unification)."""
+    return min(max(1 << max(n - 1, 0).bit_length(), floor), cap)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,6 +135,15 @@ class EngineConfig:
     eos_id: int = -1             # -1: length-based retirement only
     watermark_blocks: int = 0    # paged: admission headroom (see alloc)
     bucketed_prefill: bool = True  # pow-2 prompt buckets (when exact)
+    # Mesh-sharded serving: when a jax.sharding.Mesh is given, the
+    # backend shards params (2-D FSDP x TP rules of launch/sharding.py),
+    # the KV block pools (head-sharded over ``tp_axis`` — each device
+    # owns its kv-head shard of every block; block tables and lengths
+    # stay replicated host state) and per-slot caches, and compiles the
+    # prefill/decode steps against NamedSharding so device placement is
+    # stable across steps. Host-side scheduling is unchanged.
+    mesh: Any = None             # jax.sharding.Mesh | None
+    tp_axis: str = "model"       # tensor-parallel mesh axis name
 
 
 class Engine:
@@ -147,6 +166,15 @@ class Engine:
                 "the serving engine targets decoder-only text LMs "
                 "with relative/absent positions")
         ctx = ctx or RunCtx(kernel_mode="ref")
+        if self.cfg.mesh is not None and ctx.shard is None:
+            from repro.launch.sharding import make_shard_ctx
+            from repro.models.paged_kv import head_shard_ok
+
+            shard = make_shard_ctx(self.cfg.mesh,
+                                   tp_axis=self.cfg.tp_axis)
+            ctx = dataclasses.replace(
+                ctx, shard=shard,
+                decode_head_shard=head_shard_ok(mc, shard.tp_size))
         if self.cfg.backend == "paged":
             self.backend = PagedBackend(model, params, self.cfg, ctx)
         elif self.cfg.backend == "static":

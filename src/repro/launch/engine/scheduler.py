@@ -36,17 +36,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.launch import sharding as shlib
 from repro.launch.engine.api import (EngineConfig, RequestHandle,
-                                     RequestOutput, register_sample)
+                                     RequestOutput, prefill_bucket,
+                                     register_sample)
 from repro.launch.engine.sampling import SlotSampler
 from repro.models import paged_kv
 from repro.models.model import Model
 from repro.models.transformer import RunCtx
-
-
-def next_bucket(n: int, floor: int) -> int:
-    """Smallest power of two >= max(n, floor)."""
-    return max(1 << max(n - 1, 0).bit_length(), floor)
 
 
 @dataclasses.dataclass
@@ -72,6 +69,17 @@ class PagedBackend:
         self.alloc = paged_kv.BlockAllocator(
             self.layout, watermark=cfg.watermark_blocks)
         self.pools = model.init_paged_cache(self.layout)
+        # Mesh-sharded serving: commit params and pools to their
+        # NamedShardings once; shlib.jit_step pins every step's outputs
+        # to the same shardings (stable placement, exact pool donation).
+        self.shard = ctx.shard
+        self._pool_sh = None
+        if self.shard is not None:
+            self.params = shlib.place_params(params, self.shard)
+            self._pool_sh = shlib.named(
+                self.shard.mesh,
+                model.paged_cache_specs(self.layout, self.shard))
+            self.pools = jax.device_put(self.pools, self._pool_sh)
         self.table = np.full(
             (cfg.num_slots, self.layout.max_blocks_per_seq),
             paged_kv.NULL_BLOCK, np.int32)
@@ -95,7 +103,8 @@ class PagedBackend:
             return model.decode_step_paged(params, pools, table, lengths,
                                            tokens, self.ctx)
 
-        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+        self._decode = shlib.jit_step(decode_fn, self.shard,
+                                      self._pool_sh, donate=(1,))
         self._prefill_cache = {}
 
     # -- public backend API ---------------------------------------------
@@ -265,7 +274,7 @@ class PagedBackend:
         bs = self.cfg.block_size
         if self.ragged_prefill:
             cap = paged_kv.blocks_for(self.cfg.max_len, bs) * bs
-            Sb = min(paged_kv.blocks_for(next_bucket(S, bs), bs) * bs, cap)
+            Sb = paged_kv.blocks_for(prefill_bucket(S, bs, cap), bs) * bs
             tok_w, key = Sb, Sb
         else:
             Sb = paged_kv.blocks_for(S, bs) * bs
@@ -284,7 +293,8 @@ class PagedBackend:
                                                       slot, block_ids)
                 return logits, pools
 
-            fn = jax.jit(prefill_fn, donate_argnums=(1,))
+            fn = shlib.jit_step(prefill_fn, self.shard, self._pool_sh,
+                                donate=(1,))
             self._prefill_cache[key] = fn
         return fn, tok_w, Sb
 

@@ -26,8 +26,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.launch import sharding as shlib
 from repro.launch.engine.api import (EngineConfig, RequestHandle,
-                                     RequestOutput, register_sample)
+                                     RequestOutput, prefill_bucket,
+                                     register_sample)
 from repro.launch.engine.sampling import SlotSampler
 
 
@@ -54,11 +56,25 @@ class StaticBackend:
         self.slot_steps = 0
         self.live_token_steps = 0
 
+        # Mesh-sharded serving: commit params once; shlib.jit_step pins
+        # the cache's NamedShardings on every jit output so prefill
+        # hands decode a stably-placed cache (batch over data axes,
+        # kv-heads/state width over TP — launch/sharding.py cache rules).
+        self.shard = ctx.shard
+        self._cache_sh = None
+        if self.shard is not None:
+            self.params = shlib.place_params(params, self.shard)
+            shapes = jax.eval_shape(
+                lambda: model.init_cache(B, cfg.max_len))
+            self._cache_sh = shlib.named(
+                self.shard.mesh, shlib.batch_specs(shapes, self.shard))
+
         def decode_fn(params, cache, tokens, lengths):
             return model.decode_step(params, cache, tokens, lengths,
                                      self.ctx)
 
-        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+        self._decode = shlib.jit_step(decode_fn, self.shard,
+                                      self._cache_sh, donate=(1,))
         self._prefill_cache = {}
 
     # -- public backend API ---------------------------------------------
@@ -138,11 +154,11 @@ class StaticBackend:
             self._clear_batch()
 
     def _bucket(self, maxp: int) -> int:
-        from repro.launch.engine.scheduler import next_bucket
-
         if not self.ragged:
             return maxp                   # uniform lengths: exact
-        return min(next_bucket(maxp, 1), self.cfg.max_len)
+        # same floor/cap policy as the paged backend (one shared helper)
+        # so both engines compile identical bucket sets on one trace
+        return prefill_bucket(maxp, self.cfg.block_size, self.cfg.max_len)
 
     def _prefill(self, Lb: int):
         fn = self._prefill_cache.get(Lb)
@@ -155,7 +171,7 @@ class StaticBackend:
                                      max_len=cfg.max_len,
                                      length=lengths if ragged else None)
 
-            fn = jax.jit(prefill_fn)
+            fn = shlib.jit_step(prefill_fn, self.shard, self._cache_sh)
             self._prefill_cache[Lb] = fn
         return fn
 

@@ -27,9 +27,17 @@ def make_mesh(shape, axes):
 
 
 def make_local_mesh(tp: int = 1):
-    """Mesh over whatever devices exist locally: (data = n/tp, model = tp)."""
+    """Mesh over whatever devices exist locally: (data = n/tp, model = tp).
+
+    Raises ValueError (not a bare assert) on a tp that is < 1 or does
+    not divide the local device count — every ``--tp`` CLI funnels here.
+    """
     n = len(jax.devices())
-    assert n % tp == 0
+    if tp < 1 or n % tp != 0:
+        raise ValueError(
+            f"--tp {tp} must be >= 1 and divide the local device count "
+            f"({n}); fake devices with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N")
     return jax.make_mesh((n // tp, tp), ("data", "model"))
 
 

@@ -44,19 +44,28 @@ class ServeConfig:
 class Server:
     """DEPRECATED: thin adapter over Engine(backend="static").
 
-    Narrower than the PR-1 Server: decoder-only text LMs only (enc-dec
-    raises NotImplementedError from the Engine) and no ``mesh=`` —
-    sharded serving returns at the backend level (see ROADMAP)."""
+    Narrower than the PR-1 Server in one way only: decoder-only text LMs
+    (enc-dec raises NotImplementedError from the Engine). ``mesh=`` is
+    wired through again — the Engine backends now shard params/caches
+    over the mesh natively (EngineConfig.mesh), so the PR-1 call shape
+    ``Server(model, params, cfg, mesh=mesh)`` works and emits a
+    DeprecationWarning pointing at the Engine API."""
 
     def __init__(self, model: Model, params, serve_cfg: ServeConfig,
                  ctx: Optional[RunCtx] = None, mesh=None):
         if mesh is not None:
-            raise NotImplementedError(
-                "mesh sharding moved to the engine backends (ROADMAP)")
+            import warnings
+
+            warnings.warn(
+                "Server(mesh=...) is deprecated; use "
+                "Engine(model, params, EngineConfig(mesh=...)) — the "
+                "backends shard natively now", DeprecationWarning,
+                stacklevel=2)
         self.engine = Engine(model, params,
                              EngineConfig(backend="static",
                                           num_slots=serve_cfg.batch_size,
-                                          max_len=serve_cfg.max_len),
+                                          max_len=serve_cfg.max_len,
+                                          mesh=mesh),
                              ctx=ctx)
 
     def generate(self, prompts: list[list[int]], n_new: int,
@@ -137,6 +146,9 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: shard the backend over "
+                         "a (data, model) mesh of the local devices")
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if args.smoke:
@@ -144,9 +156,15 @@ def main():
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
+    mesh = None
+    if args.tp > 1:
+        from repro.launch.mesh import make_local_mesh
+
+        mesh = make_local_mesh(args.tp)
     engine = Engine(model, params,
                     EngineConfig(backend=args.backend,
-                                 num_slots=args.slots, max_len=128))
+                                 num_slots=args.slots, max_len=128,
+                                 mesh=mesh))
     prompts = [list(rng.integers(0, cfg.vocab_size,
                                  int(rng.integers(4, 16))))
                for _ in range(args.requests)]

@@ -69,8 +69,10 @@ class ShardCtx:
 
 
 def make_shard_ctx(mesh, layout: str = "2d",
-                   cache_seq_shard: bool = False) -> ShardCtx:
-    return ShardCtx(mesh=mesh, dp_axes=dp_axes_of(mesh), layout=layout,
+                   cache_seq_shard: bool = False,
+                   tp_axis: str = "model") -> ShardCtx:
+    dp = tuple(a for a in mesh.axis_names if a != tp_axis)
+    return ShardCtx(mesh=mesh, dp_axes=dp, tp_axis=tp_axis, layout=layout,
                     cache_seq_shard=cache_seq_shard)
 
 
@@ -155,10 +157,10 @@ def param_specs(params, shard: ShardCtx):
     return jax.tree_util.tree_map_with_path(spec_of, params)
 
 
-def batch_specs(batch, shard: ShardCtx):
-    """Shard batch-like inputs over the batch axes on their batch dim."""
+def _batch_rule(path, leaf, shard: ShardCtx):
+    """Spec for one batch-like leaf (shared by ``batch_specs`` and the
+    paged-cache spec builder)."""
     dp = shard.batch_axes
-
     tp = shard.tp_axis
 
     # Cache layout: batch over DP; the head/state-width dim over TP
@@ -181,36 +183,54 @@ def batch_specs(batch, shard: ShardCtx):
         "conv": (None, dp, None, tp),         # (L, B, w-1, d)
     }
 
-    def spec_of(path, leaf):
-        last = getattr(path[-1], "key", "")
-        nd = len(leaf.shape)
-        if last in ("tokens", "targets"):
-            return _fit((dp, None), leaf.shape, shard.mesh)
-        if last in ("frames", "visual_embeds"):
-            return _fit((dp, None, None), leaf.shape, shard.mesh)
-        if last == "mrope_positions":
-            return _fit((None, dp, None), leaf.shape, shard.mesh)
-        if last == "pos" or nd == 0:
-            return P()
-        if last in cache_rules:
-            dims = cache_rules[last]
-            ancestors = {getattr(p, "key", None) for p in path[:-1]}
-            if last in ("h", "m") and nd == 4:   # slstm h/m: (L, B, H, hd)
-                dims = (None, dp, tp, None)
-            if last in ("k", "v") and "cross" in ancestors:
-                dims = (None, dp, tp, None, None)  # (L, B, Hkv, Senc, hd)
-            elif last in ("k", "v") and nd == 4:  # unstacked (B, S, Hkv, hd)
-                dims = (dp, None, tp, None)
-            dims = dims[:nd] if len(dims) >= nd else dims + (None,) * (
-                nd - len(dims))
-            return _fit(dims, leaf.shape, shard.mesh)
-        # generic batch-like: (L, B, ...) -> B over dp
-        if nd >= 2:
-            return _fit((None, dp) + (None,) * (nd - 2), leaf.shape,
-                        shard.mesh)
+    last = getattr(path[-1], "key", "")
+    nd = len(leaf.shape)
+    if last in ("tokens", "targets"):
+        return _fit((dp, None), leaf.shape, shard.mesh)
+    if last in ("frames", "visual_embeds"):
+        return _fit((dp, None, None), leaf.shape, shard.mesh)
+    if last == "mrope_positions":
+        return _fit((None, dp, None), leaf.shape, shard.mesh)
+    if last == "pos" or nd == 0:
         return P()
+    if last in cache_rules:
+        dims = cache_rules[last]
+        ancestors = {getattr(p, "key", None) for p in path[:-1]}
+        if last in ("h", "m") and nd == 4:   # slstm h/m: (L, B, H, hd)
+            dims = (None, dp, tp, None)
+        if last in ("k", "v") and "cross" in ancestors:
+            dims = (None, dp, tp, None, None)  # (L, B, Hkv, Senc, hd)
+        elif last in ("k", "v") and nd == 4:  # unstacked (B, S, Hkv, hd)
+            dims = (dp, None, tp, None)
+        dims = dims[:nd] if len(dims) >= nd else dims + (None,) * (
+            nd - len(dims))
+        return _fit(dims, leaf.shape, shard.mesh)
+    # generic batch-like: (L, B, ...) -> B over dp
+    if nd >= 2:
+        return _fit((None, dp) + (None,) * (nd - 2), leaf.shape,
+                    shard.mesh)
+    return P()
 
-    return jax.tree_util.tree_map_with_path(spec_of, batch)
+
+def batch_specs(batch, shard: ShardCtx):
+    """Shard batch-like inputs over the batch axes on their batch dim."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _batch_rule(path, leaf, shard), batch)
+
+
+def paged_pool_spec(leaf, shard: ShardCtx):
+    """HEAD-sharded layout for one full-attention block-pool leaf
+    (L, NB, BS, Hkv, D): every device owns its kv-head shard of EVERY
+    physical block, replicated over the data axes, so block tables and
+    lengths stay replicated host integers and a sequence's blocks never
+    migrate as it grows (the ``decode_seq_shard`` idea applied to the
+    pool — EPAC's interleaved L2 slices, sliced by head instead of
+    address). ``_fit`` drops the head sharding when Hkv does not divide
+    |tp|. The caller (``transformer.paged_cache_specs``) selects pool
+    leaves BY LAYER KIND, never by shape, so ring buffers can never be
+    misclassified."""
+    return _fit((None, None, None, shard.tp_axis, None), leaf.shape,
+                shard.mesh)
 
 
 def opt_state_specs(pspecs, opt_state_shapes, shard: ShardCtx):
@@ -243,6 +263,32 @@ def opt_state_specs(pspecs, opt_state_shapes, shard: ShardCtx):
 def named(mesh, spec_tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def place_params(params, shard: ShardCtx):
+    """Commit a param tree to its NamedShardings (the layout rules
+    above). One-time placement; jit then reads the committed shardings."""
+    return jax.device_put(
+        params, named(shard.mesh, param_specs(params, shard)))
+
+
+def replicated(shard: ShardCtx):
+    """The fully-replicated NamedSharding on this mesh."""
+    return NamedSharding(shard.mesh, P())
+
+
+def jit_step(fn, shard: Optional[ShardCtx], state_shardings, *,
+             donate=()):
+    """jit a ``(logits, device_state)``-returning serving step. Under a
+    mesh, pin the outputs — logits replicated (they are fetched to host
+    every step anyway), state on its NamedShardings — so device
+    placement is stable step-to-step and state donation stays exact.
+    Without a mesh this is a plain jit. ONE helper so every backend
+    step site stays on the same placement policy."""
+    if shard is None:
+        return jax.jit(fn, donate_argnums=donate)
+    return jax.jit(fn, donate_argnums=donate,
+                   out_shardings=(replicated(shard), state_shardings))
 
 
 def constrain(x, shard: Optional[ShardCtx], *dims):

@@ -233,6 +233,42 @@ def decode_attend_paged(params, cfg, x, pool, block_table, lengths, *,
     return out @ params["wo"], {"k": kp, "v": vp}
 
 
+def decode_attend_paged_headshard(params, cfg, x, pool, block_table,
+                                  lengths, shard, *, kernel_mode="auto"):
+    """Tensor-parallel ``decode_attend_paged`` over a HEAD-sharded pool.
+
+    Projections stay under GSPMD (wq/wk/wv are column-parallel, wo is
+    row-parallel per launch/sharding.py), the new token's K/V write is a
+    head-aligned scatter into the sharded pool, and the block gather +
+    online softmax run under shard_map with every device holding its
+    kv-head shard of every block (kops.paged_decode_attention_headshard)
+    — so the pool, by far the largest serving tensor, never crosses the
+    interconnect and GSPMD can never fall back to all-gathering it.
+    Requires ``paged_kv.head_shard_ok`` (head counts divide |tp|).
+    """
+    B = x.shape[0]
+    hq, hd = cfg.n_heads, cfg.head_dim
+    bs = pool["k"].shape[1]
+    q, k, v = _project_qkv(params, cfg, x, x)
+    posb = lengths[:, None].astype(jnp.int32)
+    if cfg.rope_style == "rope":
+        q = layers.apply_rope(q, posb, cfg.rope_theta)
+        k = layers.apply_rope(k, posb, cfg.rope_theta)
+
+    bidx = jnp.arange(B)
+    logical = jnp.clip(lengths // bs, 0, block_table.shape[1] - 1)
+    phys = block_table[bidx, logical]
+    off = lengths % bs
+    kp = pool["k"].at[phys, off].set(k[:, 0])
+    vp = pool["v"].at[phys, off].set(v[:, 0])
+
+    out = kops.paged_decode_attention_headshard(
+        q.reshape(B, hq, hd), kp, vp, block_table, lengths + 1,
+        mesh=shard.mesh, tp_axis=shard.tp_axis, mode=kernel_mode)
+    out = out.reshape(B, 1, hq * hd).astype(x.dtype)
+    return out @ params["wo"], {"k": kp, "v": vp}
+
+
 def decode_attend_seqshard(params, cfg, x, cache, pos, shard,
                            mrope_positions=None):
     """Flash-decoding: KV cache sharded over the TP axis on the SEQUENCE

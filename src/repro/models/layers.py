@@ -216,6 +216,22 @@ def init_conv1d(key, dim: int, width: int, dtype):
             "b": jnp.zeros((dim,), dtype)}
 
 
+def conv_state_at(x, width, length):
+    """Causal-conv carry state at a traced per-row offset.
+
+    x: (B, S, D) conv INPUTS whose first ``length[b]`` positions are real
+    (right-padded prefill); length: (B,) int32. Returns the
+    (B, width-1, D) tail ``apply_conv1d`` would carry had row b stopped
+    at ``length[b]`` — the last width-1 real inputs, zero-prefixed for
+    rows shorter than the kernel.
+    """
+    B = x.shape[0]
+    xc = jnp.concatenate(
+        [jnp.zeros((B, width - 1) + x.shape[2:], x.dtype), x], axis=1)
+    idx = length[:, None] + jnp.arange(width - 1)[None, :]
+    return xc[jnp.arange(B)[:, None], idx]
+
+
 def apply_conv1d(params, x, state=None):
     """Causal depthwise conv. x: (B, S, D); state: (B, width-1, D) or None.
 

@@ -80,6 +80,11 @@ class Model:
             raise NotImplementedError("paged serving is decoder-only")
         return transformer.init_paged_cache(self.cfg, layout)
 
+    def paged_cache_specs(self, layout, shard):
+        """PartitionSpecs for ``init_paged_cache`` under a mesh (block
+        pools head-sharded over TP; per-slot state on cache rules)."""
+        return transformer.paged_cache_specs(self.cfg, layout, shard)
+
     def pack_prefill_into_paged(self, layout, pools, dense_caches, slot,
                                 block_ids):
         return transformer.pack_prefill_into_paged(

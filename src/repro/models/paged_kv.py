@@ -127,6 +127,17 @@ class BlockAllocator:
             self._free.append(b)
 
 
+def head_shard_ok(cfg, tp_size: int) -> bool:
+    """True when the head-sharded pool layout is exact for this model:
+    each device of the TP axis owns a whole kv-head shard of every block
+    (and the matching query-head groups), so the per-device paged
+    attention needs no collective. GQA group alignment follows from both
+    divisibilities: device i's query heads [i*Hq/t, (i+1)*Hq/t) map onto
+    exactly its kv heads [i*Hkv/t, (i+1)*Hkv/t)."""
+    return (tp_size > 1 and cfg.n_heads % tp_size == 0
+            and cfg.n_kv_heads % tp_size == 0)
+
+
 # ---------------------------------------------------------------------------
 # Device-side pytree init / prefill packing
 # ---------------------------------------------------------------------------
@@ -216,6 +227,6 @@ def pack_prefill_state(state, dense_state, slot):
 
 __all__ = [
     "NULL_BLOCK", "PagedLayout", "BlockAllocator", "blocks_for",
-    "init_layer_pool", "init_slot_tables", "pack_prefill_kv",
-    "pack_prefill_ring", "pack_prefill_state",
+    "head_shard_ok", "init_layer_pool", "init_slot_tables",
+    "pack_prefill_kv", "pack_prefill_ring", "pack_prefill_state",
 ]

@@ -145,13 +145,18 @@ def mlstm_step(q, k, v, ig, fg, state):
     return h.astype(q.dtype), (C, n, m_new)
 
 
-def _mlstm_qkv_gates(params, cfg, xn, conv_state=None):
+def _mlstm_qkv_gates(params, cfg, xn, conv_state=None, length=None):
     B, S, d = xn.shape
     H = cfg.n_heads
     hd = d // H
     up = xn @ params["w_up"]
     c, z = jnp.split(up, 2, axis=-1)
     cc, conv_state = layers.apply_conv1d(params["conv"], c, conv_state)
+    if length is not None:
+        # Right-padded prefill: the emitted carry must hold the last
+        # width-1 REAL conv inputs, not the padded tail.
+        conv_state = layers.conv_state_at(
+            c, params["conv"]["w"].shape[0], length)
     cc = jax.nn.silu(cc)
     split_heads = lambda t: t.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
     q = split_heads(cc @ params["wq"])
@@ -160,6 +165,19 @@ def _mlstm_qkv_gates(params, cfg, xn, conv_state=None):
     gates = c @ params["w_if"] + params["b_if"]
     ig, fg = jnp.split(gates, 2, axis=-1)               # (B, S, H)
     return q, k, v, ig.transpose(0, 2, 1), fg.transpose(0, 2, 1), z, conv_state
+
+
+def freeze_gates_past(ig, fg, length):
+    """Mask mLSTM gate pre-activations past each row's true length so the
+    chunkwise scan carries state FROZEN at ``length`` — the trick
+    ``mlstm_chunkwise`` plays on its own chunk-tail padding, made exact:
+    input gate -> -1e30 (zero key weight) and forget gate -> 1e30
+    (log_sigmoid(1e30) == -0.0, so pad steps decay nothing). The carried
+    (C, n, m) then equals the state at ``length``; pad-position outputs
+    are garbage and must not be read. ig/fg: (B, H, S); length: (B,)."""
+    pad = jnp.arange(ig.shape[-1])[None, None, :] >= length[:, None, None]
+    return (jnp.where(pad, -1e30, ig).astype(ig.dtype),
+            jnp.where(pad, 1e30, fg).astype(fg.dtype))
 
 
 def apply_mlstm_block(params, cfg, xn, chunk: int = 256, unroll: bool = False):

@@ -43,6 +43,10 @@ class RunCtx:
     ce_chunk: int = 0          # >0: scan CE over seq chunks (no full logits)
     moe_mode: str = "gather"   # 'gather' (FSDP weight gather) | 'partial'
     decode_seq_shard: bool = False  # flash-decoding LSE combine over tp
+    # Paged serving under a mesh: run decode attention through the
+    # head-sharded pool shard_map (each device owns its kv-head shard of
+    # every block). Set by the Engine when paged_kv.head_shard_ok holds.
+    decode_head_shard: bool = False
     # Residual-stream constraint after every block:
     #   'none'  — GSPMD chooses; observed: it DELAYS the row-parallel
     #             reduction into the next norm's f32 upcast, so the
@@ -118,10 +122,11 @@ def apply_block(p, cfg: ModelConfig, kind: str, x, positions, ctx: RunCtx,
     only the first ``prefill_length[b]`` tokens of row b are real. Causal
     masking already keeps padded keys out of every real query's window,
     so the forward math needs no change — but emitted decode caches must
-    capture state *at the true length*, not at the padded end (ring
-    buffers, recurrent states, conv tails). Kinds whose state cannot be
-    re-extracted at a traced offset (mlstm/slstm chunk scans) reject it;
-    engines gate on ``prefill_supports_ragged``.
+    capture state *at the true length*, not at the padded end. Attention
+    rings and the RG-LRU gather/recompute their state at the true
+    boundary; mlstm freezes its chunk scan past it by gate masking and
+    slstm by carry selection, so every decoder-only kind is exact under
+    right padding (``prefill_supports_ragged``).
     """
     xn = layers.apply_norm(cfg.norm, p["ln1"], x)
     cache = None
@@ -149,10 +154,6 @@ def apply_block(p, cfg: ModelConfig, kind: str, x, positions, ctx: RunCtx,
         x = _constrain_residual(x + out, ctx)
         x, aux = _ffn_part(p, cfg, x, ctx)
         return x, aux, cache
-    if prefill_length is not None and kind in ("mlstm", "slstm"):
-        raise NotImplementedError(
-            f"{kind} prefill state cannot be extracted at a padded "
-            "length; use exact-length prefill (prefill_supports_ragged)")
     if kind == "mlstm":
         # NOTE: the mLSTM chunk scan stays a loop even in unrolled cost
         # variants (fully unrolling 16 chunks x 7 layers x ~30 einsums
@@ -161,14 +162,16 @@ def apply_block(p, cfg: ModelConfig, kind: str, x, positions, ctx: RunCtx,
         # undercount of the mLSTM *mixing* flops (projections dominate
         # and are counted exactly) — recorded in EXPERIMENTS.md §Roofline.
         if with_cache:
-            out, cache = _mlstm_with_cache(p["mix"], cfg, xn)
+            out, cache = _mlstm_with_cache(p["mix"], cfg, xn,
+                                           length=prefill_length)
         else:
             out = ssm.apply_mlstm_block(p["mix"], cfg, xn,
                                         chunk=cfg.mlstm_chunk)
         return x + out, jnp.zeros((), jnp.float32), cache
     if kind == "slstm":
         if with_cache:
-            out, cache = _slstm_with_cache(p["mix"], cfg, xn)
+            out, cache = _slstm_with_cache(p["mix"], cfg, xn,
+                                           length=prefill_length)
         else:
             out = ssm.apply_slstm_block(p["mix"], cfg, xn)
         return x + out, jnp.zeros((), jnp.float32), cache
@@ -230,19 +233,22 @@ def _rglru_with_cache(params, cfg, xn, ctx, length=None):
     # the conv tail from the last (width-1) REAL inputs (zero-prefixed,
     # matching apply_conv1d's initial state for short prompts).
     B = xn.shape[0]
-    bidx = jnp.arange(B)
-    h_true = h[bidx, jnp.maximum(length - 1, 0)].astype(jnp.float32)
-    width = params["conv"]["w"].shape[0]
-    xc = jnp.concatenate(
-        [jnp.zeros((B, width - 1) + xb.shape[2:], xb.dtype), xb], axis=1)
-    idx = length[:, None] + jnp.arange(width - 1)[None, :]
-    conv_true = xc[bidx[:, None], idx]
-    return out, {"h": h_true, "conv": conv_true}
+    h_true = h[jnp.arange(B), jnp.maximum(length - 1, 0)]
+    conv_true = layers.conv_state_at(xb, params["conv"]["w"].shape[0],
+                                     length)
+    return out, {"h": h_true.astype(jnp.float32), "conv": conv_true}
 
 
-def _mlstm_with_cache(params, cfg, xn, unroll=False):
+def _mlstm_with_cache(params, cfg, xn, unroll=False, length=None):
     B, S, d = xn.shape
-    q, k, v, ig, fg, z, conv_state = ssm._mlstm_qkv_gates(params, cfg, xn)
+    q, k, v, ig, fg, z, conv_state = ssm._mlstm_qkv_gates(
+        params, cfg, xn, length=length)
+    if length is not None:
+        # Right-padded prefill: freeze the chunk scan past the true
+        # length (input gate off, forget gate exactly 1), so the carried
+        # (C, n, m) IS the state at ``length``; pad-row h is garbage and
+        # never read (logits are taken at real positions only).
+        ig, fg = ssm.freeze_gates_past(ig, fg, length)
     h, (C, n, m) = ssm.mlstm_chunkwise(q, k, v, ig, fg,
                                        chunk=min(cfg.mlstm_chunk, S),
                                        unroll=unroll)
@@ -252,7 +258,7 @@ def _mlstm_with_cache(params, cfg, xn, unroll=False):
     return out, {"C": C, "n": n, "m": m, "conv": conv_state}
 
 
-def _slstm_with_cache(params, cfg, xn):
+def _slstm_with_cache(params, cfg, xn, length=None):
     B, S, d = xn.shape
     H = cfg.n_heads
     hd = d // H
@@ -260,12 +266,21 @@ def _slstm_with_cache(params, cfg, xn):
     state = (jnp.zeros((B, H, hd), jnp.float32),) * 3 + (
         jnp.full((B, H, hd), -1e30, jnp.float32),)
 
-    def step(st, xp):
-        hidden, st = ssm._slstm_cell(params, cfg, xp, st)
+    def step(st, inp):
+        xp, t = inp
+        hidden, st_new = ssm._slstm_cell(params, cfg, xp, st)
+        if length is None:
+            return st_new, hidden
+        # Right-padded prefill: keep the pre-step carry on pad rows so
+        # the final state is frozen bit-exactly at each true length.
+        keep = (t < length)[:, None, None]
+        st = tuple(jnp.where(keep, new, old)
+                   for new, old in zip(st_new, st))
         return st, hidden
 
-    (h_f, c_f, n_f, m_f), hs = jax.lax.scan(step, state,
-                                            jnp.moveaxis(x_parts, 1, 0))
+    (h_f, c_f, n_f, m_f), hs = jax.lax.scan(
+        step, state, (jnp.moveaxis(x_parts, 1, 0),
+                      jnp.arange(S, dtype=jnp.int32)))
     h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(xn.dtype)
     h = layers.group_norm(h, params["gn_scale"], H)
     out = layers.apply_mlp(params["ff"], h, "gelu")
@@ -321,10 +336,15 @@ def apply_block_decode_paged(p, cfg: ModelConfig, kind: str, x, cache,
     if kind in ("attn", "local"):
         window = _window_for(cfg, kind)
         if window is None:
-            out, cache = attn_lib.decode_attend_paged(
-                p["attn"], cfg, xn, cache, block_table, lengths,
-                mrope_positions=mrope_positions,
-                kernel_mode=ctx.kernel_mode)
+            if ctx.decode_head_shard and ctx.shard is not None:
+                out, cache = attn_lib.decode_attend_paged_headshard(
+                    p["attn"], cfg, xn, cache, block_table, lengths,
+                    ctx.shard, kernel_mode=ctx.kernel_mode)
+            else:
+                out, cache = attn_lib.decode_attend_paged(
+                    p["attn"], cfg, xn, cache, block_table, lengths,
+                    mrope_positions=mrope_positions,
+                    kernel_mode=ctx.kernel_mode)
         else:
             out, cache = attn_lib.decode_attend_batched(
                 p["attn"], cfg, xn, cache, lengths, window=window,
@@ -595,6 +615,30 @@ def init_paged_cache(cfg: ModelConfig, layout):
     return pools
 
 
+def paged_cache_specs(cfg: ModelConfig, layout, shard):
+    """PartitionSpecs for the ``init_paged_cache`` tree under a mesh:
+    block pools head-sharded over TP (every device owns its kv-head
+    shard of every block, replicated over data axes), ring buffers and
+    SSM state on the standard per-slot cache rules. Pool leaves are
+    identified by LAYER KIND (the same walk as ``init_paged_cache``),
+    not by shape."""
+    from repro.launch import sharding as shlib
+
+    shapes = jax.eval_shape(lambda: init_paged_cache(cfg, layout))
+    specs = {}
+    for g, (pattern, count) in enumerate(layer_groups(cfg)):
+        gp = {}
+        for pi, kind in enumerate(pattern):
+            sub = shapes[f"g{g}"][f"p{pi}"]
+            if kind in ("attn", "local") and _window_for(cfg, kind) is None:
+                gp[f"p{pi}"] = jax.tree.map(
+                    lambda t: shlib.paged_pool_spec(t, shard), sub)
+            else:
+                gp[f"p{pi}"] = shlib.batch_specs(sub, shard)
+        specs[f"g{g}"] = gp
+    return specs
+
+
 def pack_prefill_into_paged(cfg: ModelConfig, layout, pools, dense_caches,
                             slot, block_ids):
     """Install a batch-1 prefilled dense cache (from ``prefill`` with
@@ -663,12 +707,13 @@ def decode_step_paged(params, cfg: ModelConfig, pools, block_table, lengths,
 
 def prefill_supports_ragged(cfg: ModelConfig) -> bool:
     """True when right-padded (bucketed / ragged-batch) prefill is exact
-    for this architecture: every block kind can re-extract its decode
-    state at a traced true-length offset, and positions are either
-    relative (rope) or absent. The serving engines gate on this and fall
-    back to exact-length prefill otherwise."""
+    for this architecture: every block kind captures its decode state at
+    the traced true length (attention rings and RG-LRU by gather/
+    recompute, mlstm by gate freezing, slstm by carry selection), and
+    positions are either relative (rope) or absent. The serving engines
+    gate on this and fall back to exact-length prefill otherwise."""
     kinds = set(cfg.block_pattern)
-    return (kinds <= {"attn", "local", "rglru"}
+    return (kinds <= {"attn", "local", "rglru", "mlstm", "slstm"}
             and not cfg.enc_dec and not cfg.visual_prefix
             and cfg.rope_style in ("rope", "none")
             and cfg.pos_embed == "none")
@@ -688,8 +733,8 @@ def prefill(params, cfg: ModelConfig, tokens, ctx: RunCtx, max_len=None,
     B, S = tokens.shape
     if length is not None and not prefill_supports_ragged(cfg):
         raise NotImplementedError(
-            f"{cfg.name}: padded prefill needs attn/local/rglru blocks "
-            "and relative/absent positions")
+            f"{cfg.name}: padded prefill needs a decoder-only stack "
+            "with relative/absent positions")
     x = _embed(params, cfg, tokens, visual_embeds, shard=ctx.shard)
     positions = jnp.arange(S, dtype=jnp.int32)
     x, aux, caches = _apply_groups(params, cfg, x, positions, ctx,

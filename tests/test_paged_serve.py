@@ -151,7 +151,7 @@ def test_layer_decode_paged_matches_dense(rng, arch, window):
 
 
 @pytest.mark.parametrize("arch", ["olmo_1b", "h2o_danube_3_4b",
-                                  "recurrentgemma_2b"])
+                                  "recurrentgemma_2b", "xlstm_1_3b"])
 def test_padded_prefill_matches_exact(rng, arch):
     """Masked (right-padded) prefill must reproduce exact-length prefill:
     logits at every real position AND the downstream decode logits (i.e.
@@ -241,13 +241,12 @@ def test_engine_single_long_prompt_spans_blocks(rng):
     assert eng.generate([prompt], SamplingParams(max_tokens=8)) == [want]
 
 
-def test_engine_exact_prefill_fallback_xlstm(rng):
-    """mlstm/slstm models cannot take padded prefill (chunk-scan state
-    has no traced-length extraction), so the paged backend must fall
-    back to EXACT-length prefill — feeding even one pad token through
-    the recurrence corrupts the decode state — and the static backend
-    must batch equal-length runs. Both must match the unbatched oracle
-    on prompts that are NOT block multiples."""
+def test_engine_xlstm_ragged_prefill(rng):
+    """mlstm/slstm prefill is now exact under right padding (gate
+    freezing / carry selection hold the recurrent state at the true
+    length), so BOTH backends take the bucketed path for xLSTM and must
+    still match the unbatched oracle on prompts that are NOT block
+    multiples."""
     cfg = get_config("xlstm_1_3b").smoke()
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -258,10 +257,32 @@ def test_engine_exact_prefill_fallback_xlstm(rng):
     sp = SamplingParams(max_tokens=4)
     eng = _engine(model, params, "paged")
     assert eng.generate(prompts, sp) == want
-    assert not eng.stats()["bucketed_prefill"]
+    assert eng.stats()["bucketed_prefill"]
     got_s = _engine(model, params, "static", num_slots=3).generate(
-        prompts, sp)                     # ragged: equal-length grouping
+        prompts, sp)                     # ragged: one right-padded batch
     assert got_s == want
+
+
+def test_xlstm_bucketed_prefill_compile_cap(rng):
+    """Regression for the exact-length fallback that compiled one prefill
+    jit per distinct prompt length: xLSTM must now ride the power-of-two
+    buckets (mirror of the paged <= 5 compiles test), outputs unchanged."""
+    cfg = get_config("xlstm_1_3b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    lens = [int(rng.integers(3, 21)) for _ in range(12)]
+    assert len(set(lens)) >= 8, "trace not ragged enough"
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, L)))
+               for L in lens]
+    eng = Engine(model, params,
+                 EngineConfig(backend="paged", num_slots=4, block_size=4,
+                              num_blocks=129, max_len=64))
+    got = eng.generate(prompts, SamplingParams(max_tokens=3))
+    st = eng.stats()
+    assert st["bucketed_prefill"]
+    assert st["prefill_compiles"] <= 5, st
+    for i in (0, 5, 11):
+        assert got[i] == _oracle_greedy(model, params, prompts[i], 3)
 
 
 def test_engine_non_pow2_block_size(rng):
