@@ -19,6 +19,14 @@ through both backends of the unified serving ``Engine``
   bytes + utilization. Run under
   ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise a
   real multi-device mesh on CPU (the CI multi-device job does).
+* replicas   — ``--dp`` data-parallel paged replicas behind ONE shared
+  admission queue (ReplicaSet, least-loaded-blocks dispatch), each
+  replica on its own data-axis submesh with its own KV pool, against a
+  single replica of the identical per-replica config on the same
+  (heavier, dp-scaled) trace. Emits aggregate tok/s, the speedup over
+  one replica, per-replica utilization/dispatch share, and shared-queue
+  wait — the fixed-per-replica scale-out story (EPAC: more tiles behind
+  the same hub).
 
 The comparison is at EQUAL CACHE MEMORY (--mem-tokens of KV capacity):
 the static engine must preallocate max_len per lane, so its batch is
@@ -90,10 +98,9 @@ def _wait_until(t0: float, arrival: float):
         time.sleep(dt)
 
 
-def _replay(engine: Engine, trace) -> dict:
+def _warm(engine, trace):
     """Warm the jit caches on the engine itself (a second engine would
-    double the pool memory the benchmark claims to budget), reset
-    telemetry, then replay the trace against the arrival clock."""
+    double the pool memory the benchmark claims to budget)."""
     # max_tokens=2, not 1: the first token is sampled at prefill, so a
     # 1-token request retires without ever compiling the decode step.
     # Beyond the trace's prompt lengths, also warm every power-of-two
@@ -105,16 +112,38 @@ def _replay(engine: Engine, trace) -> dict:
     while b < engine.cfg.max_len * 2:     # include the TOP bucket
         warm.add(min(b, engine.cfg.max_len - 2))
         b *= 2
+    # the paged backend traces one prefill jit per (bucket, batch-
+    # bucket) pair — warm every power-of-two batch width per bucket
+    # (splits under pool pressure just warm the smaller widths, which
+    # the replay is equally limited to); the static backend keys on
+    # bucket alone, so extra widths would warm nothing
+    widths = [1]
+    if hasattr(engine.backend, "alloc"):
+        while widths[-1] * 2 <= engine.cfg.num_slots:
+            widths.append(widths[-1] * 2)
     for plen in sorted(warm):
-        try:
-            engine.generate([trace[0].prompt[:1] * plen],
-                            SamplingParams(max_tokens=2))
-        except ValueError:
-            # tiny pools reject the top-bucket probe's worst case at
-            # admission — a length no real request can use either, so
-            # there is nothing to warm there
-            continue
-    engine.backend.reset_telemetry()
+        for nb in widths:
+            try:
+                engine.generate([trace[0].prompt[:1] * plen] * nb,
+                                SamplingParams(max_tokens=2))
+            except ValueError:
+                # tiny pools reject the top-bucket probe's worst case at
+                # admission — a length no real request can use either,
+                # so there is nothing to warm there
+                break
+
+
+def _replay(engine, trace) -> dict:
+    """Warm (on the engine itself), reset telemetry, then replay the
+    trace against the arrival clock. ``engine`` is an Engine or a
+    ReplicaSet — both speak add_request/step/stats."""
+    if hasattr(engine, "replicas"):       # warm each replica's jit caches
+        for rep in engine.replicas:
+            _warm(rep, trace)
+        engine.reset_telemetry()
+    else:
+        _warm(engine, trace)
+        engine.backend.reset_telemetry()
     t0 = time.time()
     pending = list(trace)
     handles = []
@@ -131,13 +160,15 @@ def _replay(engine: Engine, trace) -> dict:
     dt = time.time() - t0
     useful = sum(len(h.token_ids) for h in handles)
     st = engine.stats()
-    lane_eff = useful / max(st["steps"] * engine.cfg.num_slots, 1)
+    slots = getattr(engine, "total_slots", engine.cfg.num_slots)
+    lane_eff = useful / max(st["steps"] * slots, 1)
     return {"tok_s": useful / dt, "useful": useful, "wall_s": dt,
             "lane_eff": lane_eff,
             "cache_util": st["cache_utilization"],
             "mean_active": st["mean_active_slots"],
             "preemptions": st.get("preemptions", 0),
             "prefill_compiles": st["prefill_compiles"],
+            "prefill_calls": st.get("prefill_calls", 0),
             "blocks_leaked": st.get("blocks_used", 0)}
 
 
@@ -182,6 +213,78 @@ def _replay_sharded(model, params, trace, args) -> dict:
     return res
 
 
+def _capacity(rset) -> float:
+    """Aggregate tokens/s over per-replica CLOCKS: each replica's
+    emitted tokens over the wall time spent inside ITS step calls. On
+    parallel hardware replicas overlap and this equals wall-clock
+    throughput; on a CPU host simulating devices they time-share the
+    cores, and this is the rate the set would sustain if they did not —
+    the quantity data-parallel replication actually adds. A replica the
+    dispatch policy starves (or overloads into a long straggler tail)
+    drags the sum down, so this number also scores placement quality."""
+    st = rset.stats()
+    return sum(t / b for t, b in zip(st["tokens_out"], st["busy_s"])
+               if b > 0)
+
+
+def _replay_replicas(model, params, trace, args) -> dict:
+    """The ``"replicas"`` section: the same (dp-scaled) trace through a
+    ReplicaSet of ``--dp`` data-parallel paged replicas behind one
+    shared admission queue, against a SINGLE replica of the identical
+    per-replica config (same slots, same pool, same submesh shape) —
+    the fixed-per-replica scale-out claim. Reports wall-clock AND
+    per-replica-clock (capacity) aggregate tok/s, per-replica
+    utilization / dispatch share, and shared-queue wait."""
+    from repro.launch.engine import ReplicaSet
+    from repro.launch.mesh import make_mesh, mesh_summary
+
+    cfg = EngineConfig(
+        backend="paged", num_slots=args.slots,
+        block_size=args.block_size,
+        num_blocks=args.mem_tokens // args.block_size + 1,
+        max_len=args.max_len, watermark_blocks=args.watermark)
+    mesh = sub0 = None
+    if len(jax.devices()) >= args.dp * args.tp and \
+            args.dp * args.tp > 1:
+        # exactly dp x tp devices: each replica owns a (1, tp) subgrid
+        mesh = make_mesh((args.dp, args.tp), ("data", "model"))
+        # the dp=1 baseline runs on ONE replica-shaped submesh so both
+        # sides get identical per-replica resources
+        sub0 = make_mesh((1, args.tp), ("data", "model"))
+    single = ReplicaSet(model, params, cfg, dp=1, mesh=sub0)
+    res_1 = _replay(single, trace)
+    cap_1 = _capacity(single)
+    # drop the baseline's pool before the replica replay so resident
+    # cache memory stays at the dp x pool the section claims to budget
+    del single
+    rset = ReplicaSet(model, params, cfg, dp=args.dp, mesh=mesh)
+    res = _replay(rset, trace)
+    st = rset.stats()
+    res["dp"] = args.dp
+    res["mesh"] = mesh_summary(mesh) if mesh is not None else None
+    res["single_tok_s"] = cap_1
+    res["single_wall_tok_s"] = res_1["tok_s"]
+    res["agg_tok_s"] = _capacity(rset)
+    res["speedup_vs_single"] = res["agg_tok_s"] / max(cap_1, 1e-9)
+    res["speedup_wall"] = res["tok_s"] / max(res_1["tok_s"], 1e-9)
+    res["dispatched"] = st["dispatched"]
+    res["per_replica"] = [
+        {"util": round(p["cache_utilization"], 4),
+         "mean_active": round(p["mean_active_slots"], 3),
+         "steps": p["steps"],
+         "busy_s": round(b, 4),
+         "tok_s": round(t / b, 2) if b > 0 else 0.0,
+         "preemptions": p.get("preemptions", 0),
+         "share": round(d / max(sum(st["dispatched"]), 1), 4)}
+        for p, d, b, t in zip(st["per_replica"], st["dispatched"],
+                              st["busy_s"], st["tokens_out"])]
+    res["queue_wait"] = {
+        "steps_mean": round(st["queue_wait_steps_mean"], 3),
+        "steps_max": st["queue_wait_steps_max"],
+        "s_mean": round(st["queue_wait_s_mean"], 6)}
+    return res
+
+
 def run_bench(args) -> dict:
     cfg = get_config(args.arch)
     if args.smoke:
@@ -204,12 +307,19 @@ def run_bench(args) -> dict:
         max_len=args.max_len, watermark_blocks=args.watermark))
     res_c = _replay(eng_c, trace)
     res_sh = _replay_sharded(model, params, trace, args)
+    # the replica section uses its own heavier trace: 2x requests per
+    # replica so the scale-out claim is measured in the saturated
+    # regime, where straggler tails amortize over a long bulk phase
+    rep_trace = make_trace(cfg, n_requests=2 * args.requests * args.dp,
+                           rate=args.rate, seed=args.seed + 1)
+    res_r = _replay_replicas(model, params, rep_trace, args)
     return {
         "arch": cfg.name,
         "mem_tokens": args.mem_tokens,
         "static": res_s,
         "continuous": res_c,
         "sharded": res_sh,
+        "replicas": res_r,
         "speedup": res_c["tok_s"] / max(res_s["tok_s"], 1e-9),
     }
 
@@ -220,7 +330,8 @@ def _write_json(result: dict, json_path: str):
     with open(json_path, "w") as f:
         json.dump(result, f, indent=2, sort_keys=True)
     if result["continuous"]["blocks_leaked"] \
-            or result["sharded"]["blocks_leaked"]:
+            or result["sharded"]["blocks_leaked"] \
+            or result["replicas"]["blocks_leaked"]:
         raise SystemExit("block leak detected")
 
 
@@ -237,9 +348,20 @@ def _emit(result: dict, json_path: str):
     print(f"serve_sharded,{res_m['tok_s']:.2f},"
           f"{res_m['cache_util']:.3f},{res_m['lane_eff']:.3f},"
           f"{res_m['useful']},{res_m['wall_s']:.2f}")
+    res_r = result["replicas"]
+    print(f"serve_replicas,{res_r['tok_s']:.2f},"
+          f"{res_r['cache_util']:.3f},{res_r['lane_eff']:.3f},"
+          f"{res_r['useful']},{res_r['wall_s']:.2f}")
     print(f"# sharded mesh {res_m['mesh']['axes']}; "
           f"head_sharded={res_m['head_sharded']}; "
           f"per-device cache {res_m['per_device_cache']}")
+    print(f"# replicas dp={res_r['dp']}: aggregate capacity "
+          f"{res_r['agg_tok_s']:.1f} tok/s = "
+          f"{res_r['speedup_vs_single']:.2f}x one replica "
+          f"({res_r['single_tok_s']:.1f}); wall {res_r['tok_s']:.1f} "
+          f"({res_r['speedup_wall']:.2f}x, replicas time-share CPU "
+          f"cores); dispatched {res_r['dispatched']}; "
+          f"queue wait {res_r['queue_wait']}")
     print(f"# equal cache budget {result['mem_tokens']} tokens; "
           f"continuous/static tokens/s: {result['speedup']:.2f}x; "
           f"mean active slots {res_c['mean_active']:.2f}; "
@@ -271,6 +393,10 @@ def _parser():
                          "(mesh over local devices; run under "
                          "XLA_FLAGS=--xla_force_host_platform_device_"
                          "count=N to fake devices on CPU)")
+    ap.add_argument("--dp", type=int, default=2,
+                    help="data-parallel replicas for the replicas "
+                         "section (ReplicaSet over the mesh's data "
+                         "axis; dp*tp must divide the device count)")
     ap.add_argument("--json", default="BENCH_serve.json",
                     help="machine-readable results path")
     return ap
@@ -284,7 +410,8 @@ def run():
     result = run_bench(args)
     for name, r in (("serve_static", result["static"]),
                     ("serve_continuous", result["continuous"]),
-                    ("serve_sharded", result["sharded"])):
+                    ("serve_sharded", result["sharded"]),
+                    ("serve_replicas", result["replicas"])):
         emit(name, 1e6 / max(r["tok_s"], 1e-9),
              f"tok_s={r['tok_s']:.2f} util={r['cache_util']:.3f} "
              f"preemptions={r['preemptions']} "

@@ -1,0 +1,55 @@
+"""CI asserts over the ``replicas`` section of BENCH_serve.json.
+
+Validates the dp=2 acceptance bar: aggregate capacity (per-replica
+clocks — fake CPU devices time-share the host cores, see
+bench_serve.py) at least ``--min-speedup`` x one replica of the same
+config, zero block leaks, the expected (data, model) mesh, and a
+non-degenerate dispatch spread. Kept as a script so the workflow can
+retry the whole bench+check once on a timing transient instead of
+failing the job on host noise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_serve.json")
+    ap.add_argument("--min-speedup", type=float, default=1.5)
+    ap.add_argument("--mesh", default=None,
+                    help="expected 'data,model' sizes, e.g. '2,2'")
+    args = ap.parse_args()
+    with open(args.json) as f:
+        r = json.load(f)["replicas"]
+    errors = []
+    if r["blocks_leaked"]:
+        errors.append(f"{r['blocks_leaked']} blocks leaked")
+    if args.mesh is not None:
+        want = dict(zip(("data", "model"),
+                        (int(x) for x in args.mesh.split(","))))
+        if r["mesh"] is None or r["mesh"]["axes"] != want:
+            errors.append(f"mesh {r['mesh']} != {want}")
+    if r["speedup_vs_single"] < args.min_speedup:
+        errors.append(
+            f"aggregate {r['agg_tok_s']:.1f} tok/s is only "
+            f"{r['speedup_vs_single']:.2f}x one replica "
+            f"({r['single_tok_s']:.1f}); need {args.min_speedup}x")
+    if not all(p["share"] > 0 for p in r["per_replica"]):
+        errors.append(f"a replica was starved: {r['dispatched']}")
+    if "queue_wait" not in r:
+        errors.append("queue_wait telemetry missing")
+    if errors:
+        for e in errors:
+            print(f"REPLICA SECTION FAIL: {e}", file=sys.stderr)
+        sys.exit(1)
+    print(f"replicas ok: dp={r['dp']} agg {r['agg_tok_s']:.1f} tok/s = "
+          f"{r['speedup_vs_single']:.2f}x single; dispatched "
+          f"{r['dispatched']}; queue wait {r['queue_wait']}")
+
+
+if __name__ == "__main__":
+    main()

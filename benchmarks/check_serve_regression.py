@@ -1,0 +1,91 @@
+"""CI bench-regression gate over BENCH_serve.json.
+
+Compares a fresh serve-bench run against the committed baseline (the
+repo-root ``BENCH_serve.json``, regenerated whenever a PR re-runs the
+bench) and fails on:
+
+  * continuous tok/s dropping more than ``--tolerance`` (default 20%)
+    below baseline. Because CI runners and dev machines differ in raw
+    speed, the default comparison is MACHINE-NORMALIZED: continuous
+    tok/s divided by the same run's static tok/s — static is the
+    lockstep baseline engine on identical hardware in the same process,
+    so the ratio cancels host speed and isolates scheduler regressions.
+    ``--absolute`` compares raw tok/s instead (same-machine runs).
+  * any block leak (``blocks_leaked != 0``) in the continuous, sharded
+    or replicas sections.
+  * prefill compile-count growth in the continuous section (the jit
+    cache is O(buckets x batch-buckets) by contract; a new trace per
+    request length sneaking back in is a regression even when fast).
+
+Usage:
+  python benchmarks/check_serve_regression.py \
+      --baseline BENCH_serve.baseline.json --fresh BENCH_serve.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(baseline: dict, fresh: dict, *, tolerance: float,
+          absolute: bool) -> list[str]:
+    errors = []
+    for section in ("continuous", "sharded", "replicas"):
+        leaked = fresh.get(section, {}).get("blocks_leaked", 0)
+        if leaked:
+            errors.append(f"{section}: {leaked} blocks leaked")
+    if absolute:
+        base_v = baseline["continuous"]["tok_s"]
+        fresh_v = fresh["continuous"]["tok_s"]
+        kind = "absolute"
+    else:
+        base_v = baseline["continuous"]["tok_s"] \
+            / max(baseline["static"]["tok_s"], 1e-9)
+        fresh_v = fresh["continuous"]["tok_s"] \
+            / max(fresh["static"]["tok_s"], 1e-9)
+        kind = "static-normalized"
+    floor = (1.0 - tolerance) * base_v
+    print(f"continuous tok_s ({kind}): baseline {base_v:.3f}, "
+          f"fresh {fresh_v:.3f}, floor {floor:.3f}")
+    if fresh_v < floor:
+        errors.append(
+            f"continuous tok_s regressed >{tolerance:.0%}: "
+            f"{fresh_v:.3f} < {floor:.3f} ({kind} vs baseline "
+            f"{base_v:.3f})")
+    base_c = baseline["continuous"]["prefill_compiles"]
+    fresh_c = fresh["continuous"]["prefill_compiles"]
+    print(f"continuous prefill_compiles: baseline {base_c}, "
+          f"fresh {fresh_c}")
+    if fresh_c > base_c:
+        errors.append(
+            f"prefill compile count grew: {fresh_c} > baseline {base_c}")
+    return errors
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed fractional tok/s drop (default 0.20)")
+    ap.add_argument("--absolute", action="store_true",
+                    help="compare raw tok/s instead of the "
+                         "static-normalized ratio (same-machine runs)")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    errors = check(baseline, fresh, tolerance=args.tolerance,
+                   absolute=args.absolute)
+    if errors:
+        for e in errors:
+            print(f"REGRESSION: {e}", file=sys.stderr)
+        sys.exit(1)
+    print("serve bench regression gate: ok")
+
+
+if __name__ == "__main__":
+    main()

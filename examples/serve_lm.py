@@ -21,7 +21,8 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch.engine import Engine, EngineConfig, SamplingParams
+from repro.launch.engine import (Engine, EngineConfig, ReplicaSet,
+                                 SamplingParams)
 from repro.models.model import Model
 
 
@@ -43,6 +44,11 @@ def main():
                          "a (data = n/tp, model = tp) mesh of the local "
                          "devices (fake N CPU devices with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel engine replicas behind one "
+                         "shared admission queue (ReplicaSet); splits "
+                         "the mesh's data axis, each replica keeping "
+                         "its own KV pool and TP subgrid")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace for CI")
     args = ap.parse_args()
@@ -54,16 +60,30 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
 
-    mesh = None
-    if args.tp > 1 or len(jax.devices()) > 1:
-        from repro.launch.mesh import make_local_mesh
+    from repro.launch.mesh import make_local_mesh, replica_cli_mesh
 
+    if args.dp > 1:
+        # dp x tp devices, each replica a (1, tp) TP subgrid
+        mesh = replica_cli_mesh(args.dp, args.tp)
+    elif args.tp > 1 or len(jax.devices()) > 1:
         mesh = make_local_mesh(args.tp)
+    else:
+        mesh = None
+    if mesh is not None:
         print(f"mesh: {dict(zip(('data', 'model'), mesh.devices.shape))}")
 
-    engine = Engine(model, params, EngineConfig(
+    ecfg = EngineConfig(
         backend=args.backend, num_slots=args.slots, block_size=16,
-        num_blocks=args.mem_tokens // 16 + 1, max_len=128, mesh=mesh))
+        num_blocks=args.mem_tokens // 16 + 1, max_len=128)
+    if args.dp > 1:
+        engine = ReplicaSet(model, params, ecfg, dp=args.dp, mesh=mesh)
+        print(f"replica set: dp={args.dp}, "
+              f"{engine.total_slots} total slots")
+    else:
+        import dataclasses
+
+        engine = Engine(model, params,
+                        dataclasses.replace(ecfg, mesh=mesh))
 
     handles = []
     for i in range(args.requests):

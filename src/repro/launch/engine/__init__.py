@@ -29,15 +29,26 @@ Both backends shard natively over a named mesh
 block pool head-sharded over the TP axis (each device owns its kv-head
 shard of every block), prefill/decode steps compiled against
 NamedSharding — token-identical to single-device serving by contract.
+
+``ReplicaSet`` scales out over the ``data`` axis: R full engine
+replicas (own KV pool, own TP subgrid) behind ONE shared admission
+queue with pluggable FCFS dispatch (least-loaded blocks / round-robin)
+— EPAC's many-tiles-behind-one-hub, at the serving layer. Paged
+admission drains same-bucket FCFS runs of the queue and prefills them
+as one right-padded batch call (one jit trace per (bucket,
+batch-bucket) pair); the static lockstep batch is already one batched
+prefill call, width-capped by the same ``max_prefill_batch``.
 """
 
 from repro.launch.engine.api import (Engine, EngineConfig, RequestHandle,
                                      RequestOutput, SamplingParams)
+from repro.launch.engine.replica import ReplicaSet
 from repro.launch.engine.sampling import sample_tokens
 from repro.launch.engine.scheduler import PagedBackend
 from repro.launch.engine.static import StaticBackend
 
 __all__ = [
     "Engine", "EngineConfig", "RequestHandle", "RequestOutput",
-    "SamplingParams", "PagedBackend", "StaticBackend", "sample_tokens",
+    "SamplingParams", "PagedBackend", "ReplicaSet", "StaticBackend",
+    "sample_tokens",
 ]

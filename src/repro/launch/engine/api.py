@@ -135,6 +135,12 @@ class EngineConfig:
     eos_id: int = -1             # -1: length-based retirement only
     watermark_blocks: int = 0    # paged: admission headroom (see alloc)
     bucketed_prefill: bool = True  # pow-2 prompt buckets (when exact)
+    # Batched prefill admission: each paged admission drains up to this
+    # many queued requests sharing one prefill bucket and prefills them
+    # in a single right-padded batch call (one jit trace per (bucket,
+    # batch-bucket) pair); the static backend bounds its lockstep batch
+    # width with it. <= 0 (default) lifts the cap to the slot count.
+    max_prefill_batch: int = 0
     # Mesh-sharded serving: when a jax.sharding.Mesh is given, the
     # backend shards params (2-D FSDP x TP rules of launch/sharding.py),
     # the KV block pools (head-sharded over ``tp_axis`` — each device
@@ -185,11 +191,13 @@ class Engine:
 
     # -- request lifecycle ----------------------------------------------
 
-    def add_request(self, prompt: Sequence[int],
-                    sampling: Optional[SamplingParams] = None
-                    ) -> RequestHandle:
-        sampling = sampling or SamplingParams()
-        prompt = list(prompt)
+    def check_request(self, prompt: Sequence[int],
+                      sampling: SamplingParams):
+        """Raise ValueError when this engine could never serve the
+        request (empty prompt, position cap, backend capacity bound).
+        Shared by ``add_request`` and the ReplicaSet front-end, which
+        validates once against a representative replica before the
+        request enters the shared queue."""
         if len(prompt) < 1:
             raise ValueError("empty prompt")
         if len(prompt) + sampling.max_tokens > self.cfg.max_len:
@@ -197,9 +205,16 @@ class Engine:
                 f"prompt ({len(prompt)}) + max_tokens "
                 f"({sampling.max_tokens}) exceeds max_len "
                 f"{self.cfg.max_len}")
-        # backend-specific capacity limits (e.g. the paged pool's
-        # worst-case bound) are validated by enqueue, which raises
-        # ValueError before the request enters the queue
+        check = getattr(self.backend, "check_request", None)
+        if check is not None:            # paged: worst-case pool bound
+            check(len(prompt), sampling)
+
+    def add_request(self, prompt: Sequence[int],
+                    sampling: Optional[SamplingParams] = None
+                    ) -> RequestHandle:
+        sampling = sampling or SamplingParams()
+        prompt = list(prompt)
+        self.check_request(prompt, sampling)
         handle = RequestHandle(self._uid, prompt, sampling)
         self._uid += 1
         self.backend.enqueue(handle)
@@ -221,22 +236,16 @@ class Engine:
     def stats(self) -> dict:
         return self.backend.stats()
 
+    @property
+    def made_progress(self) -> bool:
+        return self.backend.made_progress
+
     # -- convenience drivers --------------------------------------------
 
     def drain(self, max_steps: int = 100_000) -> list[RequestOutput]:
         """Step until idle; returns the concatenated output stream."""
-        stream: list[RequestOutput] = []
-        steps = 0
-        while self.has_work:
-            outs = self.step()
-            stream.extend(outs)
-            steps += 1
-            if steps > max_steps:
-                raise RuntimeError("step budget exceeded")
-            if not outs and not self.backend.made_progress:
-                raise RuntimeError(
-                    "engine stalled: waiting requests cannot be admitted")
-        return stream
+        return drive(self, max_steps,
+                     "engine stalled: waiting requests cannot be admitted")
 
     def generate(self, prompts: Sequence[Sequence[int]],
                  sampling=None, max_steps: int = 100_000
@@ -244,12 +253,35 @@ class Engine:
         """Submit ``prompts`` and drive to completion; returns token ids
         per prompt in submission order. ``sampling`` is one
         SamplingParams for all or a per-prompt sequence."""
-        if sampling is None or isinstance(sampling, SamplingParams):
-            sampling = [sampling or SamplingParams()] * len(prompts)
-        if len(sampling) != len(prompts):
-            raise ValueError(f"{len(sampling)} sampling params for "
-                             f"{len(prompts)} prompts")
-        handles = [self.add_request(p, s)
-                   for p, s in zip(prompts, sampling)]
-        self.drain(max_steps=max_steps)
-        return [list(h.token_ids) for h in handles]
+        return run_generate(self, prompts, sampling, max_steps)
+
+
+def drive(engine, max_steps: int, stall_msg: str) -> list[RequestOutput]:
+    """Drive-to-completion loop shared by every Engine-shaped front-end
+    (Engine, ReplicaSet): step until idle, guard the step budget, raise
+    on a stall (a step that neither emitted nor progressed)."""
+    stream: list[RequestOutput] = []
+    steps = 0
+    while engine.has_work:
+        outs = engine.step()
+        stream.extend(outs)
+        steps += 1
+        if steps > max_steps:
+            raise RuntimeError("step budget exceeded")
+        if not outs and not engine.made_progress:
+            raise RuntimeError(stall_msg)
+    return stream
+
+
+def run_generate(engine, prompts, sampling, max_steps) -> list[list[int]]:
+    """Shared ``generate`` driver: broadcast/validate sampling params,
+    submit everything, drain, collect per-prompt tokens in order."""
+    if sampling is None or isinstance(sampling, SamplingParams):
+        sampling = [sampling or SamplingParams()] * len(prompts)
+    if len(sampling) != len(prompts):
+        raise ValueError(f"{len(sampling)} sampling params for "
+                         f"{len(prompts)} prompts")
+    handles = [engine.add_request(p, s)
+               for p, s in zip(prompts, sampling)]
+    engine.drain(max_steps=max_steps)
+    return [list(h.token_ids) for h in handles]

@@ -24,6 +24,14 @@ landed:
   the real boundary; pad-tail cache blocks are routed to the reserved
   null block. Models whose state cannot be re-extracted at a traced
   length (mlstm/slstm) fall back to exact-length prefill automatically.
+* **Batched prefill admission** — each admission drains the maximal
+  FCFS *prefix* of the queue that shares the head's prefill bucket
+  (up to ``max_prefill_batch`` and the free-slot/pool budget) and
+  prefills it as ONE right-padded batch call, scattering each row's
+  true-length cache into its slot. Batch widths are power-of-two
+  bucketed too, so the jit cache stays at one trace per
+  (prompt-bucket, batch-bucket) pair. Strictly a prefix — never
+  skip-ahead — so FCFS fairness survives batching.
 """
 
 from __future__ import annotations
@@ -98,6 +106,8 @@ class PagedBackend:
         self.block_token_steps = 0   # allocated token capacity x steps
         self.live_token_steps = 0    # live tokens x steps
         self.preemptions = 0
+        self.prefill_calls = 0       # batched prefill launches
+        self.prefill_reqs = 0        # requests prefilled (>= calls)
 
         def decode_fn(params, pools, table, lengths, tokens):
             return model.decode_step_paged(params, pools, table, lengths,
@@ -109,14 +119,18 @@ class PagedBackend:
 
     # -- public backend API ---------------------------------------------
 
-    def enqueue(self, req: RequestHandle):
+    def check_request(self, prompt_len: int, sampling):
         worst = paged_kv.blocks_for(
-            len(req.prompt) + req.sampling.max_tokens, self.cfg.block_size)
+            prompt_len + sampling.max_tokens, self.cfg.block_size)
         if worst > self.layout.usable_blocks:
             raise ValueError(
                 f"request worst case ({worst} blocks) exceeds pool "
                 f"capacity ({self.layout.usable_blocks} usable blocks) — "
                 "it could never run to completion even alone")
+
+    def enqueue(self, req: RequestHandle):
+        # callers validate first (Engine.add_request / the ReplicaSet
+        # shared queue both run check_request) — no double check here
         self.waiting.append(req)
 
     @property
@@ -206,97 +220,163 @@ class PagedBackend:
                    and int(self.lengths[i]) % bs == 0
                    and int(self.lengths[i]) // bs >= len(s.blocks))
 
-    def _admit(self, outs: list[RequestOutput]):
-        while self.waiting:
-            req = self.waiting[0]
-            free_slots = [i for i, s in enumerate(self.slots)
-                          if s.req is None]
-            if not free_slots:
-                return
-            cached = len(req.prompt) + max(len(req.token_ids) - 1, 0)
+    def _cached_tokens(self, req: RequestHandle) -> list[int]:
+        """Tokens a (re-)admitted request must have in cache before its
+        next decode: the prompt, plus all-but-the-last emitted token on
+        a preemption resume (the last one is fed to decode)."""
+        if req._n_sampled > 0:            # preempted: re-prefill history
+            return list(req.prompt) + req.token_ids[:-1]
+        return list(req.prompt)
+
+    def _bucket_key(self, S: int):
+        """The prefill-trace identity of a cached length: the padded
+        token width for ragged models, the exact length otherwise.
+        Requests batch together iff their keys match."""
+        bs = self.cfg.block_size
+        if self.ragged_prefill:
+            cap = paged_kv.blocks_for(self.cfg.max_len, bs) * bs
+            return paged_kv.blocks_for(prefill_bucket(S, bs, cap), bs) * bs
+        return ("exact", S)
+
+    def _drain_bucket_run(self) -> list[RequestHandle]:
+        """Pop the maximal FCFS PREFIX of the queue that (a) fits the
+        free slots and the pool (cumulative current footprint + this
+        step's imminent growth, watermark headroom while anything else
+        runs), (b) shares the queue head's prefill bucket, and (c) stays
+        within ``max_prefill_batch``. Strictly a prefix: a request that
+        does not fit ends the run — no skipping ahead — so batching
+        cannot starve the head of the queue."""
+        free = sum(1 for s in self.slots if s.req is None)
+        if not free:
+            return []
+        cap = free if self.cfg.max_prefill_batch <= 0 else \
+            min(free, self.cfg.max_prefill_batch)
+        run: list[RequestHandle] = []
+        need = self._imminent_growth()
+        key0 = None
+        for req in self.waiting:
+            if len(run) >= cap:
+                break
+            S = len(self._cached_tokens(req))
+            key = self._bucket_key(S)
+            if run and key != key0:
+                break
             # + 1: the admitted slot decodes THIS step, caching the fed
             # token at position ``cached`` — without that block counted
             # a boundary-length request admits then self-preempts,
             # wasting a full prefill every step
-            need = paged_kv.blocks_for(cached + 1, self.cfg.block_size) \
-                + self._imminent_growth()
+            need += paged_kv.blocks_for(S + 1, self.cfg.block_size)
             # watermark headroom only matters while others are running;
             # a sole request must always pass (progress guarantee)
-            if not self.alloc.can_admit(need, strict=self.num_active > 0):
-                return                    # FCFS: no skipping ahead
+            strict = self.num_active > 0 or bool(run)
+            if not self.alloc.can_admit(need, strict=strict):
+                break
+            run.append(req)
+            key0 = key
+        for _ in run:
             self.waiting.popleft()
-            self._place(free_slots[0], req, outs)
+        return run
 
-    def _place(self, i: int, req: RequestHandle,
-               outs: list[RequestOutput]):
-        resume = req._n_sampled > 0       # preempted: re-prefill history
-        cached = list(req.prompt) + (req.token_ids[:-1] if resume else [])
-        S = len(cached)
-        nbp = paged_kv.blocks_for(S, self.cfg.block_size)
-        block_ids = self.alloc.alloc(nbp)
-        slot = self.slots[i]
-        slot.req = req
-        slot.blocks = block_ids
-        slot.ticket = self._ticket
-        self._ticket += 1
-        fn, tok_w, cache_w = self._prefill(S)
-        toks = np.zeros((1, tok_w), np.int32)
-        toks[0, :S] = cached              # exact path: tok_w == S, no pad
-        ids = np.full((cache_w // self.cfg.block_size,),
-                      paged_kv.NULL_BLOCK, np.int32)
-        ids[:nbp] = block_ids             # pad-tail blocks -> null block
-        if self.ragged_prefill:
-            logits, self.pools = fn(
-                self.params, self.pools, jnp.asarray(toks),
-                jnp.asarray(ids), jnp.int32(i),
-                jnp.asarray([S], jnp.int32))
-        else:
-            logits, self.pools = fn(
-                self.params, self.pools, jnp.asarray(toks),
-                jnp.asarray(ids), jnp.int32(i))
-        self.table[i, :] = paged_kv.NULL_BLOCK
-        self.table[i, :nbp] = block_ids
-        self.lengths[i] = S
-        self.sampler.install(i, req.sampling, req._n_sampled)
+    def _admit(self, outs: list[RequestOutput]):
+        while self.waiting:
+            run = self._drain_bucket_run()
+            if not run:
+                return                    # FCFS: no skipping ahead
+            self._place_batch(run, outs)
+
+    def _place_batch(self, reqs: list[RequestHandle],
+                     outs: list[RequestOutput]):
+        """Prefill ``reqs`` (all sharing one bucket) as ONE right-padded
+        batch call and scatter each row's true-length cache into its
+        slot. Rows are FCFS-ordered, so emission order matches the old
+        one-at-a-time admission exactly."""
+        bs = self.cfg.block_size
+        free_slots = [i for i, s in enumerate(self.slots) if s.req is None]
+        rows = []                          # (slot, req, cached, S, ids)
+        for req in reqs:
+            cached = self._cached_tokens(req)
+            S = len(cached)
+            nbp = paged_kv.blocks_for(S, bs)
+            block_ids = self.alloc.alloc(nbp)
+            i = free_slots.pop(0)
+            slot = self.slots[i]
+            slot.req = req
+            slot.blocks = block_ids
+            slot.ticket = self._ticket
+            self._ticket += 1
+            rows.append((i, req, cached, S, block_ids))
+        fn, tok_w, cache_w, Nb = self._prefill(rows[0][3], len(rows))
+        nbc = cache_w // bs
+        toks = np.zeros((Nb, tok_w), np.int32)
+        lens = np.ones((Nb,), np.int32)    # batch fillers: harmless len 1
+        ids = np.full((Nb, nbc), paged_kv.NULL_BLOCK, np.int32)
+        row_of_slot = np.zeros((self.cfg.num_slots,), np.int32)
+        valid = np.zeros((self.cfg.num_slots,), bool)
+        for r, (i, req, cached, S, block_ids) in enumerate(rows):
+            toks[r, :S] = cached           # exact path: tok_w == S, no pad
+            lens[r] = S
+            ids[r, :len(block_ids)] = block_ids  # pad tail -> null block
+            row_of_slot[i] = r
+            valid[i] = True
+            self.table[i, :] = paged_kv.NULL_BLOCK
+            self.table[i, :len(block_ids)] = block_ids
+            self.lengths[i] = S
+        args = (self.params, self.pools, jnp.asarray(toks),
+                jnp.asarray(ids), jnp.asarray(row_of_slot),
+                jnp.asarray(valid), jnp.asarray(lens))
+        row_logits, self.pools = fn(*args)
+        self.prefill_calls += 1
+        self.prefill_reqs += len(rows)
+        row_logits = np.asarray(row_logits)  # (Nb, V): per-row position S-1
         self.made_progress = True
-        if resume:
-            slot.last_token = req.token_ids[-1]
-            return
-        outs.append(self._accept(
-            i, self.sampler.sample_one(i, logits[:, S - 1])))
+        for r, (i, req, cached, S, block_ids) in enumerate(rows):
+            self.sampler.install(i, req.sampling, req._n_sampled)
+            if req._n_sampled > 0:         # resume: nothing new to sample
+                self.slots[i].last_token = req.token_ids[-1]
+                continue
+            outs.append(self._accept(
+                i, self.sampler.sample_one(i, row_logits[r:r + 1])))
 
-    def _prefill(self, S: int):
-        """Prefill+pack, jit-cached per power-of-two BUCKET (ragged
-        models) or per exact length (fallback — tokens stay width S, so
-        recurrent chunk scans never see a pad token). Returns
-        (fn, token_width, cache_width); cache_width is always a block
-        multiple (pow-2 buckets are rounded up for non-pow-2 blocks)."""
+    def _prefill(self, S: int, n: int):
+        """Prefill+pack, jit-cached per (prompt-bucket, batch-bucket):
+        prompts pad to the power-of-two BUCKET (ragged models) or stay
+        at the exact length (fallback — tokens keep width S, so
+        recurrent chunk scans never see a pad token); batch widths pad
+        to the next power of two (capped at num_slots). Returns
+        (fn, token_width, cache_width, batch_width); cache_width is
+        always a block multiple (pow-2 buckets are rounded up for
+        non-pow-2 blocks)."""
         bs = self.cfg.block_size
         if self.ragged_prefill:
-            cap = paged_kv.blocks_for(self.cfg.max_len, bs) * bs
-            Sb = paged_kv.blocks_for(prefill_bucket(S, bs, cap), bs) * bs
-            tok_w, key = Sb, Sb
+            Sb = self._bucket_key(S)
+            tok_w = Sb
         else:
             Sb = paged_kv.blocks_for(S, bs) * bs
-            tok_w, key = S, ("exact", S)
+            tok_w = S
+        Nb = min(1 << max(n - 1, 0).bit_length(), self.cfg.num_slots)
+        key = (Sb, Nb) if self.ragged_prefill else ("exact", S, Nb)
         fn = self._prefill_cache.get(key)
         if fn is None:
             model, layout, ctx = self.model, self.layout, self.ctx
             ragged = self.ragged_prefill
 
-            def prefill_fn(params, pools, tokens, block_ids, slot,
-                           length=None):
+            def prefill_fn(params, pools, tokens, block_ids, row_of_slot,
+                           valid, length):
                 logits, dense = model.prefill(
                     params, {"tokens": tokens}, ctx, max_len=Sb,
                     length=length if ragged else None)
-                pools = model.pack_prefill_into_paged(layout, pools, dense,
-                                                      slot, block_ids)
-                return logits, pools
+                pools = model.pack_prefill_into_paged(
+                    layout, pools, dense, row_of_slot, valid, block_ids)
+                # only each row's next-token logits leave the device:
+                # (Nb, V) instead of the full (Nb, tok_w, V) slab
+                rows = jnp.take_along_axis(
+                    logits, (length - 1)[:, None, None], axis=1)[:, 0]
+                return rows, pools
 
             fn = shlib.jit_step(prefill_fn, self.shard, self._pool_sh,
                                 donate=(1,))
             self._prefill_cache[key] = fn
-        return fn, tok_w, Sb
+        return fn, tok_w, Sb, Nb
 
     def _preempt(self, i: int):
         """Evict slot i to a host-side recompute record (LIFO victim)."""
@@ -335,6 +415,7 @@ class PagedBackend:
         self.steps = self.slot_steps = 0
         self.block_token_steps = self.live_token_steps = 0
         self.preemptions = 0
+        self.prefill_calls = self.prefill_reqs = 0
 
     def stats(self) -> dict:
         """Cache/occupancy/scheduling telemetry for the run so far."""
@@ -347,5 +428,7 @@ class PagedBackend:
             "blocks_used": self.alloc.used_count,
             "preemptions": self.preemptions,
             "prefill_compiles": len(self._prefill_cache),
+            "prefill_calls": self.prefill_calls,
+            "prefill_reqs": self.prefill_reqs,
             "bucketed_prefill": self.ragged_prefill,
         }

@@ -117,9 +117,18 @@ class StaticBackend:
     # -- internals ------------------------------------------------------
 
     def _admit_batch(self, outs: list[RequestOutput]):
+        """Lockstep admission IS batched prefill admission here: the
+        whole batch prefills as one right-padded call (one jit trace
+        per pow-2 bucket of the max member). Admission is NOT
+        fragmented by bucket — a lockstep lane idled by a bucket split
+        stays idle for the entire generation cycle, which costs far
+        more than the padding it saves. ``max_prefill_batch`` (> 0)
+        bounds the admitted width and hence the prefill call width."""
         B = self.cfg.num_slots
+        cap = B if self.cfg.max_prefill_batch <= 0 else \
+            min(B, self.cfg.max_prefill_batch)
         reqs = []
-        while self.waiting and len(reqs) < B:
+        while self.waiting and len(reqs) < cap:
             # models without length-exact padded prefill (mlstm/slstm)
             # batch FCFS runs of EQUAL prompt length — correctness over
             # packing; the paged backend has no such restriction

@@ -46,6 +46,57 @@ def dp_axes_of(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a != "model")
 
 
+def replica_cli_mesh(dp: int, tp: int):
+    """The mesh a ``--dp R --tp T`` CLI request means: exactly R x T
+    devices as a (data=R, model=T) mesh, so each replica owns a (1, T)
+    TP subgrid — the topology the README table documents and the bench
+    measures. ``--tp T`` alone keeps the PR-3 behavior (shard ONE
+    engine over ALL local devices, data = n/T). No parallelism
+    requested, or dp replicas on a too-small host (tp == 1), returns
+    None: plain single-device engines."""
+    n = len(jax.devices())
+    if dp > 1:
+        if n >= dp * tp:
+            return make_mesh((dp, tp), ("data", "model"))
+        if tp > 1:
+            raise ValueError(
+                f"--dp {dp} --tp {tp} needs {dp * tp} devices, have {n}; "
+                "fake devices with "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+        return None                      # host too small: plain replicas
+    if tp > 1:
+        return make_local_mesh(tp)
+    return None
+
+
+def submeshes(mesh, dp: int, axis: str = "data") -> list:
+    """Split ``mesh`` into ``dp`` contiguous submeshes along ``axis``.
+
+    Each submesh keeps ALL axis names (the split axis shrinks to
+    size/dp), so the 2-D FSDP x TP sharding rules apply unchanged per
+    replica: replica r serves the r-th slice of the data axis with its
+    own model-axis TP subgrid — the ReplicaSet analogue of EPAC handing
+    each tile its own L2 slice behind the shared hub. Raises ValueError
+    when ``dp`` does not divide the axis (every ``--dp`` CLI funnels
+    here)."""
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh has no {axis!r} axis: {mesh.axis_names}")
+    size = int(mesh.shape[axis])
+    if dp < 1 or size % dp != 0:
+        raise ValueError(
+            f"--dp {dp} must be >= 1 and divide the {axis!r} axis "
+            f"({size}); fake devices with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    ai = list(mesh.axis_names).index(axis)
+    per = size // dp
+    out = []
+    for r in range(dp):
+        sl = [slice(None)] * mesh.devices.ndim
+        sl[ai] = slice(r * per, (r + 1) * per)
+        out.append(Mesh(mesh.devices[tuple(sl)], mesh.axis_names))
+    return out
+
+
 def mesh_summary(mesh) -> dict:
     return {"axes": dict(zip(mesh.axis_names,
                              [int(s) for s in mesh.devices.shape])),

@@ -1,22 +1,18 @@
-"""Serving CLI + deprecated PR-1 shims. The engine moved to
-``repro.launch.engine`` — one ``Engine`` front-end
-(``add_request``/``step``/``generate``) over the ``paged`` (continuous
-batching, optimistic admission + preemption, bucketed prefill) and
-``static`` (lockstep) backends. Import from there for new code:
+"""Serving CLI. The engine lives in ``repro.launch.engine`` — one
+``Engine`` front-end (``add_request``/``step``/``generate``) over the
+``paged`` (continuous batching, optimistic admission + preemption,
+batched bucketed prefill) and ``static`` (lockstep) backends, and a
+``ReplicaSet`` that runs R data-parallel engine replicas behind one
+shared admission queue. Import from there:
 
     from repro.launch.engine import Engine, EngineConfig, SamplingParams
+    from repro.launch.engine import ReplicaSet
 
-This module keeps the old entry points alive through one deprecation
-cycle:
-
-* ``Server`` / ``ServeConfig``   -> Engine(backend="static"). The old
-  left-pad-and-attend-the-pads prefill is gone; ragged prompts now match
-  the unbatched reference exactly.
-* ``Scheduler`` / ``SchedulerConfig`` -> Engine(backend="paged") with
-  ``submit``/``run``/``stats`` adapters (request handles still expose
-  ``.out``/``.done``).
+The PR-1 ``Server``/``Scheduler`` adapters finished their deprecation
+cycle in PR 4 and are gone; this module is now only the CLI.
 
 Run: PYTHONPATH=src python -m repro.launch.serve --arch olmo_1b --smoke
+     PYTHONPATH=src python -m repro.launch.serve --dp 2 --tp 2  # mesh
 """
 
 from __future__ import annotations
@@ -24,116 +20,15 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from typing import Optional
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch.engine import Engine, EngineConfig, SamplingParams
+from repro.launch.engine import (Engine, EngineConfig, ReplicaSet,
+                                 SamplingParams)
+from repro.launch.mesh import replica_cli_mesh
 from repro.models.model import Model
-from repro.models.transformer import RunCtx
-
-
-@dataclasses.dataclass
-class ServeConfig:
-    batch_size: int = 8
-    max_len: int = 256
-
-
-class Server:
-    """DEPRECATED: thin adapter over Engine(backend="static").
-
-    Narrower than the PR-1 Server in one way only: decoder-only text LMs
-    (enc-dec raises NotImplementedError from the Engine). ``mesh=`` is
-    wired through again — the Engine backends now shard params/caches
-    over the mesh natively (EngineConfig.mesh), so the PR-1 call shape
-    ``Server(model, params, cfg, mesh=mesh)`` works and emits a
-    DeprecationWarning pointing at the Engine API."""
-
-    def __init__(self, model: Model, params, serve_cfg: ServeConfig,
-                 ctx: Optional[RunCtx] = None, mesh=None):
-        if mesh is not None:
-            import warnings
-
-            warnings.warn(
-                "Server(mesh=...) is deprecated; use "
-                "Engine(model, params, EngineConfig(mesh=...)) — the "
-                "backends shard natively now", DeprecationWarning,
-                stacklevel=2)
-        self.engine = Engine(model, params,
-                             EngineConfig(backend="static",
-                                          num_slots=serve_cfg.batch_size,
-                                          max_len=serve_cfg.max_len,
-                                          mesh=mesh),
-                             ctx=ctx)
-
-    def generate(self, prompts: list[list[int]], n_new: int,
-                 greedy: bool = True, seed: int = 0):
-        # per-row derived seeds: requests sharing a SamplingParams.seed
-        # share an RNG stream by design (identical prompts would sample
-        # identically); the old Server drew independent per-row noise,
-        # so the shim preserves that
-        sps = [SamplingParams(max_tokens=n_new,
-                              temperature=0.0 if greedy else 1.0,
-                              seed=seed * 100_003 + i)
-               for i in range(len(prompts))]
-        return self.engine.generate(prompts, sps)
-
-
-@dataclasses.dataclass(frozen=True)
-class SchedulerConfig:
-    num_slots: int = 8
-    block_size: int = 16
-    num_blocks: int = 512
-    max_len: int = 256
-    eos_id: int = -1
-    greedy: bool = True
-    seed: int = 0
-
-
-class Scheduler:
-    """DEPRECATED: thin adapter over Engine(backend="paged")."""
-
-    def __init__(self, model: Model, params, cfg: SchedulerConfig,
-                 ctx: Optional[RunCtx] = None):
-        self.cfg = cfg
-        self._n_submitted = 0
-        self.engine = Engine(model, params,
-                             EngineConfig(backend="paged",
-                                          num_slots=cfg.num_slots,
-                                          block_size=cfg.block_size,
-                                          num_blocks=cfg.num_blocks,
-                                          max_len=cfg.max_len,
-                                          eos_id=cfg.eos_id),
-                             ctx=ctx)
-
-    def submit(self, prompt: list[int], max_new: int):
-        # per-request derived seeds, as in Server.generate: the PR-1
-        # Scheduler drew independent noise per request, so sharing one
-        # stream (identical prompts -> identical samples) would be a
-        # silent semantics change for non-greedy callers
-        seed = self.cfg.seed * 100_003 + self._n_submitted
-        self._n_submitted += 1
-        sp = SamplingParams(
-            max_tokens=max_new,
-            temperature=0.0 if self.cfg.greedy else 1.0,
-            seed=seed)
-        return self.engine.add_request(prompt, sp)
-
-    def step(self):
-        return self.engine.step()
-
-    def run(self, max_steps: int = 100_000):
-        self.engine.drain(max_steps=max_steps)
-        return self.engine.finished
-
-    def stats(self) -> dict:
-        return self.engine.stats()
-
-    @property
-    def finished(self):
-        return self.engine.finished
 
 
 def main():
@@ -147,8 +42,12 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--tp", type=int, default=1,
-                    help="tensor-parallel degree: shard the backend over "
+                    help="tensor-parallel degree: shard each engine over "
                          "a (data, model) mesh of the local devices")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel replicas behind one shared "
+                         "admission queue (ReplicaSet); each replica "
+                         "gets its own KV pool and TP subgrid")
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if args.smoke:
@@ -156,15 +55,14 @@ def main():
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    mesh = None
-    if args.tp > 1:
-        from repro.launch.mesh import make_local_mesh
-
-        mesh = make_local_mesh(args.tp)
-    engine = Engine(model, params,
-                    EngineConfig(backend=args.backend,
-                                 num_slots=args.slots, max_len=128,
-                                 mesh=mesh))
+    mesh = replica_cli_mesh(args.dp, args.tp)
+    ecfg = EngineConfig(backend=args.backend, num_slots=args.slots,
+                        max_len=128)
+    if args.dp > 1:
+        engine = ReplicaSet(model, params, ecfg, dp=args.dp, mesh=mesh)
+    else:
+        engine = Engine(model, params,
+                        dataclasses.replace(ecfg, mesh=mesh))
     prompts = [list(rng.integers(0, cfg.vocab_size,
                                  int(rng.integers(4, 16))))
                for _ in range(args.requests)]
@@ -175,8 +73,9 @@ def main():
     outs = engine.generate(prompts, sp)
     dt = time.time() - t0
     total = sum(len(o) for o in outs)
-    print(f"[{args.backend}] {total} tokens over {len(outs)} reqs "
-          f"in {dt:.2f}s ({total / dt:.1f} tok/s)  stats={engine.stats()}")
+    print(f"[{args.backend} dp={args.dp}] {total} tokens over "
+          f"{len(outs)} reqs in {dt:.2f}s ({total / dt:.1f} tok/s)  "
+          f"stats={engine.stats()}")
     for i, o in enumerate(outs[:2]):
         print(f"req{i}: {o[:12]}...")
 

@@ -85,10 +85,13 @@ class Model:
         pools head-sharded over TP; per-slot state on cache rules)."""
         return transformer.paged_cache_specs(self.cfg, layout, shard)
 
-    def pack_prefill_into_paged(self, layout, pools, dense_caches, slot,
-                                block_ids):
+    def pack_prefill_into_paged(self, layout, pools, dense_caches,
+                                row_of_slot, valid, block_ids):
+        """Batched install: block_ids (N, nbp) per prefill row;
+        row_of_slot/valid the inverse slot<-row map for per-slot state."""
         return transformer.pack_prefill_into_paged(
-            self.cfg, layout, pools, dense_caches, slot, block_ids)
+            self.cfg, layout, pools, dense_caches, row_of_slot, valid,
+            block_ids)
 
     def decode_step_paged(self, params, pools, block_table, lengths, tokens,
                           ctx: RunCtx):

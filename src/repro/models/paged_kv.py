@@ -165,29 +165,50 @@ def init_slot_tables(layout: PagedLayout):
 
 
 def pack_prefill_kv(pool, dense_kv, block_ids, block_size):
-    """Scatter a prefilled dense cache into pool blocks.
+    """Scatter a batch of prefilled dense caches into pool blocks.
 
     pool: {"k","v"} of (..., NB, BS, Hkv, D); dense_kv: {"k","v"} of
-    (..., 1, S, Hkv, D) with S == len(block_ids) * BS (kernels/ops pads
-    prefill caches with zeros past the true length); block_ids: (nbp,)
-    int32 physical destinations. Leading dims (stacked layers) broadcast.
+    (..., N, S, Hkv, D) with S == block_ids.shape[1] * BS (kernels/ops
+    pads prefill caches with zeros past each row's true length);
+    block_ids: (N, nbp) int32 physical destinations, one row per
+    prefilled sequence. Leading dims (stacked layers) broadcast.
+
+    Rows' REAL blocks are disjoint (the allocator hands each sequence its
+    own); pad-tail and batch-filler entries all point at the reserved
+    null block, so their writes collide there in unspecified order —
+    harmless, because null-block contents are only ever read masked.
     """
-    nbp = block_ids.shape[0]
+    if block_ids.ndim == 1:               # single-sequence convenience
+        block_ids = block_ids[None]       # dense rows already carry N=1
+    n, nbp = block_ids.shape
+    flat = block_ids.reshape(-1)
 
     def put(p, d):
         lead = p.shape[:-4]
         hkv, hd = p.shape[-2:]
-        d = d.reshape(lead + (nbp, block_size, hkv, hd))
-        return p.at[..., block_ids, :, :, :].set(d)
+        d = d.reshape(lead + (n * nbp, block_size, hkv, hd))
+        return p.at[..., flat, :, :, :].set(d)
 
     return {"k": put(pool["k"], dense_kv["k"]),
             "v": put(pool["v"], dense_kv["v"])}
 
 
-def pack_prefill_ring(ring, dense_ring, slot):
-    """Install a batch-1 prefilled ring cache into per-slot ring storage.
+def _select_slots(state, dense, row_of_slot, valid, batch_axis):
+    """Gather-select install of per-slot decode state: slot s takes
+    ``dense`` row ``row_of_slot[s]`` where ``valid[s]``, else keeps its
+    current state. A gather + where instead of a scatter because scatter
+    with duplicate indices applies updates in unspecified order, while
+    this is exact for any (row_of_slot, valid)."""
+    g = jnp.take(dense, row_of_slot, axis=batch_axis)
+    shape = [1] * state.ndim
+    shape[batch_axis] = -1
+    return jnp.where(valid.reshape(shape), g, state)
 
-    ring: (..., B, size_e, Hkv, D); dense_ring: (..., 1, size_p, Hkv, D)
+
+def pack_prefill_ring(ring, dense_ring, row_of_slot, valid):
+    """Install a batch of prefilled ring caches into per-slot storage.
+
+    ring: (..., B, size_e, Hkv, D); dense_ring: (..., N, size_p, Hkv, D)
     with size_p <= size_e. When the prompt is shorter than the ring the
     prefill cache is zero-padded at the tail — those slots are masked by
     the position-validity predicate until decode overwrites them. When the
@@ -201,28 +222,20 @@ def pack_prefill_ring(ring, dense_ring, slot):
         widths = [(0, 0)] * dense_ring.ndim
         widths[-3] = (0, pad)
         dense_ring = jnp.pad(dense_ring, widths)
-    return ring.at[..., slot, :, :, :].set(dense_ring[..., 0, :, :, :])
+    return _select_slots(ring, dense_ring, row_of_slot, valid,
+                         batch_axis=ring.ndim - 4)
 
 
-def pack_prefill_state(state, dense_state, slot):
-    """Install batch-1 SSM/conv decode state into per-slot state storage.
+def pack_prefill_state(state, dense_state, row_of_slot, valid):
+    """Install a batch of SSM/conv decode states into per-slot storage.
 
-    Both sides come from ``init_*_cache``-shaped trees whose batch axis
-    follows the stacked-layer axes; we locate it by matching ranks."""
-
-    def put(s, d):
-        if s.shape == d.shape:            # single-slot engine: slot is 0
-            return d
-        # batch axis position: s is (..., B, ...), d is (..., 1, ...) with
-        # identical rank — the axis where they disagree (or any axis where
-        # d == 1 and s == num_slots).
-        for ax in range(s.ndim):
-            if d.shape[ax] == 1 and s.shape[ax] != d.shape[ax]:
-                idx = (slice(None),) * ax + (slot,)
-                return s.at[idx].set(jnp.squeeze(d, axis=ax))
-        raise ValueError(f"cannot locate batch axis: {s.shape} vs {d.shape}")
-
-    return jax.tree.map(put, state, dense_state)
+    Both sides come from ``init_*_cache``-shaped stacked trees: a leading
+    layer-count axis, then the batch axis — so the slot/batch axis is
+    axis 1 on every leaf (rglru h (L, B, dr), conv (L, B, w-1, d),
+    mlstm C (L, B, H, hd, hd), slstm c (L, B, H, hd), ...)."""
+    return jax.tree.map(
+        lambda s, d: _select_slots(s, d, row_of_slot, valid, batch_axis=1),
+        state, dense_state)
 
 
 __all__ = [

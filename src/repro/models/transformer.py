@@ -640,11 +640,17 @@ def paged_cache_specs(cfg: ModelConfig, layout, shard):
 
 
 def pack_prefill_into_paged(cfg: ModelConfig, layout, pools, dense_caches,
-                            slot, block_ids):
-    """Install a batch-1 prefilled dense cache (from ``prefill`` with
-    ``max_len == len(block_ids) * block_size``) into the paged tree at
-    ``slot`` / physical ``block_ids``. Pure function; jit per prompt
-    bucket."""
+                            row_of_slot, valid, block_ids):
+    """Install a BATCH of prefilled dense caches (from ``prefill`` with
+    ``max_len == block_ids.shape[1] * block_size``) into the paged tree.
+
+    ``block_ids`` is (N, nbp) — per prefill-batch row, the physical
+    destinations of its cache blocks (pad tails at the null block);
+    ``row_of_slot`` ((num_slots,) int32) and ``valid`` ((num_slots,)
+    bool) give the inverse slot<-row map for per-slot state (rings, SSM
+    carries, conv tails): slot s takes row ``row_of_slot[s]`` where
+    ``valid[s]``. Pure function; jit per (prompt-bucket, batch-bucket).
+    """
     from repro.models import paged_kv
 
     out = {}
@@ -659,12 +665,13 @@ def pack_prefill_into_paged(cfg: ModelConfig, layout, pools, dense_caches,
                         pool, dense, block_ids, layout.block_size)
                 else:
                     gp[f"p{pi}"] = {
-                        "k": paged_kv.pack_prefill_ring(pool["k"],
-                                                        dense["k"], slot),
-                        "v": paged_kv.pack_prefill_ring(pool["v"],
-                                                        dense["v"], slot)}
+                        "k": paged_kv.pack_prefill_ring(
+                            pool["k"], dense["k"], row_of_slot, valid),
+                        "v": paged_kv.pack_prefill_ring(
+                            pool["v"], dense["v"], row_of_slot, valid)}
             else:
-                gp[f"p{pi}"] = paged_kv.pack_prefill_state(pool, dense, slot)
+                gp[f"p{pi}"] = paged_kv.pack_prefill_state(
+                    pool, dense, row_of_slot, valid)
         out[f"g{g}"] = gp
     return out
 

@@ -25,8 +25,6 @@ from _hypothesis_compat import given, settings, strategies as st
 from repro.configs import get_config
 from repro.kernels import ops, ref
 from repro.launch.engine import Engine, EngineConfig, SamplingParams
-from repro.launch.serve import (Scheduler, SchedulerConfig, ServeConfig,
-                                Server)
 from repro.models import attention as attn_lib
 from repro.models import paged_kv
 from repro.models.model import Model
@@ -299,24 +297,6 @@ def test_engine_non_pow2_block_size(rng):
     assert eng.stats()["blocks_used"] == 0
 
 
-def test_legacy_server_and_scheduler_shims(rng):
-    """The deprecated launch.serve entry points still work and now agree
-    with the unbatched oracle on ragged prompts."""
-    cfg = get_config("olmo_1b").smoke()
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    prompts = [[1, 2, 3], [4, 5, 6, 7, 8, 9, 10]]
-    want = [_oracle_greedy(model, params, p, 5) for p in prompts]
-    server = Server(model, params, ServeConfig(batch_size=2, max_len=64))
-    assert server.generate(prompts, 5) == want
-    sched = Scheduler(model, params,
-                      SchedulerConfig(num_slots=2, block_size=4,
-                                      num_blocks=17, max_len=32))
-    reqs = [sched.submit(p, 5) for p in prompts]
-    sched.run()
-    assert [r.out for r in reqs] == want and all(r.done for r in reqs)
-
-
 # -- 5. scheduler invariants --------------------------------------------
 
 
@@ -416,8 +396,11 @@ def test_optimistic_admission_with_preemption(rng):
 
 def test_bucketed_prefill_compile_cap(rng):
     """Acceptance: 32 requests over >= 12 distinct prompt lengths compile
-    at most 5 prefill entries (power-of-two buckets, asserted via the jit
-    cache), and every output still matches the unbatched oracle."""
+    at most (length buckets) x (batch buckets) prefill entries — lengths
+    3..20 under block 4 span 4 pow-2 buckets {4, 8, 16, 32}; batch widths
+    with 4 slots span at most {1, 2, 4} — and every output still matches
+    the unbatched oracle. Batched admission must also actually batch:
+    fewer prefill calls than requests."""
     cfg = get_config("olmo_1b").smoke()
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -431,10 +414,75 @@ def test_bucketed_prefill_compile_cap(rng):
     got = eng.generate(prompts, SamplingParams(max_tokens=3))
     st = eng.stats()
     assert st["bucketed_prefill"]
-    assert st["prefill_compiles"] <= 5, st
+    assert st["prefill_compiles"] <= 4 * 3, st
+    assert st["prefill_reqs"] == 32, st
+    assert st["prefill_calls"] < 32, "admission never batched a prefill"
     # spot-check correctness across buckets (cheap subset)
     for i in (0, 7, 19, 31):
         assert got[i] == _oracle_greedy(model, params, prompts[i], 3)
+
+
+def test_batched_prefill_admission_one_call(rng):
+    """A same-bucket burst into an idle engine prefills as ONE batched
+    call (FCFS prefix drain), and the scattered true-length caches are
+    exact: outputs match the unbatched oracle per request."""
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # lengths 5..8 share the pow-2 bucket 8 under block_size 4
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, L)))
+               for L in (5, 8, 6, 7)]
+    want = [_oracle_greedy(model, params, p, 4) for p in prompts]
+    eng = Engine(model, params,
+                 EngineConfig(backend="paged", num_slots=4, block_size=4,
+                              num_blocks=33, max_len=32))
+    got = eng.generate(prompts, SamplingParams(max_tokens=4))
+    st = eng.stats()
+    assert got == want, (got, want)
+    assert st["prefill_calls"] == 1, st
+    assert st["prefill_reqs"] == 4, st
+    assert st["blocks_used"] == 0, st
+
+
+def test_batched_prefill_respects_max_prefill_batch(rng):
+    """The drain cap: max_prefill_batch=2 splits a 4-request same-bucket
+    burst into two batched calls; outputs unchanged."""
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, L)))
+               for L in (5, 8, 6, 7)]
+    want = [_oracle_greedy(model, params, p, 4) for p in prompts]
+    eng = Engine(model, params,
+                 EngineConfig(backend="paged", num_slots=4, block_size=4,
+                              num_blocks=33, max_len=32,
+                              max_prefill_batch=2))
+    got = eng.generate(prompts, SamplingParams(max_tokens=4))
+    st = eng.stats()
+    assert got == want
+    assert st["prefill_calls"] == 2, st
+    assert st["prefill_reqs"] == 4, st
+
+
+def test_batched_prefill_stops_at_bucket_boundary(rng):
+    """FCFS prefix semantics: a queue [8-bucket, 8-bucket, 16-bucket,
+    8-bucket] drains as {two 8s} then {16} then {8} — never skipping
+    ahead to glue the fourth request onto the first batch."""
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    plens = (6, 8, 12, 5)                 # buckets 8, 8, 16, 8 (block 4)
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, L)))
+               for L in plens]
+    want = [_oracle_greedy(model, params, p, 3) for p in prompts]
+    eng = Engine(model, params,
+                 EngineConfig(backend="paged", num_slots=4, block_size=4,
+                              num_blocks=65, max_len=32))
+    got = eng.generate(prompts, SamplingParams(max_tokens=3))
+    st = eng.stats()
+    assert got == want
+    assert st["prefill_calls"] == 3, st
+    assert st["prefill_reqs"] == 4, st
 
 
 def test_engine_queues_when_pool_tight(rng):

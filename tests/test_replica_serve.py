@@ -1,0 +1,307 @@
+"""Multi-replica data-parallel serving (ReplicaSet) + shared queue.
+
+Contract, in two halves:
+
+In-process (single device, ``mesh=None`` — replicas are plain engines):
+  * ReplicaSet(dp=2) is token-identical to a single Engine on ragged
+    prompts, greedy AND seeded stochastic sampling, both backends;
+  * queue fairness under saturation: dispatch is strictly FCFS (the
+    shared-queue head is never overtaken), every request completes, and
+    no request's shared-queue wait is unbounded;
+  * zero block leaks across ALL replicas under per-replica preemption;
+  * the dispatch policies place work deterministically (least-loaded
+    spreads, round-robin rotates) and batched prefill admission still
+    batches inside each replica.
+
+Subprocess (8 fake CPU devices, like test_sharded_serve): dp=2 tp=2 —
+each replica on its own (data=2, model=2) submesh with its own
+head-sharded pool — stays token-identical to the single unsharded
+engine across olmo / recurrentgemma / xlstm.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.engine import (Engine, EngineConfig, ReplicaSet,
+                                 SamplingParams)
+from repro.models.model import Model
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _smoke(arch="olmo_1b"):
+    cfg = get_config(arch).smoke()
+    model = Model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _ragged_work(cfg, rng, n=6):
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, L)))
+               for L in (3, 7, 12, 5, 9, 14)[:n]]
+    sp = [SamplingParams(max_tokens=5),
+          SamplingParams(max_tokens=4, temperature=0.9, top_k=12, seed=3),
+          SamplingParams(max_tokens=6, temperature=1.0, top_p=0.85,
+                         seed=5),
+          SamplingParams(max_tokens=3),
+          SamplingParams(max_tokens=5, temperature=0.7, seed=11),
+          SamplingParams(max_tokens=4)][:n]
+    return prompts, sp
+
+
+@pytest.mark.parametrize("backend", ["paged", "static"])
+def test_replicaset_token_identical_to_single_engine(rng, backend):
+    """dp=2 == one engine, greedy + seeded sampling, both backends."""
+    cfg, model, params = _smoke()
+    prompts, sp = _ragged_work(cfg, rng)
+    base = dict(backend=backend, num_slots=3, block_size=4,
+                num_blocks=33, max_len=32)
+    want = Engine(model, params,
+                  EngineConfig(**base)).generate(prompts, sp)
+    rset = ReplicaSet(model, params, EngineConfig(**base), dp=2)
+    got = rset.generate(prompts, sp)
+    assert got == want, (got, want)
+    st = rset.stats()
+    assert st["blocks_used"] == 0
+    assert sum(st["dispatched"]) == len(prompts)
+    assert all(d > 0 for d in st["dispatched"]), \
+        "least-loaded never spread across replicas"
+
+
+def test_replicaset_fcfs_fairness_under_saturation(rng):
+    """Satellite invariant: with every replica saturated (1 slot each,
+    12 queued requests), dispatch stays strictly FCFS — request i never
+    leaves the shared queue after request j > i — every request
+    completes, and the max shared-queue wait is bounded by the drain
+    time of the requests ahead (no unbounded waiting)."""
+    cfg, model, params = _smoke()
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, 4 + i % 3)))
+               for i in range(12)]
+    rset = ReplicaSet(
+        model, params,
+        EngineConfig(backend="paged", num_slots=1, block_size=4,
+                     num_blocks=9, max_len=32), dp=2)
+    order = []
+    orig_dispatch = rset._dispatch
+
+    def spying_dispatch():
+        before = {h.uid for h in rset.queue}
+        moved = orig_dispatch()
+        after = {h.uid for h in rset.queue}
+        order.extend(sorted(before - after))
+        return moved
+
+    rset._dispatch = spying_dispatch
+    handles = [rset.add_request(p, SamplingParams(max_tokens=4))
+               for p in prompts]
+    rset.drain()
+    assert all(h.finished for h in handles)
+    assert order == sorted(order), f"dispatch overtook FCFS: {order}"
+    st = rset.stats()
+    assert len(order) == 12
+    # 12 requests over 2 single-slot replicas, <= 4+4 tokens each: the
+    # last request waits at most the steps the 10 ahead of it occupy
+    assert st["queue_wait_steps_max"] <= 12 * 8
+    assert st["blocks_used"] == 0
+
+
+def test_replicaset_preemption_stays_local_no_leaks(rng):
+    """Pools too small for each replica's co-admitted worst cases force
+    per-replica LIFO preemption; outputs still match the uncontended
+    single engine and every replica's allocator drains to empty."""
+    cfg, model, params = _smoke()
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, 8)))
+               for _ in range(6)]
+    sp = SamplingParams(max_tokens=16)
+    want = Engine(model, params,
+                  EngineConfig(backend="paged", num_slots=3, block_size=4,
+                               num_blocks=65, max_len=64)).generate(
+                      prompts, sp)
+    rset = ReplicaSet(
+        model, params,
+        EngineConfig(backend="paged", num_slots=3, block_size=4,
+                     num_blocks=14, max_len=64), dp=2)
+    got = rset.generate(prompts, sp)
+    assert got == want
+    st = rset.stats()
+    assert st["preemptions"] >= 1, st
+    assert st["blocks_used"] == 0
+    for eng in rset.replicas:
+        be = eng.backend
+        assert be.alloc.free_count == be.layout.usable_blocks
+
+
+def test_replicaset_round_robin_rotates(rng):
+    cfg, model, params = _smoke()
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, 5)))
+               for _ in range(6)]
+    rset = ReplicaSet(
+        model, params,
+        EngineConfig(backend="paged", num_slots=4, block_size=4,
+                     num_blocks=33, max_len=32), dp=2,
+        policy="round_robin")
+    rset.generate(prompts, SamplingParams(max_tokens=3))
+    assert rset.stats()["dispatched"] == [3, 3]
+
+
+def test_replicaset_batched_prefill_inside_replicas(rng):
+    """A same-bucket burst split across replicas still batches: total
+    prefill calls well under one per request."""
+    cfg, model, params = _smoke()
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, L)))
+               for L in (5, 8, 6, 7, 5, 8, 7, 6)]
+    rset = ReplicaSet(
+        model, params,
+        EngineConfig(backend="paged", num_slots=4, block_size=4,
+                     num_blocks=33, max_len=32), dp=2)
+    rset.generate(prompts, SamplingParams(max_tokens=3))
+    st = rset.stats()
+    assert st["prefill_reqs"] == 8
+    assert st["prefill_calls"] <= 4, st
+
+
+def test_replicaset_rejects_impossible_request(rng):
+    """Validation happens at the shared queue, not at dispatch: an
+    over-budget request raises immediately and nothing is enqueued."""
+    cfg, model, params = _smoke()
+    rset = ReplicaSet(
+        model, params,
+        EngineConfig(backend="paged", num_slots=2, block_size=4,
+                     num_blocks=5, max_len=64), dp=2)
+    with pytest.raises(ValueError):
+        rset.add_request(list(range(1, 9)), SamplingParams(max_tokens=32))
+    assert not rset.has_work
+    with pytest.raises(ValueError):
+        ReplicaSet(model, params,
+                   EngineConfig(backend="paged",
+                                mesh="not-none"), dp=2)
+
+
+# -- subprocess: dp=2 x tp=2 over 8 fake devices ------------------------
+
+_PRELUDE = """
+import jax, numpy as np
+from repro.configs import get_config
+from repro.launch.engine import (Engine, EngineConfig, ReplicaSet,
+                                 SamplingParams)
+from repro.launch.mesh import make_mesh
+from repro.models.model import Model
+
+assert len(jax.devices()) == 8
+MESH = make_mesh((2, 2), ("data", "model"))   # dp x tp: 4 of 8 devices
+
+def setup(arch):
+    cfg = get_config(arch).smoke()
+    model = Model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+def work(cfg, rng):
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, L)))
+               for L in (3, 7, 12, 6)]
+    sp = [SamplingParams(max_tokens=5),
+          SamplingParams(max_tokens=5, temperature=0.9, top_k=12,
+                         seed=3),
+          SamplingParams(max_tokens=5, temperature=1.0, top_p=0.85,
+                         seed=5),
+          SamplingParams(max_tokens=4)]
+    return prompts, sp
+"""
+
+
+def _run(body: str):
+    # Dedent the body BEFORE prepending the (unindented) prelude; the
+    # "body ran" marker guards against the body silently parsing into a
+    # prelude trailing function (see test_sharded_serve.py).
+    code = _PRELUDE + textwrap.dedent(body)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(_ROOT, "src"),
+               JAX_PLATFORMS="cpu")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nERR:\n{proc.stderr}"
+    assert "body ran" in proc.stdout, f"test body never executed:\n{code}"
+    return proc.stdout
+
+
+def test_replicaset_dp2_tp2_token_identical():
+    """Acceptance: ReplicaSet(dp=2) over (2, 2) submeshes — each replica
+    head-sharding its own pool over its model axis — emits tokens
+    identical to the single unsharded engine, greedy and seeded, on
+    olmo (head-shard path) and recurrentgemma (GSPMD fallback)."""
+    _run("""
+    from repro.launch.mesh import submeshes
+    rng = np.random.default_rng(0)
+    for arch in ("olmo_1b", "recurrentgemma_2b"):
+        cfg, model, params = setup(arch)
+        prompts, sp = work(cfg, rng)
+        base = dict(backend="paged", num_slots=2, block_size=4,
+                    num_blocks=33, max_len=32)
+        want = Engine(model, params, EngineConfig(
+            **base)).generate(prompts, sp)
+        rset = ReplicaSet(model, params, EngineConfig(**base),
+                          dp=2, mesh=MESH)
+        subs = [e.cfg.mesh for e in rset.replicas]
+        assert all(dict(zip(s.axis_names, s.devices.shape))
+                   == {"data": 1, "model": 2} for s in subs)
+        assert not set(subs[0].devices.flat) & set(subs[1].devices.flat)
+        got = rset.generate(prompts, sp)
+        assert got == want, (arch, got, want)
+        assert rset.stats()["blocks_used"] == 0
+        print(arch, "ok")
+    print("body ran")
+    """)
+
+
+def test_replicaset_dp2_preemption_no_leaks_sharded():
+    """Per-replica LIFO preemption on head-sharded pools: outputs match
+    the uncontended run; every replica's allocator and table drain."""
+    _run("""
+    from repro.models import paged_kv
+    rng = np.random.default_rng(2)
+    cfg, model, params = setup("olmo_1b")
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, 8)))
+               for _ in range(6)]
+    sp = SamplingParams(max_tokens=16)
+    want = Engine(model, params, EngineConfig(
+        backend="paged", num_slots=3, block_size=4, num_blocks=65,
+        max_len=64)).generate(prompts, sp)
+    rset = ReplicaSet(model, params, EngineConfig(
+        backend="paged", num_slots=3, block_size=4, num_blocks=14,
+        max_len=64), dp=2, mesh=MESH)
+    got = rset.generate(prompts, sp)
+    st = rset.stats()
+    assert st["preemptions"] >= 1, st
+    assert got == want
+    assert st["blocks_used"] == 0
+    for eng in rset.replicas:
+        be = eng.backend
+        assert be.alloc.free_count == be.layout.usable_blocks
+        assert np.all(be.table == paged_kv.NULL_BLOCK)
+    print("body ran")
+    """)
+
+
+@pytest.mark.slow
+def test_replicaset_dp2_third_arch_xlstm():
+    """xLSTM: per-slot mlstm/slstm states shard over each replica's
+    submesh while pools stay head-sharded — still token-identical."""
+    _run("""
+    rng = np.random.default_rng(4)
+    cfg, model, params = setup("xlstm_1_3b")
+    prompts, sp = work(cfg, rng)
+    base = dict(backend="paged", num_slots=2, block_size=4,
+                num_blocks=33, max_len=32)
+    want = Engine(model, params, EngineConfig(
+        **base)).generate(prompts, sp)
+    got = ReplicaSet(model, params, EngineConfig(**base),
+                     dp=2, mesh=MESH).generate(prompts, sp)
+    assert got == want, (got, want)
+    print("body ran")
+    """)

@@ -10,10 +10,11 @@ tensors live, never WHAT tokens come out. On a (4 data x 2 model) mesh:
     fallback);
   * zero block leaks after LIFO preemption on the sharded pool;
   * the static backend matches under the same mesh;
-  * the deprecated ``Server(mesh=...)`` no longer raises (PR-1 caller
-    compatibility restored) and produces the unsharded outputs;
   * the head-sharded paged attention op matches the single-device oracle
     at the kernel level.
+
+(Data-parallel replica serving over submeshes lives in
+``tests/test_replica_serve.py``.)
 
 The suite's default process must keep 1 device (smoke-test contract), so
 these tests re-exec python with XLA_FLAGS set, like test_distribution.py.
@@ -138,28 +139,6 @@ def test_sharded_pool_preemption_no_leaks():
     be = eng.backend
     assert be.alloc.free_count == be.layout.usable_blocks
     assert np.all(be.table == paged_kv.NULL_BLOCK)
-    print("body ran")
-    """)
-
-
-def test_legacy_server_mesh_restored():
-    """Regression: ``Server(mesh=...)`` raised NotImplementedError after
-    the PR-2 redesign; it must now warn, route into the sharded static
-    backend and reproduce the unsharded outputs."""
-    _run("""
-    import warnings
-    from repro.launch.serve import Server, ServeConfig
-    cfg, model, params = setup("olmo_1b")
-    prompts = [[1, 2, 3], [4, 5, 6, 7, 8, 9, 10]]
-    plain = Server(model, params,
-                   ServeConfig(batch_size=2, max_len=64)).generate(
-                       prompts, 5)
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        srv = Server(model, params, ServeConfig(batch_size=2, max_len=64),
-                     mesh=MESH)
-        assert any(issubclass(x.category, DeprecationWarning) for x in w)
-    assert srv.generate(prompts, 5) == plain
     print("body ran")
     """)
 

@@ -17,7 +17,7 @@ from repro.configs import ARCH_IDS, all_configs, get_config
 from repro.core import solvers
 from repro.core.precision import F64, VP128
 from repro.data.pipeline import DataConfig, SyntheticLM
-from repro.launch.serve import ServeConfig, Server
+from repro.launch.engine import Engine, EngineConfig, SamplingParams
 from repro.launch.train import TrainLoopConfig, train_loop
 from repro.models.model import Model, input_specs
 from repro.models.transformer import RunCtx
@@ -69,9 +69,10 @@ def test_server_generates(rng):
     cfg = get_config("olmo_1b").smoke()
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    server = Server(model, params, ServeConfig(batch_size=2, max_len=64))
+    eng = Engine(model, params,
+                 EngineConfig(backend="static", num_slots=2, max_len=64))
     prompts = [[1, 2, 3], [4, 5, 6, 7, 8]]
-    outs = server.generate(prompts, n_new=8)
+    outs = eng.generate(prompts, SamplingParams(max_tokens=8))
     assert len(outs) == 2 and all(len(o) == 8 for o in outs)
     assert all(0 <= t < cfg.vocab_size for o in outs for t in o)
 
