@@ -32,7 +32,7 @@ import sys
 def check(baseline: dict, fresh: dict, *, tolerance: float,
           absolute: bool) -> list[str]:
     errors = []
-    for section in ("continuous", "sharded", "replicas"):
+    for section in ("continuous", "sharded", "replicas", "speculative"):
         leaked = fresh.get(section, {}).get("blocks_leaked", 0)
         if leaked:
             errors.append(f"{section}: {leaked} blocks leaked")
@@ -61,6 +61,23 @@ def check(baseline: dict, fresh: dict, *, tolerance: float,
     if fresh_c > base_c:
         errors.append(
             f"prefill compile count grew: {fresh_c} > baseline {base_c}")
+    # speculative decode: the speedup over non-speculative paged decode
+    # is already machine-normalized (both engines run in this process),
+    # so it is compared directly. Skipped when the baseline predates
+    # the section.
+    if "speculative" in baseline and "speculative" in fresh:
+        base_s = baseline["speculative"]["speedup_vs_paged"]
+        fresh_s = fresh["speculative"]["speedup_vs_paged"]
+        floor_s = (1.0 - tolerance) * base_s
+        print(f"speculative speedup_vs_paged: baseline {base_s:.3f}, "
+              f"fresh {fresh_s:.3f}, floor {floor_s:.3f}")
+        if fresh_s < floor_s:
+            errors.append(
+                f"speculative speedup regressed >{tolerance:.0%}: "
+                f"{fresh_s:.3f} < {floor_s:.3f} (baseline {base_s:.3f})")
+        if fresh["speculative"]["accepted"] <= 0:
+            errors.append("speculative section accepted no drafts — "
+                          "the drafter or accept rule is broken")
     return errors
 
 

@@ -6,25 +6,58 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_vrp  — §3.3 precision-vs-convergence + precision-vs-cost
   bench_noc  — §4   NoC/C2C bandwidth table + collective model
   bench_lm   — §5   bring-up workloads (DGEMM/STREAM) + LM steps
-  bench_serve — serving engine static-vs-continuous smoke (also writes
-                machine-readable BENCH_serve.json)
+  bench_serve — serving engine smoke: static vs continuous vs sharded
+                vs replicas vs speculative (also writes machine-readable
+                BENCH_serve.json; see docs/benchmarks.md for the schema)
 
 Run: PYTHONPATH=src python -m benchmarks.run [section ...]
 """
 
-import sys
+import argparse
+
+SECTIONS = ("vec", "stx", "vrp", "noc", "lm", "serve")
+
+_SERVE_FLAGS = """\
+the `serve` section runs benchmarks/bench_serve.py with its smoke
+defaults. Run that module directly for the full knob set:
+
+  --arch ARCH          model config (default olmo_1b; --smoke shrinks it)
+  --requests N         requests per trace          --rate R     req/s
+  --mem-tokens N       KV cache budget (tokens, shared by all engines)
+  --slots N            decode slots (continuous)   --block-size N
+  --max-len N          per-sequence position cap   --watermark N
+  --tp T               tensor-parallel degree for the `sharded` section
+  --dp R               data-parallel replicas for the `replicas` section
+  --spec-tokens K      draft tokens per step for the `speculative`
+                       section (K+1 positions verified per step)
+  --drafter NAME       ngram | draft_model (speculative proposal source)
+  --json PATH          machine-readable results (default BENCH_serve.json)
+
+field-by-field JSON schema and CI thresholds: docs/benchmarks.md
+"""
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.run",
+        description=__doc__,
+        epilog=_SERVE_FLAGS,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("sections", nargs="*", choices=[[], *SECTIONS],
+                    metavar="section",
+                    help=f"sections to run (default: all of "
+                         f"{', '.join(SECTIONS)})")
+    args = ap.parse_args()
+
     from benchmarks import (bench_lm, bench_noc, bench_serve, bench_stx,
                             bench_vec, bench_vrp)
 
-    sections = {"vec": bench_vec, "stx": bench_stx, "vrp": bench_vrp,
-                "noc": bench_noc, "lm": bench_lm, "serve": bench_serve}
-    want = sys.argv[1:] or list(sections)
+    modules = {"vec": bench_vec, "stx": bench_stx, "vrp": bench_vrp,
+               "noc": bench_noc, "lm": bench_lm, "serve": bench_serve}
+    want = args.sections or list(SECTIONS)
     print("name,us_per_call,derived")
     for name in want:
-        sections[name].run()
+        modules[name].run()
 
 
 if __name__ == "__main__":

@@ -49,6 +49,11 @@ def main():
                          "shared admission queue (ReplicaSet); splits "
                          "the mesh's data axis, each replica keeping "
                          "its own KV pool and TP subgrid")
+    ap.add_argument("--spec-tokens", type=int, default=0,
+                    help="speculative decoding: draft tokens per step "
+                         "(paged backend; ngram self-drafting — outputs "
+                         "are bit-identical, only faster on repetitive "
+                         "text)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace for CI")
     args = ap.parse_args()
@@ -74,7 +79,8 @@ def main():
 
     ecfg = EngineConfig(
         backend=args.backend, num_slots=args.slots, block_size=16,
-        num_blocks=args.mem_tokens // 16 + 1, max_len=128)
+        num_blocks=args.mem_tokens // 16 + 1, max_len=128,
+        spec_tokens=args.spec_tokens)
     if args.dp > 1:
         engine = ReplicaSet(model, params, ecfg, dp=args.dp, mesh=mesh)
         print(f"replica set: dp={args.dp}, "

@@ -24,7 +24,10 @@ from . import ref as _ref
 from .flash_attention import flash_attention_pallas
 from .paged_attention import (paged_decode_attention_headshard as
                               _pa_headshard)
-from .paged_attention import paged_decode_attention_pallas
+from .paged_attention import (paged_verify_attention_headshard as
+                              _pv_headshard)
+from .paged_attention import (paged_decode_attention_pallas,
+                              paged_verify_attention_pallas)
 from .rglru_scan import rglru_scan_pallas
 from .stx_matmul import stx_matmul_pallas
 from .stx_stencil import stencil2d_pallas, stencil3d_pallas
@@ -143,6 +146,29 @@ def paged_decode_attention(q, k_pool, v_pool, block_table, lengths, *,
                                          interpret=interp)
 
 
+def paged_verify_attention(q, k_pool, v_pool, block_table, lengths, *,
+                           window=None, scale=None, mode="auto",
+                           interpret=False):
+    """Multi-query-per-slot decode attention (speculative verify step).
+
+    q: (B, K1, Hq, D) — K+1 query rows per sequence at positions
+    ``lengths[b] + j``, whose K/V are already written to the pool;
+    lengths: (B,) int32 tokens cached BEFORE the verify window. Row j
+    attends positions < ``lengths[b] + 1 + j`` (causal within the
+    window), so each row is equivalent to ``paged_decode_attention`` at
+    its own length while every pool block is fetched once for all rows.
+    """
+    use, interp = _use_pallas(mode)
+    interp = interp or interpret
+    if not use and not interp:
+        return _ref.paged_verify_attention(q, k_pool, v_pool, block_table,
+                                           lengths, window=window,
+                                           scale=scale)
+    return paged_verify_attention_pallas(q, k_pool, v_pool, block_table,
+                                         lengths, window=window,
+                                         scale=scale, interpret=interp)
+
+
 def paged_decode_attention_headshard(q, k_pool, v_pool, block_table,
                                      lengths, *, mesh, tp_axis="model",
                                      window=None, scale=None, mode="auto",
@@ -159,6 +185,25 @@ def paged_decode_attention_headshard(q, k_pool, v_pool, block_table,
         attend = functools.partial(paged_decode_attention_pallas,
                                    interpret=interp)
     return _pa_headshard(q, k_pool, v_pool, block_table, lengths,
+                         mesh=mesh, tp_axis=tp_axis, window=window,
+                         scale=scale, attend=attend)
+
+
+def paged_verify_attention_headshard(q, k_pool, v_pool, block_table,
+                                     lengths, *, mesh, tp_axis="model",
+                                     window=None, scale=None, mode="auto",
+                                     interpret=False):
+    """Head-sharded multi-device multi-query verify attention — the
+    speculative window over the head-sharded pool, per-shard dispatch
+    mirroring ``paged_decode_attention_headshard``."""
+    use, interp = _use_pallas(mode)
+    interp = interp or interpret
+    if not use and not interp:
+        attend = _ref.paged_verify_attention
+    else:
+        attend = functools.partial(paged_verify_attention_pallas,
+                                   interpret=interp)
+    return _pv_headshard(q, k_pool, v_pool, block_table, lengths,
                          mesh=mesh, tp_axis=tp_axis, window=window,
                          scale=scale, attend=attend)
 

@@ -128,6 +128,169 @@ def paged_decode_attention_pallas(q, k_pool, v_pool, block_table, lengths, *,
       q, k_pool, v_pool)
 
 
+def _pv_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+               m_ref, l_ref, acc_ref, *, scale, window, block_size,
+               hkv, group, nb, k1):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, MASK_VALUE)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]                 # cached BEFORE the verify window
+    k_lo = i * block_size
+    # the block is needed if ANY of the K+1 rows can see it: the last
+    # row has the highest upper bound (length + k1), the first row the
+    # lowest window floor (length + 1 - window)
+    needed = k_lo < length + k1
+    if window is not None:
+        needed = jnp.logical_and(needed,
+                                 k_lo + block_size > length + 1 - window)
+
+    @pl.when(needed)
+    def _block():
+        hq = hkv * group
+        q = q_ref[0].astype(jnp.float32)                # (K1, Hq, D)
+        k = k_ref[0].astype(jnp.float32)                # (BS, Hkv, D)
+        v = v_ref[0].astype(jnp.float32)
+        d = q.shape[-1]
+        # group the query rows under their kv heads: (Hkv, K1*group, D)
+        qg = q.reshape(k1, hkv, group, d).transpose(1, 0, 2, 3) \
+              .reshape(hkv, k1 * group, d)
+        kt = k.transpose(1, 0, 2)                       # (Hkv, BS, D)
+        vt = v.transpose(1, 0, 2)
+        s = jax.lax.dot_general(qg, kt, (((2,), (2,)), ((0,), (0,))),
+                                preferred_element_type=jnp.float32) * scale
+        # -> per-query-row layout (K1*Hq, BS), row-major in (K1, Hq)
+        s = s.reshape(hkv, k1, group, block_size).transpose(1, 0, 2, 3) \
+             .reshape(k1 * hq, block_size)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32,
+                                               (k1 * hq, block_size), 1)
+        # row j of the q-block attends positions < length + 1 + j
+        j = jax.lax.broadcasted_iota(jnp.int32,
+                                     (k1 * hq, block_size), 0) // hq
+        limit = length + 1 + j
+        mask = kpos < limit
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos >= limit - window)
+        s = jnp.where(mask, s, MASK_VALUE)
+
+        m_prev = m_ref[...]                             # (K1*Hq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        pg = p.reshape(k1, hkv, group, block_size).transpose(1, 0, 2, 3) \
+              .reshape(hkv, k1 * group, block_size)
+        pv = jax.lax.dot_general(pg, vt, (((2,), (1,)), ((0,), (0,))),
+                                 preferred_element_type=jnp.float32)
+        pv = pv.reshape(hkv, k1, group, d).transpose(1, 0, 2, 3) \
+               .reshape(k1 * hq, d)
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = m_new
+
+    @pl.when(i == nb - 1)
+    def _store():
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = out.reshape(k1, hkv * group, -1).astype(o_ref.dtype)
+
+
+def paged_verify_attention_pallas(q, k_pool, v_pool, block_table, lengths,
+                                  *, window=None, scale=None,
+                                  interpret=False):
+    """Multi-query-per-slot paged decode attention (speculative verify).
+
+    q: (B, K1, Hq, D) — K+1 query rows per sequence for positions
+    ``lengths[b] + j``; pools: (NB, BS, Hkv, D); block_table: (B, NBMAX);
+    lengths: (B,) tokens cached BEFORE the window (the window's own K/V
+    must already be written to the pool). Row j attends positions
+    < ``lengths[b] + 1 + j``. -> (B, K1, Hq, D).
+
+    Same grid walk as ``paged_decode_attention_pallas`` — one step per
+    (sequence, logical block), kv innermost-sequential carrying the
+    online-softmax scratch — but the q-block is K+1 rows, so a verify
+    step fetches each block ONCE for all K+1 queries instead of K+1
+    times across sequential decode steps (the whole point: the decode
+    loop's memory traffic amortizes over the speculative window).
+    """
+    B, K1, Hq, D = q.shape
+    _, BS, Hkv, _ = k_pool.shape
+    group = Hq // Hkv
+    nbmax = block_table.shape[1]
+    scale = float(scale) if scale is not None else float(1.0 / np.sqrt(D))
+
+    def kv_map(b, i, bt, lens):
+        return (bt[b, i], 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, nbmax),
+        in_specs=[
+            pl.BlockSpec((1, K1, Hq, D), lambda b, i, bt, lens: (b, 0, 0, 0)),
+            pl.BlockSpec((1, BS, Hkv, D), kv_map),
+            pl.BlockSpec((1, BS, Hkv, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, K1, Hq, D),
+                               lambda b, i, bt, lens: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((K1 * Hq, 1), jnp.float32),    # running max
+            pltpu.VMEM((K1 * Hq, 1), jnp.float32),    # running sum
+            pltpu.VMEM((K1 * Hq, D), jnp.float32),    # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_pv_kernel, scale=scale, window=window,
+                          block_size=BS, hkv=Hkv, group=group, nb=nbmax,
+                          k1=K1),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K1, Hq, D), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pool, v_pool)
+
+
+def paged_verify_attention_headshard(q, k_pool, v_pool, block_table,
+                                     lengths, *, mesh, tp_axis="model",
+                                     window=None, scale=None, attend=None,
+                                     interpret=False):
+    """Multi-device multi-query verify attention over a HEAD-sharded
+    pool: the ``paged_decode_attention_headshard`` layout with a K+1
+    q-block per sequence. Each device of ``tp_axis`` runs the stock
+    verify kernel over its kv-head shard of every block — kv-head
+    groups attend independently, so the sharded output needs NO
+    collective and no pool byte crosses the interconnect.
+
+    q: (B, K1, Hq, D) sharded over Hq; pools: (NB, BS, Hkv, D) sharded
+    over Hkv; requires ``paged_kv.head_shard_ok`` (head counts divide
+    |tp|). ``attend`` is the per-shard op; defaults to the Pallas
+    kernel.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.compat import shard_map
+
+    if attend is None:
+        attend = functools.partial(paged_verify_attention_pallas,
+                                   interpret=interpret)
+    tp = tp_axis
+
+    def local(qv, kp, vp, bt, ln):
+        return attend(qv, kp, vp, bt, ln, window=window, scale=scale)
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, None, tp, None), P(None, None, tp, None),
+                  P(None, None, tp, None), P(None, None), P(None)),
+        out_specs=P(None, None, tp, None),
+    )(q, k_pool, v_pool, block_table.astype(jnp.int32),
+      lengths.astype(jnp.int32))
+
+
 def paged_decode_attention_headshard(q, k_pool, v_pool, block_table,
                                      lengths, *, mesh, tp_axis="model",
                                      window=None, scale=None, attend=None,

@@ -146,6 +146,44 @@ def paged_decode_attention(q, k_pool, v_pool, block_table, lengths, *,
                       vx.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_verify_attention(q, k_pool, v_pool, block_table, lengths, *,
+                           window=None, scale=None):
+    """Oracle multi-query decode attention over a block-paged KV cache.
+
+    The speculative-decode verify step: each sequence contributes a
+    q-block of K+1 query rows for the positions ``lengths[b] + j``
+    (j = 0..K), whose K/V must already be written to the pool. Row j
+    attends positions < ``lengths[b] + j + 1`` — causal within the
+    window, so the block-row j result is bit-equal to the single-query
+    ``paged_decode_attention`` at length ``lengths[b] + j + 1``.
+
+    q: (B, K1, Hq, D); pools: (NB, BS, Hkv, D); block_table: (B, NBMAX);
+    lengths: (B,) int32 tokens cached BEFORE the verify window. ``window``
+    restricts each row to its last ``window`` positions. -> (B, K1, Hq, D).
+    """
+    B, K1, Hq, D = q.shape
+    _, BS, Hkv, _ = k_pool.shape
+    group = Hq // Hkv
+    scale = float(scale) if scale is not None else float(1.0 / np.sqrt(D))
+    S = block_table.shape[1] * BS
+    k = k_pool[block_table].reshape(B, S, Hkv, D)
+    v = v_pool[block_table].reshape(B, S, Hkv, D)
+    kx = jnp.repeat(k.transpose(0, 2, 1, 3), group, axis=1)  # (B, Hq, S, D)
+    vx = jnp.repeat(v.transpose(0, 2, 1, 3), group, axis=1)
+    logits = jnp.einsum("bjhd,bhsd->bjhs", q.astype(jnp.float32),
+                        kx.astype(jnp.float32)) * scale
+    kpos = jnp.arange(S)[None, None, :]                      # (1, 1, S)
+    limit = lengths[:, None, None] + 1 + jnp.arange(K1)[None, :, None]
+    valid = kpos < limit                                     # (B, K1, S)
+    if window is not None:
+        valid = valid & (kpos >= limit - window)
+    logits = jnp.where(valid[:, :, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.any(valid, -1)[:, :, None, None], probs, 0.0)
+    return jnp.einsum("bjhs,bhsd->bjhd", probs,
+                      vx.astype(jnp.float32)).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # VRP compensated reductions (double-word = 2-term expansion)
 # ---------------------------------------------------------------------------

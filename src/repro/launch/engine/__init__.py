@@ -45,10 +45,14 @@ from repro.launch.engine.api import (Engine, EngineConfig, RequestHandle,
 from repro.launch.engine.replica import ReplicaSet
 from repro.launch.engine.sampling import sample_tokens
 from repro.launch.engine.scheduler import PagedBackend
+from repro.launch.engine.speculative import (DraftModelDrafter,
+                                             NgramDrafter,
+                                             SpecDecodeBackend)
 from repro.launch.engine.static import StaticBackend
 
 __all__ = [
-    "Engine", "EngineConfig", "RequestHandle", "RequestOutput",
-    "SamplingParams", "PagedBackend", "ReplicaSet", "StaticBackend",
+    "DraftModelDrafter", "Engine", "EngineConfig", "NgramDrafter",
+    "PagedBackend", "ReplicaSet", "RequestHandle", "RequestOutput",
+    "SamplingParams", "SpecDecodeBackend", "StaticBackend",
     "sample_tokens",
 ]

@@ -33,17 +33,39 @@ class SamplingParams:
 
     ``temperature <= 0`` selects greedy (argmax) decoding; otherwise
     logits are temperature-scaled, truncated to the ``top_k`` highest
-    (0 = off) and to the smallest prefix of descending-probability
-    tokens with cumulative mass >= ``top_p``, then sampled. ``seed``
-    derives the request's own RNG stream — token t draws from
-    fold_in(PRNGKey(seed), t) — so sampled outputs are reproducible and
-    independent of admission order, slot placement and co-batched
-    traffic. The flip side: requests SHARING a seed share the stream
-    (two identical prompts sample identically) — pass distinct seeds
-    when you want diversity, e.g. best-of-n over one prompt.
-    ``stop_token_ids`` retire the request on match (the stop
-    token is stripped, never emitted), on top of the engine-level
-    ``eos_id``.
+    and to the top-p nucleus, then sampled from the request's own RNG
+    stream.
+
+    Parameters
+    ----------
+    max_tokens : int
+        Retire the request after this many emitted tokens (>= 1).
+    temperature : float
+        Softmax temperature; ``<= 0`` selects greedy decoding.
+    top_k : int
+        Keep only the ``top_k`` highest logits (0 disables; ties at
+        the threshold survive — the standard caveat).
+    top_p : float
+        Nucleus sampling in (0, 1]: keep the smallest prefix of
+        descending-probability tokens with cumulative mass >= top_p.
+    seed : int
+        Derives the request's own RNG stream: token t draws from
+        ``fold_in(PRNGKey(seed), t)``, so sampled outputs are
+        reproducible and independent of admission order, slot
+        placement, co-batched traffic, preemption history, replica
+        placement and speculative decoding. Requests SHARING a seed
+        share the stream (two identical prompts sample identically) —
+        pass distinct seeds when you want diversity, e.g. best-of-n
+        over one prompt.
+    stop_token_ids : tuple of int
+        Retire the request on match (the stop token is stripped, never
+        emitted), on top of the engine-level ``eos_id``.
+
+    Raises
+    ------
+    ValueError
+        On ``max_tokens < 1``, ``top_p`` outside (0, 1], or negative
+        ``top_k``.
     """
 
     max_tokens: int = 16
@@ -63,12 +85,36 @@ class SamplingParams:
 
     @property
     def greedy(self) -> bool:
+        """True when this request decodes greedily (temperature <= 0)."""
         return self.temperature <= 0.0
 
 
 @dataclasses.dataclass
 class RequestHandle:
-    """Live view of one request; token_ids grows as the engine steps."""
+    """Live view of one request; ``token_ids`` grows as the engine steps.
+
+    Attributes
+    ----------
+    uid : int
+        Engine-assigned request id (matches ``RequestOutput.request_id``).
+    prompt : list of int
+        The prompt token ids as submitted.
+    sampling : SamplingParams
+        The request's decoding parameters.
+    token_ids : list of int
+        Tokens emitted so far, in order (stop tokens are stripped).
+    finished : bool
+        True once the request retired.
+    finish_reason : str or None
+        ``"length"`` (max_tokens) or ``"stop"`` (eos / stop token).
+    num_preemptions : int
+        Times this request was LIFO-preempted and later resumed.
+    num_draft_proposed, num_draft_accepted : int
+        Speculative-decoding counters: draft tokens proposed for /
+        accepted into this request (0 unless ``spec_tokens > 0``) —
+        the per-request source of truth behind
+        ``Engine.stats()["spec"]``.
+    """
 
     uid: int
     prompt: list[int]
@@ -77,22 +123,43 @@ class RequestHandle:
     finished: bool = False
     finish_reason: Optional[str] = None      # "length" | "stop"
     num_preemptions: int = 0
+    # speculative decoding: drafts proposed for / accepted into this
+    # request (the bench's accepted-tokens-per-step source of truth)
+    num_draft_proposed: int = 0
+    num_draft_accepted: int = 0
     # internal: RNG stream position (== tokens sampled; differs from
     # len(token_ids) only after a stripped stop token)
     _n_sampled: int = 0
 
     @property
-    def out(self) -> list[int]:              # legacy Scheduler alias
+    def out(self) -> list[int]:
+        """Legacy PR-1 ``Scheduler`` alias for ``token_ids``."""
         return self.token_ids
 
     @property
-    def done(self) -> bool:                  # legacy Scheduler alias
+    def done(self) -> bool:
+        """Legacy PR-1 ``Scheduler`` alias for ``finished``."""
         return self.finished
 
 
 @dataclasses.dataclass(frozen=True)
 class RequestOutput:
-    """One streaming increment: tokens a request gained this step."""
+    """One streaming increment: tokens a request gained this step.
+
+    Attributes
+    ----------
+    request_id : int
+        The owning request's ``RequestHandle.uid``.
+    new_tokens : tuple of int
+        Tokens emitted this step — usually one; empty on a stripped
+        stop token; several under speculative decoding.
+    num_tokens : int
+        Total tokens emitted for the request so far.
+    finished : bool
+        True when this increment retires the request.
+    finish_reason : str or None
+        ``"length"`` or ``"stop"`` when ``finished``, else None.
+    """
 
     request_id: int
     new_tokens: tuple[int, ...]
@@ -127,6 +194,52 @@ def register_sample(req: RequestHandle, tok: int, eos_id: int,
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
+    """Engine/backends configuration (immutable; shared by replicas).
+
+    Parameters
+    ----------
+    backend : {"paged", "static"}
+        ``"paged"`` — continuous batching over the block-paged KV pool
+        (becomes the speculative backend when ``spec_tokens > 0``);
+        ``"static"`` — the lockstep right-padded baseline.
+    num_slots : int
+        Decode batch width (concurrent sequences on device).
+    block_size, num_blocks : int
+        Paged pool geometry: tokens per cache block and pool size
+        (block 0 is the reserved null block).
+    max_len : int
+        Per-sequence position cap (prompt + output).
+    eos_id : int
+        Engine-level stop token; -1 retires on length only.
+    watermark_blocks : int
+        Paged admission headroom: keep this many blocks free for
+        in-flight growth while admitting new sequences.
+    bucketed_prefill : bool
+        Right-pad prompts to power-of-two buckets when the model
+        supports ragged prefill (O(log max_len) prefill compiles).
+    max_prefill_batch : int
+        Cap on requests prefilled in one batched admission call;
+        <= 0 lifts the cap to the slot count.
+    mesh : jax.sharding.Mesh or None
+        Shard params (2-D FSDP x TP), the KV pool (head-sharded over
+        ``tp_axis``) and the compiled steps over this mesh. Host-side
+        scheduling is unchanged; tokens are mesh-independent.
+    tp_axis : str
+        Tensor-parallel mesh axis name.
+    spec_tokens : int
+        Speculative decoding: draft tokens proposed per request per
+        step (K); the verify step scores K+1 positions in one pass.
+        0 disables (see launch/engine/speculative.py).
+    drafter : {"ngram", "draft_model"}
+        Speculative proposal source: zero-parameter prompt lookup, or
+        a small draft model passed via ``draft_model``/``draft_params``.
+    ngram_max : int
+        Longest history suffix the ngram drafter keys on.
+    draft_model, draft_params
+        The draft ``Model`` (attention-only, same vocab) and params for
+        ``drafter="draft_model"``.
+    """
+
     backend: str = "paged"       # "paged" | "static"
     num_slots: int = 8           # decode batch width
     block_size: int = 16         # paged: tokens per cache block
@@ -150,10 +263,72 @@ class EngineConfig:
     # stable across steps. Host-side scheduling is unchanged.
     mesh: Any = None             # jax.sharding.Mesh | None
     tp_axis: str = "model"       # tensor-parallel mesh axis name
+    # Speculative decoding (paged backend only): each scheduled request
+    # proposes up to ``spec_tokens`` draft tokens per step and the
+    # target model verifies the whole window in ONE batched pass
+    # (engine/speculative.py). 0 disables. ``drafter`` picks the
+    # proposal source: "ngram" (zero-extra-params prompt lookup) or
+    # "draft_model" (a small model passed via draft_model/draft_params,
+    # sharing the target's tokenizer/config machinery).
+    spec_tokens: int = 0
+    drafter: str = "ngram"       # "ngram" | "draft_model"
+    ngram_max: int = 3           # longest suffix the ngram drafter keys on
+    draft_model: Any = None      # Model (drafter="draft_model")
+    draft_params: Any = None     # its params
 
 
 class Engine:
-    """Single serving front-end over pluggable execution backends."""
+    """Single serving front-end over pluggable execution backends.
+
+    The Engine owns request validation and the step loop; the backend
+    owns device state and scheduling (admission, growth, preemption,
+    retirement). Decoder-only text LMs with relative/absent positions
+    only.
+
+    Parameters
+    ----------
+    model : Model
+        The target model (decoder-only; enc-dec and absolute-position
+        models raise NotImplementedError).
+    params
+        Its parameter tree (placed onto ``cfg.mesh`` when sharded).
+    cfg : EngineConfig, optional
+        Backend selection and geometry; defaults to ``EngineConfig()``.
+    ctx : RunCtx, optional
+        Kernel/sharding context; defaults to the jnp reference kernels.
+
+    Attributes
+    ----------
+    backend : PagedBackend | SpecDecodeBackend | StaticBackend
+        The execution backend selected by ``cfg``.
+    finished : list of RequestHandle
+        Handles retired so far, in completion order.
+
+    Notes
+    -----
+    Every token is *emitted the step it is sampled* (prefill included),
+    so ``step()`` doubles as the streaming interface. Outputs obey the
+    RNG-stream contract (see ``SamplingParams.seed`` and
+    docs/serving.md): they do not depend on admission order, slot
+    placement, co-batched traffic, preemption, sharding, replica
+    placement, or speculative decoding.
+
+    Invariants the tests rely on: the FCFS queue head is never
+    overtaken (admission drains a queue *prefix*); zero block leaks —
+    every pool block returns to the allocator on retirement,
+    preemption, and speculative rejected-tail rewind (double-frees
+    raise); both backends compile the same power-of-two prefill bucket
+    set (``prefill_bucket``), keeping the jit cache at
+    O(buckets x batch-buckets).
+
+    Examples
+    --------
+    >>> engine = Engine(model, params, EngineConfig(backend="paged"))
+    >>> handle = engine.add_request(prompt, SamplingParams(max_tokens=8))
+    >>> while engine.has_work:
+    ...     for out in engine.step():
+    ...         print(out.request_id, out.new_tokens)
+    """
 
     def __init__(self, model: Model, params, cfg: EngineConfig = None,
                  ctx: Optional[RunCtx] = None):
@@ -182,8 +357,16 @@ class Engine:
                 ctx, shard=shard,
                 decode_head_shard=head_shard_ok(mc, shard.tp_size))
         if self.cfg.backend == "paged":
-            self.backend = PagedBackend(model, params, self.cfg, ctx)
+            if self.cfg.spec_tokens > 0:
+                from repro.launch.engine.speculative import SpecDecodeBackend
+                self.backend = SpecDecodeBackend(model, params, self.cfg,
+                                                 ctx)
+            else:
+                self.backend = PagedBackend(model, params, self.cfg, ctx)
         elif self.cfg.backend == "static":
+            if self.cfg.spec_tokens > 0:
+                raise ValueError(
+                    "speculative decoding requires the paged backend")
             self.backend = StaticBackend(model, params, self.cfg, ctx)
         else:
             raise ValueError(f"unknown backend {self.cfg.backend!r}")
@@ -212,6 +395,7 @@ class Engine:
     def add_request(self, prompt: Sequence[int],
                     sampling: Optional[SamplingParams] = None
                     ) -> RequestHandle:
+        """Validate and enqueue one request; returns its live handle."""
         sampling = sampling or SamplingParams()
         prompt = list(prompt)
         self.check_request(prompt, sampling)
@@ -226,6 +410,7 @@ class Engine:
 
     @property
     def has_work(self) -> bool:
+        """True while any request is waiting or active."""
         return self.backend.has_work
 
     @property
@@ -234,10 +419,17 @@ class Engine:
         return self.backend.finished
 
     def stats(self) -> dict:
+        """Backend telemetry: occupancy, cache utilization, preemption
+        and prefill-compile counters — plus a ``"spec"`` section
+        (aggregate and per-request draft counters) when speculative
+        decoding is on. docs/benchmarks.md documents the derived bench
+        fields."""
         return self.backend.stats()
 
     @property
     def made_progress(self) -> bool:
+        """True when the last ``step()`` admitted, decoded or preempted
+        (the stall detector in ``drive`` keys on it)."""
         return self.backend.made_progress
 
     # -- convenience drivers --------------------------------------------

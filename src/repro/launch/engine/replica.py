@@ -75,7 +75,55 @@ _POLICIES = {"least_loaded": least_loaded, "round_robin": round_robin}
 
 
 class ReplicaSet:
-    """Engine-shaped front-end over R data-parallel engine replicas."""
+    """Engine-shaped front-end over R data-parallel engine replicas.
+
+    Parameters
+    ----------
+    model, params
+        The target model and its parameter tree (shared by replicas).
+    cfg : EngineConfig, optional
+        The PER-REPLICA configuration (slots, pool, spec_tokens, ...);
+        must not carry a mesh — pass it as ``mesh=`` instead.
+    dp : int, optional
+        Replica count; inferred from ``mesh.shape["data"]`` when a mesh
+        is given.
+    mesh : jax.sharding.Mesh, optional
+        A (data, model) mesh; each replica runs on its own
+        ``(1, tp)`` submesh of the data axis.
+    policy : str or callable
+        FCFS dispatch placement: ``"least_loaded"`` (default,
+        fewest committed blocks, ties to the lowest index),
+        ``"round_robin"``, or a callable ``(rset, candidates) -> int``.
+    ctx : RunCtx, optional
+        Kernel/sharding context forwarded to every replica.
+    step_workers : int, optional
+        Opt-in thread pool width for stepping busy replicas
+        concurrently (device execution releases the GIL); off by
+        default — smoke-sized steps lose more to GIL ping-pong than
+        they gain.
+
+    Attributes
+    ----------
+    replicas : list of Engine
+        The R identical engines (own KV pool, own submesh).
+    queue : deque of RequestHandle
+        The ONE shared admission queue; dispatch only ever pops its
+        head (strict FCFS — no skip-ahead).
+    finished : list of RequestHandle
+        Handles retired so far, across replicas, in completion order.
+
+    Notes
+    -----
+    Token streams are bit-identical to a single engine serving the same
+    requests: outputs are a pure function of (params, prompt,
+    SamplingParams) by the engine's RNG-stream contract, independent of
+    which replica, slot, or co-batch a request lands in. Preemption
+    stays replica-local — an evicted request re-enters its OWN
+    replica's queue, never the shared queue. No request waits
+    unboundedly: the head is dispatched as soon as ANY replica frees
+    capacity, and within a replica it inherits the engine's
+    no-livelock guarantee.
+    """
 
     def __init__(self, model: Model, params, cfg: EngineConfig = None,
                  *, dp: Optional[int] = None, mesh=None,
@@ -126,6 +174,7 @@ class ReplicaSet:
 
     @property
     def total_slots(self) -> int:
+        """Decode slots across the whole set (dp x per-replica slots)."""
         return self.dp * self.cfg.num_slots
 
     # -- request lifecycle ----------------------------------------------
@@ -133,6 +182,8 @@ class ReplicaSet:
     def add_request(self, prompt: Sequence[int],
                     sampling: Optional[SamplingParams] = None
                     ) -> RequestHandle:
+        """Validate against a representative replica and append to the
+        shared FCFS queue; returns the live handle."""
         sampling = sampling or SamplingParams()
         prompt = list(prompt)
         # replicas are identical, so replica 0 vouches for all of them
@@ -177,9 +228,13 @@ class ReplicaSet:
 
     @property
     def has_work(self) -> bool:
+        """True while anything is queued or active on any replica."""
         return bool(self.queue) or any(e.has_work for e in self.replicas)
 
     def stats(self) -> dict:
+        """Set-level telemetry: per-replica stats, dispatch counts,
+        busy clocks, queue-wait distribution, and the aggregate
+        occupancy/leak views the bench and CI read."""
         per = [e.stats() for e in self.replicas]
         paged = [e.backend for e in self.replicas
                  if hasattr(e.backend, "alloc")]
@@ -209,6 +264,8 @@ class ReplicaSet:
         }
 
     def reset_telemetry(self):
+        """Zero every replica's counters and the set-level telemetry
+        (bench warmup boundary); scheduling state is untouched."""
         for eng in self.replicas:
             eng.backend.reset_telemetry()
         self.finished.clear()

@@ -61,6 +61,75 @@ def sample_tokens(logits, seeds, steps, temps, top_ks, top_ps):
                                  top_ps)
 
 
+def verify_accept(logits, tokens, num_drafts, seeds, steps, temps,
+                  top_ks, top_ps):
+    """Vectorized accept/resample rule for a speculative verify window.
+
+    Because every request's sampler is a *deterministic* function of its
+    own RNG stream (token t draws from ``fold_in(PRNGKey(seed), t)``
+    applied to the target logits at position t), the standard
+    rejection-sampling acceptance collapses to exact-match coupling:
+    compute the token the baseline sampler WOULD emit at each of the
+    K+1 window positions (greedy argmax, or the seeded categorical draw
+    at stream position ``steps + j``), accept the longest draft prefix
+    that matches those draws, and emit the first mismatching target
+    token as the correction (the row-K target is the bonus token when
+    every draft matches). Outputs are therefore bit-identical to
+    non-speculative decoding — distribution preservation is trivial
+    because this IS the same sampler, evaluated ahead of time.
+
+    Parameters
+    ----------
+    logits : (B, K1, V) f32
+        Target-model logits for the K+1 fed tokens; row j scores the
+        position after fed token j.
+    tokens : (B, K1) int32
+        The fed window: row 0 is the last accepted token, rows 1..K the
+        draft proposals (garbage-padded past ``num_drafts``).
+    num_drafts : (B,) int32
+        Usable drafts per slot; padded rows can never be accepted.
+    seeds, steps, temps, top_ks, top_ps : (B,) arrays
+        The per-slot sampling parameters (SlotSampler layout); ``steps``
+        is each request's RNG-stream position at the window start.
+
+    Returns
+    -------
+    out_tokens : (B, K1) int32
+        The emitted tokens, -1 past each row's emitted prefix.
+    commit : (B,) int32 in [1, K1]
+        Fed tokens whose cache state is valid (accepted drafts + 1).
+    """
+    tgt = jax.vmap(
+        lambda lg, s, st, t, k, p: jax.vmap(
+            lambda l, j: _sample_row(l, s, st + j, t, k, p))(
+                lg, jnp.arange(lg.shape[0], dtype=jnp.int32))
+    )(logits, seeds, steps, temps, top_ks, top_ps)           # (B, K1)
+    return _accept_targets(tgt, tokens, num_drafts)
+
+
+def verify_accept_greedy(logits, tokens, num_drafts):
+    """All-greedy fast path of ``verify_accept`` (the serving default):
+    targets are plain argmax rows — no sort/top-k/top-p/RNG machinery,
+    which dominates the verify step's device time on small models. The
+    backend selects it at call time when every slot decodes greedily;
+    outputs equal ``verify_accept`` with ``temps <= 0``."""
+    return _accept_targets(jnp.argmax(logits, -1).astype(jnp.int32),
+                           tokens, num_drafts)
+
+
+def _accept_targets(tgt, tokens, num_drafts):
+    """Shared tail of the accept rule: longest draft prefix matching the
+    per-position target draws, plus the correction/bonus target."""
+    K1 = tgt.shape[1]
+    jidx = jnp.arange(K1, dtype=jnp.int32)
+    ok = (tokens[:, 1:] == tgt[:, :-1]) \
+        & (jidx[None, :-1] < num_drafts[:, None])
+    # accepted = length of the leading all-True prefix
+    acc = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+    out = jnp.where(jidx[None, :] <= acc[:, None], tgt, -1)
+    return out, acc + 1
+
+
 class SlotSampler:
     """Host-side mirror of the per-slot sampling parameter arrays.
 
@@ -78,6 +147,8 @@ class SlotSampler:
         self.steps = np.zeros((num_slots,), np.int32)
 
     def install(self, slot: int, sampling, n_sampled: int):
+        """Install a request's SamplingParams at admission; ``n_sampled``
+        is its RNG-stream position (nonzero on preemption resume)."""
         self.temps[slot] = sampling.temperature
         self.top_ks[slot] = sampling.top_k
         self.top_ps[slot] = sampling.top_p
@@ -85,6 +156,7 @@ class SlotSampler:
         self.steps[slot] = n_sampled
 
     def clear(self, slot: int):
+        """Reset a retired/preempted slot to the default (greedy) row."""
         self.temps[slot] = 0.0
         self.top_ks[slot] = 0
         self.top_ps[slot] = 1.0

@@ -120,6 +120,8 @@ class PagedBackend:
     # -- public backend API ---------------------------------------------
 
     def check_request(self, prompt_len: int, sampling):
+        """Reject requests whose WORST-CASE footprint exceeds the pool
+        (they could never run to completion even alone)."""
         worst = paged_kv.blocks_for(
             prompt_len + sampling.max_tokens, self.cfg.block_size)
         if worst > self.layout.usable_blocks:
@@ -129,16 +131,19 @@ class PagedBackend:
                 "it could never run to completion even alone")
 
     def enqueue(self, req: RequestHandle):
-        # callers validate first (Engine.add_request / the ReplicaSet
-        # shared queue both run check_request) — no double check here
+        """Append to the FCFS queue. Callers validate first
+        (Engine.add_request / the ReplicaSet shared queue both run
+        check_request) — no double check here."""
         self.waiting.append(req)
 
     @property
     def num_active(self) -> int:
+        """Occupied decode slots."""
         return sum(s.req is not None for s in self.slots)
 
     @property
     def has_work(self) -> bool:
+        """True while any request is waiting or active."""
         return bool(self.waiting) or self.num_active > 0
 
     def step(self) -> list[RequestOutput]:
@@ -336,6 +341,7 @@ class PagedBackend:
                 continue
             outs.append(self._accept(
                 i, self.sampler.sample_one(i, row_logits[r:r + 1])))
+        self._post_admit(rows)
 
     def _prefill(self, S: int, n: int):
         """Prefill+pack, jit-cached per (prompt-bucket, batch-bucket):
@@ -405,6 +411,14 @@ class PagedBackend:
         self.table[i, :] = paged_kv.NULL_BLOCK
         self.lengths[i] = 0
         self.sampler.clear(i)
+        self._post_clear(i)
+
+    def _post_admit(self, rows):
+        """Subclass hook: ``(slot, req, cached, S, block_ids)`` rows just
+        admitted (the speculative backend installs drafter state here)."""
+
+    def _post_clear(self, i: int):
+        """Subclass hook: slot ``i`` was just retired or preempted."""
 
     # -- reporting ------------------------------------------------------
 

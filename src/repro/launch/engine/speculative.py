@@ -1,0 +1,519 @@
+"""Speculative decoding on the paged Engine: draft, verify, commit.
+
+EPAC pairs each workload class with a specialized tile behind one
+coherent uncore; the serving analogue adds a "fast tile" for the
+memory-bound decode loop. A cheap drafter proposes K tokens per
+scheduled request, and the target model scores all K+1 positions in ONE
+batched pass through the paged KV cache (the multi-query verify kernel
+fetches every pool block once for the whole window instead of once per
+token). Acceptance couples the drafts to the request's own RNG stream:
+the engine's sampler is a deterministic function of (seed, stream
+position), so the standard rejection-sampling rule collapses to
+exact-match acceptance and outputs are **bit-identical** to the
+non-speculative engine — greedy and seeded alike
+(engine/sampling.verify_accept has the full argument).
+
+Rollback is free where it matters: full-attention layers live in the
+block pool, so a rejected tail is erased by rewinding the slot's length
+pointer and returning surplus tail blocks to the allocator — no block
+copies. Per-slot state (windowed rings, SSM carries) is committed by
+selecting the per-position candidate at the accept boundary inside the
+same jit (transformer.select_verify_state).
+
+Two pluggable drafters:
+
+* ``NgramDrafter`` — zero extra parameters: prompt-lookup / self-
+  drafting. The longest recent n-gram suffix of the request's history
+  is matched against its own earlier tokens and the continuation is
+  proposed. Free wins on repetitive text (code, templated prose).
+* ``DraftModelDrafter`` — a small draft model sharing the target's
+  tokenizer/config machinery, decoded greedily slot-parallel over
+  dense per-slot caches; its cache rolls back by the same
+  position-pointer rewind (hence the attention-only requirement).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import sharding as shlib
+from repro.launch.engine.api import (EngineConfig, RequestOutput,
+                                     prefill_bucket)
+from repro.launch.engine.sampling import (verify_accept,
+                                          verify_accept_greedy)
+from repro.launch.engine.scheduler import PagedBackend
+from repro.models import paged_kv
+from repro.models.model import Model
+from repro.models.transformer import RunCtx
+
+
+class NgramDrafter:
+    """Zero-parameter prompt-lookup drafter (self-drafting).
+
+    Proposes continuations by matching the longest suffix of a
+    request's own history (up to ``max_ngram`` tokens) against earlier
+    occurrences in that history and replaying the tokens that followed
+    the most recent match. No device state, nothing to roll back —
+    ``begin``/``rewind``/``drop`` are no-ops.
+
+    Parameters
+    ----------
+    k : int
+        Maximum drafts proposed per request per step.
+    max_ngram : int
+        Longest suffix length to key on; falls back to shorter
+        suffixes (down to 1 token) before giving up.
+    """
+
+    def __init__(self, k: int, max_ngram: int = 3):
+        self.k = k
+        self.max_ngram = max_ngram
+
+    def begin(self, slot: int, context):
+        """No-op: the drafter reads each request's history directly."""
+
+    def rewind(self, slot: int, new_len: int, tail_token: int):
+        """No-op: no device state to roll back."""
+
+    def drop(self, slot: int):
+        """No-op: nothing installed per slot."""
+
+    def propose(self, active, last_tokens, histories):
+        """Per-slot proposals: ``{slot: [draft, ...]}`` (possibly [])."""
+        return {i: self.lookup(histories[i]) for i in active}
+
+    def lookup(self, history) -> list[int]:
+        """Longest-suffix prompt lookup over one token history.
+
+        Longest suffix first; within a suffix length, the MOST RECENT
+        match with a full K-token continuation wins (on periodic text
+        the very latest match sits so close to the end that its
+        continuation is clipped — an earlier period offers the same
+        tokens at full draft width). Falls back to the longest partial
+        continuation when no match has K tokens after it.
+        """
+        H = len(history)
+        best: list[int] = []
+        for n in range(min(self.max_ngram, H - 1), 0, -1):
+            suffix = history[H - n:]
+            for e in range(H - 1, n - 1, -1):
+                if history[e - n:e] == suffix:
+                    cont = list(history[e:e + self.k])
+                    if len(cont) == self.k:
+                        return cont
+                    if len(cont) > len(best):
+                        best = cont
+        return best
+
+
+class DraftModelDrafter:
+    """Draft-model drafter: greedy slot-parallel decode of a small LM.
+
+    The draft shares the target's vocabulary and decodes over dense
+    per-slot caches (one row per engine slot); its proposals never
+    affect output correctness — only the acceptance rate — so it always
+    decodes greedily. Rollback after a rejected tail is the same
+    position-pointer rewind the paged pool uses, which is why the draft
+    architecture must keep ALL state position-addressed: full-attention
+    linear caches only (no sliding windows, no SSM carries).
+
+    Parameters
+    ----------
+    model, params
+        The draft ``Model`` (decoder-only, pattern all-"attn", no
+        sliding window, same vocab as the target) and its params.
+    cfg : EngineConfig
+        The engine config (slot count, max_len, spec_tokens).
+    ctx : RunCtx
+        Kernel/sharding context shared with the engine.
+    """
+
+    def __init__(self, model: Model, params, cfg: EngineConfig,
+                 ctx: RunCtx):
+        if model is None or params is None:
+            raise ValueError("drafter='draft_model' needs "
+                             "EngineConfig.draft_model/draft_params")
+        mc = model.cfg
+        if (set(mc.block_pattern) != {"attn"} or mc.sliding_window
+                or mc.enc_dec or mc.pos_embed != "none"):
+            raise ValueError(
+                "the draft model must be attention-only (linear caches "
+                "roll back by position rewind; rings/SSM carries do not)")
+        self.model = model
+        self.params = params
+        self.ctx = ctx
+        self.k = cfg.spec_tokens
+        self.num_slots = cfg.num_slots
+        self.max_len = cfg.max_len
+        self.cache = model.init_cache(cfg.num_slots, cfg.max_len)
+        self.pos = np.zeros((cfg.num_slots,), np.int32)
+        # slot -> token the draft cache is missing at its frontier: on a
+        # FULL unshrunk accept the main cache is one token ahead of the
+        # draft (the last draft was emitted but never fed back), so the
+        # next propose() feeds it first — otherwise the draft cache
+        # keeps a permanently unwritten position and proposal quality
+        # silently erodes
+        self._pending: dict[int, int] = {}
+        self.ragged = model.supports_ragged_prefill()
+        self._prefill_cache = {}
+
+        def dec(params, cache, tokens, pos):
+            logits, cache = model.decode_step(params, cache, tokens, pos,
+                                              ctx)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        self._dec = jax.jit(dec, donate_argnums=(1,))
+
+    def begin(self, slot: int, context):
+        """(Re-)prefill the draft cache row for ``slot`` over the tokens
+        the target has cached (admission and preemption-resume)."""
+        S = len(context)
+        Sb = prefill_bucket(S, 8, self.max_len) if self.ragged else S
+        fn = self._prefill_cache.get(Sb)
+        if fn is None:
+            model, ctx, ragged, max_len = (self.model, self.ctx,
+                                           self.ragged, self.max_len)
+
+            def prefill_fn(params, cache, tokens, length, row_of_slot,
+                           valid):
+                _, dense = model.prefill(
+                    params, {"tokens": tokens}, ctx, max_len=max_len,
+                    length=length if ragged else None)
+                return paged_kv.pack_prefill_state(cache, dense,
+                                                   row_of_slot, valid)
+
+            fn = jax.jit(prefill_fn, donate_argnums=(1,))
+            self._prefill_cache[Sb] = fn
+        toks = np.zeros((1, Sb), np.int32)
+        toks[0, :S] = context
+        row_of_slot = np.zeros((self.num_slots,), np.int32)
+        valid = np.zeros((self.num_slots,), bool)
+        valid[slot] = True
+        self.cache = fn(self.params, self.cache, jnp.asarray(toks),
+                        jnp.asarray([S], dtype=jnp.int32),
+                        jnp.asarray(row_of_slot), jnp.asarray(valid))
+        self.pos[slot] = S
+        self._pending.pop(slot, None)
+
+    def rewind(self, slot: int, new_len: int, tail_token: int):
+        """Resynchronise with the main cache after a verify.
+
+        ``new_len`` is the main cache's new length, ``tail_token`` the
+        token at its last position. Rejected tail: entries past
+        ``new_len`` are masked by the position predicate and
+        overwritten in place as decode re-advances — the dense-cache
+        analogue of the paged pool's length-pointer rollback. FULL
+        accept: the main cache is one token AHEAD of the draft
+        (``tail_token`` was emitted from the window, never fed to the
+        draft), so it is stashed and fed first at the next propose —
+        leaving no unwritten hole behind the frontier."""
+        if new_len > self.pos[slot]:
+            self._pending[slot] = tail_token
+        else:
+            self.pos[slot] = new_len
+            self._pending.pop(slot, None)
+
+    def drop(self, slot: int):
+        """Forget the slot: its cache row is garbage until ``begin``."""
+        self.pos[slot] = 0
+        self._pending.pop(slot, None)
+
+    def propose(self, active, last_tokens, histories):
+        """K greedy draft tokens for every active slot in K slot-parallel
+        decode calls on the draft model. Slots with a pending catch-up
+        token spend their first call feeding it (the cache position the
+        last full accept skipped), so they return K-1 drafts that step."""
+        toks = np.zeros((self.num_slots, 1), np.int32)
+        queued = {}                       # catch-up slots: fed at step 1
+        for i in active:
+            if i in self._pending:
+                toks[i, 0] = self._pending.pop(i)
+                queued[i] = last_tokens[i]
+            else:
+                toks[i, 0] = last_tokens[i]
+        pos = self.pos.copy()
+        outs = np.zeros((self.num_slots, self.k), np.int32)
+        for t in range(self.k):
+            nxt, self.cache = self._dec(self.params, self.cache,
+                                        jnp.asarray(toks),
+                                        jnp.asarray(pos))
+            nxt = np.asarray(nxt)
+            outs[:, t] = nxt
+            toks = nxt[:, None].astype(np.int32)
+            if t == 0:
+                for i, tok in queued.items():
+                    toks[i, 0] = tok
+            pos += 1
+        for i in active:
+            self.pos[i] += self.k
+        # a catch-up slot's step-0 output followed the re-fed token, not
+        # the actual next token (the bonus) — it is not a usable draft
+        return {i: [int(x) for x in outs[i, (1 if i in queued else 0):]]
+                for i in active}
+
+
+_DRAFTERS = ("ngram", "draft_model")
+
+
+class SpecDecodeBackend(PagedBackend):
+    """Speculative-decoding backend: PagedBackend + draft/verify/commit.
+
+    Wraps the paged scheduler unchanged for admission, growth,
+    preemption and retirement; only the decode step differs. Each step:
+
+    1. the drafter proposes up to K tokens per active slot;
+    2. growth covers each slot's verify window (positions L..L+k_i),
+       preferring to SHRINK a slot's window over preempting others
+       (drafts are opportunistic; a preemption wastes a re-prefill) —
+       the plain-decode footprint keeps the base LIFO guarantee;
+    3. ONE jit'd device call embeds the (B, K+1) window, verifies it
+       through the multi-query paged-attention kernel, applies the
+       exact-match accept rule on-device against each request's own RNG
+       stream, and commits per-slot state at the accept boundary;
+    4. the host registers the emitted tokens through the standard
+       acceptance state machine (stop tokens, max_tokens, streaming
+       increments), rewinds each slot's length pointer over the
+       rejected tail and returns surplus blocks to the pool.
+
+    Attributes
+    ----------
+    drafter : NgramDrafter | DraftModelDrafter
+        Proposal source, selected by ``EngineConfig.drafter``.
+    spec_steps, spec_proposed, spec_accepted, spec_emitted : int
+        Window telemetry surfaced by ``stats()['spec']``; per-request
+        counters live on ``RequestHandle.num_draft_proposed/accepted``.
+
+    Notes
+    -----
+    Output tokens are bit-identical to ``PagedBackend`` for any
+    SamplingParams: the verify logits at row j equal the baseline
+    decode logits after feeding tokens 0..j, and the accept rule IS the
+    baseline sampler evaluated ahead on the same stream positions
+    (tests/test_spec_decode.py pins both, greedy and seeded).
+    """
+
+    def __init__(self, model: Model, params, cfg: EngineConfig,
+                 ctx: RunCtx):
+        super().__init__(model, params, cfg, ctx)
+        self.k = cfg.spec_tokens
+        self.k1 = self.k + 1
+        if cfg.max_len <= self.k1:
+            raise ValueError(f"spec_tokens={self.k} needs max_len > "
+                             f"{self.k1}")
+        if cfg.drafter == "ngram":
+            self.drafter = NgramDrafter(self.k, cfg.ngram_max)
+        elif cfg.drafter == "draft_model":
+            if cfg.draft_model is not None \
+                    and cfg.draft_model.cfg.vocab_size != model.cfg.vocab_size:
+                raise ValueError("draft and target models must share a "
+                                 "vocabulary")
+            self.drafter = DraftModelDrafter(cfg.draft_model,
+                                             cfg.draft_params, cfg, ctx)
+        else:
+            raise ValueError(f"unknown drafter {cfg.drafter!r} "
+                             f"(have {_DRAFTERS})")
+        self.spec_steps = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
+        self.spec_emitted = 0
+
+        def verify_fn(greedy, params, pools, table, lengths, tokens,
+                      num_drafts, seeds, steps, temps, top_ks, top_ps):
+            def commit_fn(logits):
+                if greedy:      # static: all slots argmax — skip the RNG
+                    return verify_accept_greedy(logits, tokens,
+                                                num_drafts)
+                return verify_accept(logits, tokens, num_drafts, seeds,
+                                     steps, temps, top_ks, top_ps)
+
+            return model.decode_verify(params, pools, table, lengths,
+                                       tokens, commit_fn, self.ctx)
+
+        if self.shard is None:
+            self._verify = jax.jit(verify_fn, static_argnums=(0,),
+                                   donate_argnums=(2,))
+        else:
+            rep = shlib.replicated(self.shard)
+            self._verify = jax.jit(
+                verify_fn, static_argnums=(0,), donate_argnums=(2,),
+                out_shardings=(rep, rep, self._pool_sh))
+
+    # -- drafter synchronisation hooks ----------------------------------
+
+    def _post_admit(self, rows):
+        for (i, req, cached, S, block_ids) in rows:
+            self.drafter.begin(i, list(cached))
+
+    def _post_clear(self, i: int):
+        self.drafter.drop(i)
+
+    # -- scheduling ------------------------------------------------------
+
+    def _imminent_growth(self) -> int:
+        """Admission headroom: a verify window can claim up to
+        blocks_for(L + K + 1) per active slot this step (the base
+        backend's single growth block is the K=0 case)."""
+        bs = self.cfg.block_size
+        return sum(
+            max(paged_kv.blocks_for(int(self.lengths[i]) + self.k1, bs)
+                - len(s.blocks), 0)
+            for i, s in enumerate(self.slots) if s.req is not None)
+
+    def _grow_for_verify(self, drafts: dict):
+        """Cover each slot's verify window, oldest-admission-first.
+
+        The plain-decode footprint (blocks_for(L+1)) keeps the base
+        backend's LIFO-preemption guarantee; beyond it, a slot SHRINKS
+        its own draft window to what the free pool covers rather than
+        evicting other sequences — speculation must never cost another
+        request its slot."""
+        bs = self.cfg.block_size
+        order = sorted(
+            (i for i, s in enumerate(self.slots) if s.req is not None),
+            key=lambda i: self.slots[i].ticket)
+        for i in order:
+            slot = self.slots[i]
+            if slot.req is None:          # preempted earlier in this pass
+                continue
+            L = int(self.lengths[i])
+            need_min = paged_kv.blocks_for(L + 1, bs) - len(slot.blocks)
+            while need_min > 0 and not self.alloc.can_alloc(need_min):
+                cands = [(j, self.slots[j].ticket)
+                         for j, s in enumerate(self.slots)
+                         if s.req is not None]
+                victim = self.alloc.select_victim(cands)
+                self._preempt(victim)
+                if victim == i:
+                    break
+            if slot.req is None:
+                drafts.pop(i, None)
+                continue
+            while drafts.get(i):
+                want = paged_kv.blocks_for(
+                    L + len(drafts[i]) + 1, bs) - len(slot.blocks)
+                if want <= 0 or self.alloc.can_alloc(want):
+                    break
+                drafts[i].pop()           # shrink, don't evict
+            want = paged_kv.blocks_for(
+                L + len(drafts.get(i, ())) + 1, bs) - len(slot.blocks)
+            if want > 0:
+                new = self.alloc.alloc(want)
+                start = len(slot.blocks)
+                slot.blocks.extend(new)
+                self.table[i, start:start + len(new)] = new
+
+    def _trim_blocks(self, i: int):
+        """Return the rejected tail's surplus blocks to the pool and
+        null their table entries — the length pointer was already
+        rewound, so the blocks hold only invisible garbage."""
+        slot = self.slots[i]
+        extra = paged_kv.rollback_tail(slot.blocks, int(self.lengths[i]),
+                                       self.cfg.block_size)
+        if extra:
+            self.alloc.free(extra)
+            self.table[i, len(slot.blocks):] = paged_kv.NULL_BLOCK
+
+    # -- the speculative step -------------------------------------------
+
+    def step(self) -> list[RequestOutput]:
+        """Admissions, drafting, window growth, ONE verify call, commit."""
+        outs: list[RequestOutput] = []
+        self.made_progress = False
+        self._admit(outs)
+        active = [i for i, s in enumerate(self.slots) if s.req is not None]
+        if not active:
+            return outs
+        last = {i: self.slots[i].last_token for i in active}
+        hist = {i: list(self.slots[i].req.prompt)
+                + list(self.slots[i].req.token_ids) for i in active}
+        drafts = {}
+        for i, d in self.drafter.propose(active, last, hist).items():
+            # clamp the window to the position cap: fed token j caches
+            # at position L + j, which must stay < max_len (beyond it
+            # there is no block-table row to grow into)
+            cap = max(0, min(self.k,
+                             self.cfg.max_len - 1 - int(self.lengths[i])))
+            drafts[i] = list(d)[:cap]
+        self._grow_for_verify(drafts)
+        active = [i for i in active if self.slots[i].req is not None]
+        if not active:
+            return outs
+        B = self.cfg.num_slots
+        tokens = np.zeros((B, self.k1), np.int32)
+        num_drafts = np.zeros((B,), np.int32)
+        start_len = {}
+        for i in active:
+            row = [self.slots[i].last_token] + drafts.get(i, [])
+            row += [row[-1]] * (self.k1 - len(row))  # pad: never accepted
+            tokens[i] = row
+            num_drafts[i] = len(drafts.get(i, ()))
+            start_len[i] = int(self.lengths[i])
+        sm = self.sampler
+        out_toks, commit, self.pools = self._verify(
+            bool((sm.temps <= 0.0).all()),
+            self.params, self.pools, jnp.asarray(self.table),
+            jnp.asarray(self.lengths), jnp.asarray(tokens),
+            jnp.asarray(num_drafts), jnp.asarray(sm.seeds),
+            jnp.asarray(sm.steps), jnp.asarray(sm.temps),
+            jnp.asarray(sm.top_ks), jnp.asarray(sm.top_ps))
+        out_toks = np.asarray(out_toks)
+        commit = np.asarray(commit)
+        self.steps += 1
+        self.spec_steps += 1
+        self.slot_steps += len(active)
+        self.block_token_steps += self.alloc.used_count * self.cfg.block_size
+        self.made_progress = True
+        for i in active:
+            n_emit = int(commit[i])
+            req = self.slots[i].req
+            nd = int(num_drafts[i])
+            self.spec_proposed += nd
+            req.num_draft_proposed += nd
+            self.spec_accepted += n_emit - 1
+            req.num_draft_accepted += n_emit - 1
+            # fed tokens 0..commit-1 are validly cached; the pointer
+            # rewind IS the rollback for the pool layers
+            self.lengths[i] = start_len[i] + n_emit
+            self.live_token_steps += int(self.lengths[i])
+            for j in range(n_emit):
+                out = self._accept(i, int(out_toks[i, j]))
+                outs.append(out)
+                self.spec_emitted += 1
+                if out.finished:
+                    break
+            if self.slots[i].req is not None:
+                self._trim_blocks(i)
+                self.drafter.rewind(i, int(self.lengths[i]),
+                                    int(tokens[i, n_emit - 1]))
+        return outs
+
+    # -- reporting ------------------------------------------------------
+
+    def reset_telemetry(self):
+        """Zero base + speculative counters (bench warmup boundary)."""
+        super().reset_telemetry()
+        self.spec_steps = self.spec_proposed = 0
+        self.spec_accepted = self.spec_emitted = 0
+
+    def stats(self) -> dict:
+        """Base paged stats + a ``spec`` section (window telemetry and
+        the per-request accepted/proposed counters the bench cites)."""
+        st = super().stats()
+        reqs = [s.req for s in self.slots if s.req is not None]
+        reqs += list(self.waiting) + list(self.finished)
+        st["spec"] = {
+            "spec_tokens": self.k,
+            "steps": self.spec_steps,
+            "proposed": self.spec_proposed,
+            "accepted": self.spec_accepted,
+            "emitted": self.spec_emitted,
+            "accept_rate": self.spec_accepted / max(self.spec_proposed, 1),
+            "emitted_per_step": self.spec_emitted / max(self.spec_steps, 1),
+            "per_request": {
+                r.uid: {"proposed": r.num_draft_proposed,
+                        "accepted": r.num_draft_accepted,
+                        "preemptions": r.num_preemptions} for r in reqs},
+        }
+        return st

@@ -34,6 +34,14 @@ from repro.launch.engine.sampling import SlotSampler
 
 
 class StaticBackend:
+    """Lockstep batcher over a dense (B, max_len) cache (the baseline).
+
+    One batch in, right-padded batched prefill, per-row-position decode
+    until every member finishes, then the next batch — no paging, no
+    preemption. See the module docstring for the padding/bucketing
+    contract; the serve bench prices it against the paged backend at
+    equal cache memory."""
+
     def __init__(self, model, params, cfg: EngineConfig, ctx):
         self.model = model
         self.params = params
@@ -80,17 +88,21 @@ class StaticBackend:
     # -- public backend API ---------------------------------------------
 
     def enqueue(self, req: RequestHandle):
+        """Append to the FCFS queue (validated by the caller)."""
         self.waiting.append(req)
 
     @property
     def num_active(self) -> int:
+        """Live rows in the current lockstep batch."""
         return int(self.live.sum())
 
     @property
     def has_work(self) -> bool:
+        """True while any request is waiting or live."""
         return bool(self.waiting) or bool(self.live.any())
 
     def step(self) -> list[RequestOutput]:
+        """Admit a fresh batch when idle, else one lockstep decode."""
         outs: list[RequestOutput] = []
         self.made_progress = False
         if not self.live.any():
@@ -217,6 +229,8 @@ class StaticBackend:
         self.slot_steps = self.live_token_steps = 0
 
     def stats(self) -> dict:
+        """Occupancy/utilization telemetry (dense-cache denominator:
+        every lane pays max_len whether live or not)."""
         cap = self.steps * self.cfg.num_slots * self.cfg.max_len or 1
         return {
             "steps": self.steps,

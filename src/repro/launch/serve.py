@@ -48,6 +48,10 @@ def main():
                     help="data-parallel replicas behind one shared "
                          "admission queue (ReplicaSet); each replica "
                          "gets its own KV pool and TP subgrid")
+    ap.add_argument("--spec-tokens", type=int, default=0,
+                    help="speculative decoding: ngram-drafted tokens "
+                         "per step (paged backend; bit-identical "
+                         "outputs)")
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if args.smoke:
@@ -57,7 +61,7 @@ def main():
     rng = np.random.default_rng(0)
     mesh = replica_cli_mesh(args.dp, args.tp)
     ecfg = EngineConfig(backend=args.backend, num_slots=args.slots,
-                        max_len=128)
+                        max_len=128, spec_tokens=args.spec_tokens)
     if args.dp > 1:
         engine = ReplicaSet(model, params, ecfg, dp=args.dp, mesh=mesh)
     else:

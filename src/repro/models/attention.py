@@ -233,6 +233,59 @@ def decode_attend_paged(params, cfg, x, pool, block_table, lengths, *,
     return out @ params["wo"], {"k": kp, "v": vp}
 
 
+def verify_attend_paged(params, cfg, x, pool, block_table, lengths, *,
+                        kernel_mode="auto", shard=None):
+    """Multi-token decode (speculative verify) against a paged KV pool.
+
+    x: (B, K1, d) — the last accepted token plus K draft tokens per
+    slot; lengths: (B,) tokens already cached, so fed token j lands at
+    position ``lengths[b] + j`` (its destination block must be in the
+    table — unallocated tail positions route to the reserved null
+    block, where garbage writes are harmless because reads are masked
+    by length). All K+1 K/V rows are written first, then every row
+    attends causally within the window through the multi-query kernel —
+    one pool sweep for the whole window instead of one per token.
+    With ``shard`` (a ShardCtx; requires ``paged_kv.head_shard_ok``)
+    the attention runs through the collective-free head-sharded
+    shard_map over the TP-sharded pool, exactly like the single-token
+    ``decode_attend_paged_headshard``. Returns (out (B, K1, d'),
+    new_pool).
+    """
+    B, K1, _ = x.shape
+    hq, hd = cfg.n_heads, cfg.head_dim
+    bs = pool["k"].shape[1]
+    q, k, v = _project_qkv(params, cfg, x, x)
+    pos = lengths[:, None] + jnp.arange(K1)[None, :]    # (B, K1)
+    if cfg.rope_style == "rope":
+        q = layers.apply_rope(q, pos, cfg.rope_theta)
+        k = layers.apply_rope(k, pos, cfg.rope_theta)
+
+    logical = pos // bs
+    nbmax = block_table.shape[1]
+    # pad rows can sit past the table's last row (a slot near max_len
+    # with fewer than K usable drafts): route their writes to the
+    # reserved null block 0 instead of clipping into the slot's own
+    # last REAL block, which would corrupt live cached K/V
+    phys = jnp.where(
+        logical < nbmax,
+        jnp.take_along_axis(block_table, jnp.clip(logical, 0, nbmax - 1),
+                            axis=1),
+        0)
+    off = pos % bs
+    kp = pool["k"].at[phys, off].set(k)
+    vp = pool["v"].at[phys, off].set(v)
+
+    if shard is not None:
+        out = kops.paged_verify_attention_headshard(
+            q, kp, vp, block_table, lengths, mesh=shard.mesh,
+            tp_axis=shard.tp_axis, mode=kernel_mode)
+    else:
+        out = kops.paged_verify_attention(q, kp, vp, block_table,
+                                          lengths, mode=kernel_mode)
+    out = out.reshape(B, K1, hq * hd).astype(x.dtype)
+    return out @ params["wo"], {"k": kp, "v": vp}
+
+
 def decode_attend_paged_headshard(params, cfg, x, pool, block_table,
                                   lengths, shard, *, kernel_mode="auto"):
     """Tensor-parallel ``decode_attend_paged`` over a HEAD-sharded pool.

@@ -99,6 +99,15 @@ class Model:
                                              block_table, lengths, tokens,
                                              ctx)
 
+    def decode_verify(self, params, pools, block_table, lengths, tokens,
+                      commit_fn, ctx: RunCtx):
+        """Speculative verify: score a (B, K+1) token window in one
+        pass; ``commit_fn(logits) -> (out_tokens, commit)`` is the
+        accept rule traced inline. See transformer.decode_verify_paged."""
+        return transformer.decode_verify_paged(
+            params, self.cfg, pools, block_table, lengths, tokens,
+            commit_fn, ctx)
+
 
 # ---------------------------------------------------------------------------
 # Dry-run input specs (ShapeDtypeStructs; nothing allocated)

@@ -40,6 +40,24 @@ def blocks_for(n_tokens: int, block_size: int) -> int:
     return -(-n_tokens // block_size)
 
 
+def rollback_tail(blocks: list, n_tokens: int, block_size: int) -> list:
+    """Split off the blocks a sequence no longer needs after a rewind.
+
+    The speculative verify step appends up to K+1 tokens to a slot's
+    blocks and then rewinds the length pointer over the rejected tail —
+    the paged cache's rollback is *just that pointer move* (rejected
+    K/V stay in place, invisible past the length, overwritten in place
+    when the sequence genuinely reaches those positions). What remains
+    is returning surplus whole blocks: mutates ``blocks`` down to
+    ``blocks_for(n_tokens)`` entries and returns the cut tail for
+    ``BlockAllocator.free`` — no block contents are copied, ever.
+    """
+    keep = blocks_for(n_tokens, block_size)
+    tail = blocks[keep:]
+    del blocks[keep:]
+    return tail
+
+
 @dataclasses.dataclass(frozen=True)
 class PagedLayout:
     """Static geometry of the paged cache (jit-static, hashable)."""
@@ -242,4 +260,5 @@ __all__ = [
     "NULL_BLOCK", "PagedLayout", "BlockAllocator", "blocks_for",
     "head_shard_ok", "init_layer_pool", "init_slot_tables",
     "pack_prefill_kv", "pack_prefill_ring", "pack_prefill_state",
+    "rollback_tail",
 ]

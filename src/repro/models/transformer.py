@@ -366,6 +366,59 @@ def apply_block_decode_paged(p, cfg: ModelConfig, kind: str, x, cache,
     raise ValueError(kind)
 
 
+def _decode_window_scan(p, cfg: ModelConfig, kind: str, x, cache,
+                        block_table, lengths, ctx: RunCtx):
+    """Scan the stock single-token decode cell over a K+1-token verify
+    window, stacking the PER-POSITION cache states as candidates.
+
+    x: (B, K1, d). Returns (out (B, K1, d), candidates) where every
+    cache leaf gains a K1 axis after its batch axis ((B, K1, ...)):
+    candidate j is the state after consuming fed tokens 0..j. Because
+    the cells are causal, candidate j is independent of any rejected
+    token after j — selection at the accept boundary is exact, and the
+    math per position is bit-identical to the non-speculative decode
+    path (same cells, same order).
+    """
+    K1 = x.shape[1]
+
+    def cell(c, inp):
+        xt, j = inp
+        xo, c2 = apply_block_decode_paged(p, cfg, kind, xt[:, None], c,
+                                          block_table, lengths + j, ctx)
+        return c2, (xo[:, 0], c2)
+
+    _, (outs, stk) = jax.lax.scan(
+        cell, cache,
+        (jnp.moveaxis(x, 1, 0), jnp.arange(K1, dtype=jnp.int32)))
+    out = jnp.moveaxis(outs, 0, 1)
+    cands = jax.tree.map(lambda t: jnp.moveaxis(t, 0, 1), stk)
+    return out, cands
+
+
+def apply_block_verify_paged(p, cfg: ModelConfig, kind: str, x, cache,
+                             block_table, lengths, ctx: RunCtx):
+    """Multi-token block step for the speculative verify window.
+
+    x: (B, K1, d) — hidden states for the K+1 fed tokens. Full-attention
+    layers run ONE multi-query pass over the paged pool (state commits
+    by construction: the rejected tail is rolled back by the host's
+    length-pointer rewind, no block copies); windowed rings and SSM
+    kinds scan the stock decode cell and stack per-position candidate
+    states for the later commit selection (``select_verify_state``).
+    """
+    if kind in ("attn", "local") and _window_for(cfg, kind) is None:
+        xn = layers.apply_norm(cfg.norm, p["ln1"], x)
+        out, pool = attn_lib.verify_attend_paged(
+            p["attn"], cfg, xn, cache, block_table, lengths,
+            kernel_mode=ctx.kernel_mode,
+            shard=ctx.shard if ctx.decode_head_shard else None)
+        x = x + out
+        x, _ = _ffn_part(p, cfg, x, ctx)
+        return x, pool
+    return _decode_window_scan(p, cfg, kind, x, cache, block_table,
+                               lengths, ctx)
+
+
 def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
                      dtype):
     if kind in ("attn", "local"):
@@ -710,6 +763,78 @@ def decode_step_paged(params, cfg: ModelConfig, pools, block_table, lengths,
         new_pools[f"g{g}"] = new_gc
     x = layers.apply_norm(cfg.norm, params["final_norm"], x)
     return _logits(params, cfg, x)[:, 0], new_pools
+
+
+def select_verify_state(cfg: ModelConfig, cands, commit):
+    """Commit a verify window's per-slot state at the accept boundary.
+
+    ``cands`` is the candidate tree from ``decode_verify_paged``'s layer
+    walk: full-attention pool leaves are already final (length-pointer
+    rollback), every other leaf is (count, B, K1, ...) — candidate j is
+    the state after fed token j. ``commit``: (B,) int32 in [1, K1] —
+    keep the state after fed token ``commit - 1``.
+    """
+    idx = jnp.maximum(commit - 1, 0).astype(jnp.int32)
+
+    def sel(leaf):
+        ix = idx.reshape((1, -1, 1) + (1,) * (leaf.ndim - 3))
+        return jnp.take_along_axis(leaf, ix, axis=2)[:, :, 0]
+
+    out = {}
+    for g, (pattern, count) in enumerate(layer_groups(cfg)):
+        gp = {}
+        for pi, kind in enumerate(pattern):
+            sub = cands[f"g{g}"][f"p{pi}"]
+            if kind in ("attn", "local") and _window_for(cfg, kind) is None:
+                gp[f"p{pi}"] = sub
+            else:
+                gp[f"p{pi}"] = jax.tree.map(sel, sub)
+        out[f"g{g}"] = gp
+    return out
+
+
+def decode_verify_paged(params, cfg: ModelConfig, pools, block_table,
+                        lengths, tokens, commit_fn, ctx: RunCtx):
+    """Speculative-decode verify: score a K+1-token window in ONE pass.
+
+    tokens: (B, K1) — per slot, the last accepted token followed by K
+    draft tokens; fed token j is cached at position ``lengths[b] + j``
+    and logits row j scores the NEXT position — so row j is exactly what
+    ``decode_step_paged`` would have returned after feeding tokens
+    0..j. ``commit_fn(logits (B, K1, V)) -> (out_tokens, commit)`` is
+    the accept rule traced inline (engine/sampling.verify_accept);
+    ``commit[b]`` in [1, K1] counts the fed tokens whose cache state to
+    keep. Full-attention pools commit by construction (the host rewinds
+    the length pointer over the rejected tail — no block copies);
+    per-slot states are selected at the accept boundary. Returns
+    (out_tokens (B, K1), commit (B,), new_pools).
+    """
+    if cfg.enc_dec or cfg.rope_style == "mrope" or cfg.pos_embed != "none":
+        raise NotImplementedError(
+            "paged verify supports decoder-only rope/none-pos models")
+    x = _embed(params, cfg, tokens, shard=ctx.shard)
+    cands = {}
+    for g, (pattern, count) in enumerate(layer_groups(cfg)):
+        gp = params["groups"][f"g{g}"]
+        gc = pools[f"g{g}"]
+
+        def body(xc, scanned, pattern=pattern):
+            layer_params, layer_cache = scanned
+            new_lc = {}
+            for pi, kind in enumerate(pattern):
+                xc, nc = apply_block_verify_paged(
+                    layer_params[f"p{pi}"], cfg, kind, xc,
+                    layer_cache[f"p{pi}"], block_table, lengths, ctx)
+                new_lc[f"p{pi}"] = nc
+            return xc, new_lc
+
+        x, new_gc = jax.lax.scan(body, x, (gp, gc),
+                                 unroll=True if ctx.scan_unroll else 1)
+        cands[f"g{g}"] = new_gc
+    x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = _logits(params, cfg, x)                  # (B, K1, V) f32
+    out_tokens, commit = commit_fn(logits)
+    return out_tokens, commit, select_verify_state(cfg, cands, commit)
 
 
 def prefill_supports_ragged(cfg: ModelConfig) -> bool:

@@ -192,3 +192,45 @@ def test_sharded_paged_third_arch_xlstm():
     assert got == want, (got, want)
     print("body ran")
     """)
+
+
+def test_sharded_speculative_token_identical():
+    """Speculative decoding under a (4 data x 2 model) mesh with the
+    head-sharded pool active: spec == unsharded non-spec baseline,
+    greedy and seeded, zero leaks — and the multi-query verify headshard
+    op equals the multi-query oracle at the kernel level."""
+    _run("""
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(6)
+    # kernel level: multi-query headshard == oracle
+    B, K1, hq, hkv, hd, bs, nbmax = 4, 3, 4, 2, 16, 4, 4
+    nb = B * nbmax + 1
+    q = jnp.asarray(rng.normal(size=(B, K1, hq, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(nb, bs, hkv, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(nb, bs, hkv, hd)), jnp.float32)
+    perm = rng.permutation(nb - 1) + 1
+    bt = jnp.asarray(perm[:B * nbmax].reshape(B, nbmax), jnp.int32)
+    ln = jnp.asarray([2, 7, 0, 12], jnp.int32)
+    got = ops.paged_verify_attention_headshard(
+        q, kp, vp, bt, ln, mesh=MESH, mode="ref")
+    want = ref.paged_verify_attention(q, kp, vp, bt, ln)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # engine level: sharded spec == unsharded baseline
+    cfg, model, params = setup("olmo_1b")
+    prompts = [(list(map(int, rng.integers(0, cfg.vocab_size, 3))) * 5)
+               [:9 + i] for i in range(4)]
+    base = dict(num_slots=4, block_size=4, num_blocks=33, max_len=48)
+    for sp in (SamplingParams(max_tokens=10),
+               SamplingParams(max_tokens=10, temperature=0.9, seed=4)):
+        want = Engine(model, params, EngineConfig(
+            backend="paged", **base)).generate(prompts, sp)
+        spec = Engine(model, params, EngineConfig(
+            backend="paged", mesh=MESH, spec_tokens=3, **base))
+        assert spec.backend.ctx.decode_head_shard
+        got = spec.generate(prompts, sp)
+        assert got == want, (got, want)
+        assert spec.stats()["blocks_used"] == 0
+    print("body ran")
+    """)

@@ -1,0 +1,407 @@
+"""Speculative decoding: kernel gate, accept rule, engine equivalence.
+
+Contract chain, weakest to strongest:
+  1. multi-query verify kernel (interpret) == jnp ref oracle == the
+     single-query oracle row by row (each q row at its own length);
+  2. verify_accept implements exact-match coupling: leading matched
+     prefix + correction token, capped at num_drafts;
+  3. Engine equivalence: SpecDecodeBackend output is BIT-IDENTICAL to
+     PagedBackend for any SamplingParams (greedy and seeded), on
+     attention-only AND recurrent architectures, with accepting and
+     fully-rejecting drafters — the RNG-stream contract makes the
+     rejection rule exact, not merely distribution-preserving;
+  4. scheduler invariants survive speculation: zero block leaks after
+     rejected-tail rewinds, under preemption pressure, and with
+     mid-window stop tokens;
+  5. drafter behavior: ngram prompt-lookup finds repetitions (high
+     acceptance on repetitive prompts), the draft-model drafter stays
+     in sync through accept/reject/preempt cycles.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import ops, ref
+from repro.launch.engine import (Engine, EngineConfig, NgramDrafter,
+                                 SamplingParams, SpecDecodeBackend)
+from repro.launch.engine.sampling import verify_accept
+from repro.models.model import Model
+
+GREEDY = SamplingParams(max_tokens=12)
+SEEDED = SamplingParams(max_tokens=12, temperature=0.9, top_k=30,
+                        top_p=0.95, seed=7)
+
+
+def _cfg(**kw):
+    kw.setdefault("backend", "paged")
+    kw.setdefault("num_slots", 4)
+    kw.setdefault("num_blocks", 32)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("max_len", 64)
+    return EngineConfig(**kw)
+
+
+def _model(arch):
+    cfg = get_config(arch).smoke()
+    model = Model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, rng, n=5, repetitive=False):
+    if repetitive:
+        return [(list(rng.integers(0, cfg.vocab_size, 3)) * 6)[:10 + i]
+                for i in range(n)]
+    return [list(rng.integers(0, cfg.vocab_size, int(ln)))
+            for ln in rng.integers(5, 14, n)]
+
+
+class GarbageDrafter(NgramDrafter):
+    """Adversarial drafter: random proposals, ~0% acceptance — every
+    verify step exercises the rejected-tail rewind."""
+
+    def propose(self, active, last_tokens, histories):
+        rng = np.random.default_rng(sum(map(len, histories.values())))
+        return {i: [int(x) for x in rng.integers(0, 256, self.k)]
+                for i in active}
+
+
+# -- 1. kernel vs oracle ------------------------------------------------
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("window", [None, 5])
+def test_verify_kernel_matches_ref(rng, hq, hkv, window):
+    B, K1, hd, bs, nbmax = 4, 4, 16, 4, 5
+    nb = B * nbmax + 1
+    q = jnp.asarray(rng.normal(size=(B, K1, hq, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(nb, bs, hkv, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(nb, bs, hkv, hd)), jnp.float32)
+    perm = rng.permutation(nb - 1) + 1
+    bt = jnp.asarray(perm[:B * nbmax].reshape(B, nbmax), jnp.int32)
+    # window start lengths: zero, mid-block, block boundary, deep
+    ln = jnp.asarray([0, 3, 8, 14], jnp.int32)
+    want = ref.paged_verify_attention(q, kp, vp, bt, ln, window=window)
+    got = ops.paged_verify_attention(q, kp, vp, bt, ln, window=window,
+                                     mode="interpret")
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_verify_ref_matches_single_query_rows(rng):
+    """Row j of the multi-query oracle == the single-query decode oracle
+    at length lengths + 1 + j (the per-row causal contract)."""
+    B, K1, hq, hkv, hd, bs, nbmax = 3, 3, 4, 2, 8, 4, 4
+    nb = B * nbmax + 1
+    q = jnp.asarray(rng.normal(size=(B, K1, hq, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(nb, bs, hkv, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(nb, bs, hkv, hd)), jnp.float32)
+    perm = rng.permutation(nb - 1) + 1
+    bt = jnp.asarray(perm[:B * nbmax].reshape(B, nbmax), jnp.int32)
+    ln = jnp.asarray([2, 7, 0], jnp.int32)
+    multi = ref.paged_verify_attention(q, kp, vp, bt, ln)
+    for j in range(K1):
+        single = ref.paged_decode_attention(q[:, j], kp, vp, bt,
+                                            ln + 1 + j)
+        np.testing.assert_allclose(multi[:, j], single, atol=1e-6)
+
+
+# -- 2. the accept rule -------------------------------------------------
+
+
+def _accept(logits, tokens, num_drafts, temps=None, seeds=None):
+    B, K1, _ = logits.shape
+    z = jnp.zeros((B,), jnp.int32)
+    temps = jnp.zeros((B,), jnp.float32) if temps is None else temps
+    seeds = z if seeds is None else seeds
+    out, commit = verify_accept(
+        jnp.asarray(logits, jnp.float32), jnp.asarray(tokens, jnp.int32),
+        jnp.asarray(num_drafts, jnp.int32), seeds, z, temps, z,
+        jnp.ones((B,), jnp.float32))
+    return np.asarray(out), np.asarray(commit)
+
+
+def test_accept_prefix_rule(rng):
+    V, K1 = 11, 4
+    logits = rng.normal(size=(3, K1, V))
+    tgt = logits.argmax(-1)                      # greedy targets
+    tokens = np.zeros((3, K1), np.int64)
+    tokens[0, 1:] = tgt[0, :3]                   # all 3 drafts match
+    tokens[1, 1:] = [tgt[1, 0], (tgt[1, 1] + 1) % V, tgt[1, 2]]
+    tokens[2, 1:] = (tgt[2, :3] + 1) % V         # none match
+    out, commit = _accept(logits, tokens, [3, 3, 3])
+    assert list(commit) == [4, 2, 1]
+    # emitted tokens are the targets up to and including the correction
+    assert list(out[0]) == list(tgt[0])          # 3 accepted + bonus
+    assert list(out[1, :2]) == list(tgt[1, :2]) and out[1, 2] == -1
+    assert out[2, 0] == tgt[2, 0] and (out[2, 1:] == -1).all()
+
+
+def test_accept_respects_num_drafts(rng):
+    V = 7
+    logits = rng.normal(size=(2, 3, V))
+    tgt = logits.argmax(-1)
+    tokens = np.zeros((2, 3), np.int64)
+    tokens[:, 1:] = tgt[:, :2]                   # drafts would all match
+    out, commit = _accept(logits, tokens, [0, 1])
+    assert list(commit) == [1, 2]                # capped by num_drafts
+    assert (out[0, 1:] == -1).all() and out[1, 2] == -1
+
+
+def test_accept_seeded_matches_sampler(rng):
+    """Seeded acceptance couples to the SAME stream the baseline
+    sampler draws from: target row j == sample_tokens at step+j."""
+    from repro.launch.engine.sampling import sample_tokens
+
+    V, K1 = 13, 3
+    logits = jnp.asarray(rng.normal(size=(2, K1, V)), jnp.float32)
+    seeds = jnp.asarray([5, 9], jnp.int32)
+    temps = jnp.asarray([0.8, 1.2], jnp.float32)
+    steps0 = jnp.asarray([2, 0], jnp.int32)
+    z = jnp.zeros((2,), jnp.int32)
+    ones = jnp.ones((2,), jnp.float32)
+    want = np.stack([
+        np.asarray(sample_tokens(logits[:, j], seeds, steps0 + j, temps,
+                                 z, ones)) for j in range(K1)], axis=1)
+    tokens = np.zeros((2, K1), np.int64)
+    tokens[:, 1:] = want[:, :K1 - 1]             # drafts == stream draws
+    out, commit = verify_accept(logits, jnp.asarray(tokens, jnp.int32),
+                                jnp.asarray([2, 2], jnp.int32), seeds,
+                                steps0, temps, z, ones)
+    assert (np.asarray(commit) == K1).all()
+    np.testing.assert_array_equal(np.asarray(out), want)
+
+
+# -- 3. engine equivalence ---------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["olmo_1b", "recurrentgemma_2b"])
+@pytest.mark.parametrize("sampling", [GREEDY, SEEDED],
+                         ids=["greedy", "seeded"])
+def test_spec_engine_bit_identical(rng, arch, sampling):
+    model, params = _model(arch)
+    prompts = _prompts(model.cfg, rng, repetitive=True) \
+        + _prompts(model.cfg, rng, n=2)
+    base = Engine(model, params, _cfg())
+    want = base.generate(prompts, sampling)
+    spec = Engine(model, params, _cfg(spec_tokens=3))
+    got = spec.generate(prompts, sampling)
+    assert got == want
+    st = spec.stats()
+    assert isinstance(spec.backend, SpecDecodeBackend)
+    assert st["blocks_used"] == 0
+    assert st["spec"]["proposed"] >= 0
+
+
+@pytest.mark.parametrize("arch", ["olmo_1b", "recurrentgemma_2b",
+                                  "xlstm_1_3b"])
+@pytest.mark.parametrize("sampling", [GREEDY, SEEDED],
+                         ids=["greedy", "seeded"])
+def test_spec_engine_identical_under_full_rejection(rng, arch, sampling):
+    """Adversarial drafts: every window's tail is rejected and rewound,
+    so per-slot state (rings, SSM carries) must be committed exactly at
+    the accept boundary — outputs still bit-identical, zero leaks."""
+    model, params = _model(arch)
+    prompts = _prompts(model.cfg, rng)
+    base = Engine(model, params, _cfg())
+    want = base.generate(prompts, sampling)
+    spec = Engine(model, params, _cfg(spec_tokens=3))
+    spec.backend.drafter = GarbageDrafter(3)
+    got = spec.generate(prompts, sampling)
+    assert got == want
+    st = spec.stats()
+    assert st["spec"]["accepted"] == 0 and st["spec"]["proposed"] > 0
+    assert st["blocks_used"] == 0
+
+
+def test_spec_draft_model_drafter_identical(rng):
+    """Draft-model drafter: a small attention-only LM proposes; outputs
+    match the baseline regardless of how good its guesses are (here:
+    same arch, DIFFERENT weights)."""
+    model, params = _model("olmo_1b")
+    draft_params = model.init(jax.random.PRNGKey(7))
+    prompts = _prompts(model.cfg, rng)
+    for sampling in (GREEDY, SEEDED):
+        base = Engine(model, params, _cfg())
+        want = base.generate(prompts, sampling)
+        spec = Engine(model, params, _cfg(
+            spec_tokens=2, drafter="draft_model", draft_model=model,
+            draft_params=draft_params))
+        got = spec.generate(prompts, sampling)
+        assert got == want
+        assert spec.stats()["blocks_used"] == 0
+
+
+def test_spec_stop_tokens_mid_window(rng):
+    """A stop/eos token emitted mid-window retires the request there;
+    extra accepted-but-unemitted tokens are discarded with the slot."""
+    model, params = _model("olmo_1b")
+    prompts = _prompts(model.cfg, rng, n=4, repetitive=True)
+    base = Engine(model, params, _cfg(eos_id=3))
+    want = base.generate(prompts, SamplingParams(max_tokens=12,
+                                                 stop_token_ids=(5, 9)))
+    spec = Engine(model, params, _cfg(eos_id=3, spec_tokens=3))
+    got = spec.generate(prompts, SamplingParams(max_tokens=12,
+                                                stop_token_ids=(5, 9)))
+    assert got == want
+    assert spec.stats()["blocks_used"] == 0
+
+
+# -- 4. scheduler invariants under speculation --------------------------
+
+
+def test_spec_no_leak_under_preemption(rng):
+    """Tiny pool: growth for verify windows forces LIFO preemption and
+    rejected-tail trims; every block must come home."""
+    model, params = _model("olmo_1b")
+    cfg = _cfg(num_slots=4, num_blocks=9, block_size=4, max_len=32,
+               spec_tokens=3, watermark_blocks=1)
+    base = Engine(model, params, _cfg(num_slots=4, num_blocks=9,
+                                      block_size=4, max_len=32))
+    prompts = [list(rng.integers(0, model.cfg.vocab_size, 6))
+               for _ in range(6)]
+    sampling = SamplingParams(max_tokens=20)
+    want = base.generate(prompts, sampling)
+    spec = Engine(model, params, cfg)
+    got = spec.generate(prompts, sampling)
+    assert got == want
+    st = spec.stats()
+    assert st["blocks_used"] == 0
+    assert st["spec"]["per_request"], "per-request counters missing"
+    # the preemption counter survives alongside the spec section
+    assert "preemptions" in st
+
+
+def test_spec_window_shrinks_before_evicting(rng):
+    """When the pool covers plain decode but not a full verify window,
+    the slot shrinks its own drafts instead of preempting others."""
+    model, params = _model("olmo_1b")
+    # 10 usable blocks cover both requests' full PLAIN footprint
+    # (2 x blocks_for(7 + 12) = 10) but not always the +3-draft window
+    spec = Engine(model, params, _cfg(num_slots=2, num_blocks=11,
+                                      block_size=4, max_len=24,
+                                      spec_tokens=3))
+    prompts = [(list(rng.integers(0, model.cfg.vocab_size, 2)) * 5)[:7]
+               for _ in range(2)]
+    base = Engine(model, params, _cfg(num_slots=2, num_blocks=11,
+                                      block_size=4, max_len=24))
+    sampling = SamplingParams(max_tokens=12)
+    assert spec.generate(prompts, sampling) == \
+        base.generate(prompts, sampling)
+    st = spec.stats()
+    assert st["preemptions"] == 0, "speculation must not evict"
+    assert st["blocks_used"] == 0
+
+
+@pytest.mark.parametrize("drafter", ["garbage", "ngram", "draft_model"])
+def test_spec_window_clamped_at_position_cap(rng, drafter):
+    """A slot within K tokens of max_len clamps its draft window (no
+    block-table overflow) and pad rows past the cap write to the null
+    block, never into the slot's own last real block."""
+    model, params = _model("olmo_1b")
+    kw = dict(num_slots=2, num_blocks=24, block_size=4, max_len=32)
+    base = Engine(model, params, _cfg(**kw))
+    prompts = [[1, 2] * 6, [3, 4] * 6]
+    sp = SamplingParams(max_tokens=20)        # 12 + 20 == max_len exactly
+    want = base.generate(prompts, sp)
+    skw = dict(kw, spec_tokens=4)
+    if drafter == "draft_model":
+        skw.update(drafter="draft_model", draft_model=model,
+                   draft_params=model.init(jax.random.PRNGKey(3)))
+    spec = Engine(model, params, _cfg(**skw))
+    if drafter == "garbage":
+        spec.backend.drafter = GarbageDrafter(4)
+    got = spec.generate(prompts, sp)
+    assert got == want
+    assert spec.stats()["blocks_used"] == 0
+
+
+def test_draft_model_cache_has_no_holes(rng):
+    """Full-accept windows leave the draft cache one token behind the
+    target; the catch-up feed must fill that position — every position
+    below the draft's frontier holds real K/V (a hole would silently
+    erode proposal quality for the rest of the request)."""
+    model, params = _model("olmo_1b")
+    spec = Engine(model, params, _cfg(
+        num_blocks=32, max_len=64, spec_tokens=3, drafter="draft_model",
+        draft_model=model, draft_params=params))   # self-draft: accepts
+    spec.add_request([5, 9, 5, 9, 5], SamplingParams(max_tokens=40))
+    for _ in range(7):
+        if spec.has_work:
+            spec.step()
+    dr = spec.backend.drafter
+    pos = int(dr.pos[0])
+    assert pos > 10, "window never advanced — test premise broken"
+    leaf = jax.tree.leaves(dr.cache)[0]            # (L, B, S, Hkv, D)
+    norms = np.linalg.norm(
+        np.asarray(leaf[0, 0], np.float32).reshape(leaf.shape[2], -1),
+        axis=1)
+    holes = [p for p in range(pos) if norms[p] == 0.0]
+    assert not holes, f"unwritten draft-cache positions: {holes}"
+
+
+def test_spec_stats_counters(rng):
+    model, params = _model("olmo_1b")
+    spec = Engine(model, params, _cfg(spec_tokens=3))
+    prompts = _prompts(model.cfg, rng, n=3, repetitive=True)
+    spec.generate(prompts, SamplingParams(max_tokens=16))
+    st = spec.stats()["spec"]
+    assert st["spec_tokens"] == 3 and st["steps"] > 0
+    assert st["emitted"] >= st["steps"]
+    assert 0.0 <= st["accept_rate"] <= 1.0
+    per = st["per_request"]
+    assert len(per) == 3
+    assert sum(r["proposed"] for r in per.values()) == st["proposed"]
+    assert sum(r["accepted"] for r in per.values()) == st["accepted"]
+    # handle-level counters mirror the aggregate
+    h = spec.finished[0]
+    assert h.num_draft_proposed == per[h.uid]["proposed"]
+
+
+# -- 5. drafters --------------------------------------------------------
+
+
+def test_ngram_drafter_lookup():
+    d = NgramDrafter(k=3, max_ngram=3)
+    # most recent match with a FULL continuation wins
+    assert d.lookup([1, 2, 3, 9, 1, 2, 3, 7, 8, 1, 2, 3]) == [7, 8, 1]
+    # periodic text: an earlier period supplies the full draft width
+    assert d.lookup([5, 5, 5, 5]) == [5, 5, 5]
+    assert d.lookup([1, 2, 3, 4]) == []          # no repetition
+    assert d.lookup([4]) == []                   # too short
+    # falls back to shorter suffixes / partial continuations
+    assert d.lookup([7, 1, 9, 2, 9]) == [2, 9]
+
+
+def test_ngram_acceptance_on_repetitive_prompts(rng):
+    """The self-drafting claim: on repetitive text the ngram drafter's
+    acceptance rate is high and tokens/step rises accordingly."""
+    model, params = _model("olmo_1b")
+    spec = Engine(model, params, _cfg(spec_tokens=4))
+    prompts = _prompts(model.cfg, rng, n=4, repetitive=True)
+    spec.generate(prompts, SamplingParams(max_tokens=24))
+    st = spec.stats()["spec"]
+    assert st["accept_rate"] >= 0.5, st
+    assert st["emitted_per_step"] > 1.5, st
+
+
+def test_spec_config_validation(rng):
+    model, params = _model("olmo_1b")
+    with pytest.raises(ValueError, match="paged"):
+        Engine(model, params, EngineConfig(backend="static",
+                                           spec_tokens=2))
+    with pytest.raises(ValueError, match="draft_model"):
+        Engine(model, params, _cfg(spec_tokens=2, drafter="draft_model"))
+    with pytest.raises(ValueError, match="unknown drafter"):
+        Engine(model, params, _cfg(spec_tokens=2, drafter="nope"))
+    # recurrent draft models cannot roll back by pointer rewind
+    rg, rg_params = _model("recurrentgemma_2b")
+    rg_cfg = dataclasses.replace(rg.cfg,
+                                 vocab_size=model.cfg.vocab_size)
+    with pytest.raises(ValueError, match="attention-only"):
+        Engine(model, params, _cfg(
+            spec_tokens=2, drafter="draft_model",
+            draft_model=Model(rg_cfg), draft_params=rg_params))

@@ -1,0 +1,112 @@
+"""Docs lane: markdown link checker + serving-surface docstring check.
+
+Two cheap, dependency-free gates so the docs cannot rot:
+
+1. **Links** — every relative markdown link in the repo's ``*.md``
+   files (root + ``docs/``) must point at a file that exists. External
+   (``http(s)://``, ``mailto:``) and pure-anchor links are skipped;
+   ``#fragment`` suffixes are stripped before the existence check.
+2. **Docstrings** (pydocstyle-style, scoped to ``launch/engine/``) —
+   every module, public class and public function/method in the
+   serving package must carry a docstring, and the documented public
+   API classes must use NumPy-style sections (``Parameters`` /
+   ``Attributes`` / ``Notes`` / ... underlined with dashes), because
+   docs/serving.md defers to them as the reference.
+
+Run: python tools/check_docs.py   (CI runs it in the tier-1 job)
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+ENGINE = REPO / "src" / "repro" / "launch" / "engine"
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SECTION_RE = re.compile(
+    r"^\s*(Parameters|Returns|Yields|Raises|Attributes|Methods|Notes|"
+    r"Examples|See Also)\n\s*-{3,}", re.MULTILINE)
+# the public serving surface docs/serving.md defers to — these must
+# carry NumPy-style sections, not just any docstring
+NUMPY_STYLE_REQUIRED = {
+    "Engine", "SamplingParams", "RequestHandle", "RequestOutput",
+    "EngineConfig", "ReplicaSet", "SpecDecodeBackend",
+}
+
+
+def check_links() -> list[str]:
+    errors = []
+    md_files = sorted(REPO.glob("*.md")) + sorted(REPO.glob("docs/*.md"))
+    for md in md_files:
+        for m in LINK_RE.finditer(md.read_text()):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(REPO)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def _missing_doc(node) -> bool:
+    doc = ast.get_docstring(node)
+    return not doc or not doc.strip()
+
+
+def check_docstrings() -> list[str]:
+    errors = []
+    found = set()
+    for py in sorted(ENGINE.glob("*.py")):
+        rel = py.relative_to(REPO)
+        tree = ast.parse(py.read_text())
+        if _missing_doc(tree):
+            errors.append(f"{rel}: missing module docstring")
+        # module-level defs + class-level methods only — closures inside
+        # function bodies are implementation detail, not public surface
+        nodes = list(tree.body)
+        nodes += [n for cls in tree.body if isinstance(cls, ast.ClassDef)
+                  for n in cls.body]
+        for node in nodes:
+            if not isinstance(node, (ast.ClassDef, ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            if node.name.startswith("_"):
+                continue
+            if _missing_doc(node):
+                errors.append(f"{rel}:{node.lineno}: public "
+                              f"{type(node).__name__.lower()} "
+                              f"`{node.name}` has no docstring")
+                continue
+            if isinstance(node, ast.ClassDef) \
+                    and node.name in NUMPY_STYLE_REQUIRED:
+                found.add(node.name)
+                if not SECTION_RE.search(ast.get_docstring(node)):
+                    errors.append(
+                        f"{rel}:{node.lineno}: `{node.name}` is part of "
+                        "the documented serving surface and needs "
+                        "NumPy-style sections (Parameters/Attributes/"
+                        "Notes/... underlined with ---)")
+    for name in sorted(NUMPY_STYLE_REQUIRED - found):
+        errors.append(f"launch/engine: documented class `{name}` not "
+                      "found — update tools/check_docs.py or the docs")
+    return errors
+
+
+def main() -> None:
+    errors = check_links() + check_docstrings()
+    if errors:
+        for e in errors:
+            print(f"DOCS: {e}", file=sys.stderr)
+        sys.exit(1)
+    print("docs lane: links + engine docstrings ok")
+
+
+if __name__ == "__main__":
+    main()
