@@ -28,6 +28,11 @@ through both backends of the unified serving ``Engine``
   wait — the fixed-per-replica scale-out story (EPAC: more tiles behind
   the same hub).
 
+A sixth section, ``shared_prefix``, replays a saturated trace of
+prompts sharing one long system prefix through the paged backend with
+the COW prefix cache off and on: hit rate, prefill tokens saved, COW
+copies, and a bit-identity check between the two runs (outputs_match).
+
 The comparison is at EQUAL CACHE MEMORY (--mem-tokens of KV capacity):
 the static engine must preallocate max_len per lane, so its batch is
 ``mem // max_len``; the paged engine spends the same tokens of pool on
@@ -110,6 +115,24 @@ def make_repetitive_trace(cfg, *, n_requests: int, seed: int,
     return trace
 
 
+def make_shared_prefix_trace(cfg, *, n_requests: int, seed: int,
+                             shared: int = 48, unique: int = 8,
+                             n_new: int = 8):
+    """Offline trace of prompts sharing one long system prefix (~86%
+    of prompt tokens shared at the default 48+8 split) — the regime
+    COW prefix caching targets: thousands of requests re-prefilling the
+    same system prompt. Arrival 0 for every request keeps the queue
+    saturated so admission cost (the thing caching removes) dominates
+    the prefill side of the measurement."""
+    rng = np.random.default_rng(seed)
+    common = list(rng.integers(0, cfg.vocab_size, shared))
+    return [TraceItem(0.0,
+                      common + list(rng.integers(0, cfg.vocab_size,
+                                                 unique)),
+                      n_new)
+            for _ in range(n_requests)]
+
+
 def _wait_until(t0: float, arrival: float):
     dt = t0 + arrival - time.time()
     if dt > 0:
@@ -139,22 +162,51 @@ def _warm(engine, trace):
     if hasattr(engine.backend, "alloc"):
         while widths[-1] * 2 <= engine.cfg.num_slots:
             widths.append(widths[-1] * 2)
+    vocab = engine.backend.model.cfg.vocab_size
+    c = 1
     for plen in sorted(warm):
         for nb in widths:
+            # DISTINCT rows: identical probe rows would prefix-hit each
+            # other on cache-on engines and the (bucket, width) FULL-
+            # prefill trace this pass exists to compile would first
+            # trace inside the timed region
+            batch = []
+            for _ in range(nb):
+                pat = [c % vocab, (c // vocab) % vocab]
+                batch.append((pat * plen)[:plen])
+                c += 1
             try:
-                engine.generate([trace[0].prompt[:1] * plen] * nb,
-                                SamplingParams(max_tokens=2))
+                engine.generate(batch, SamplingParams(max_tokens=2))
             except ValueError:
                 # tiny pools reject the top-bucket probe's worst case at
                 # admission — a length no real request can use either,
                 # so there is nothing to warm there
                 break
+    if getattr(engine.backend, "prefix", None) is None:
+        return
+    # prefix-cache engines take two more admission paths the replay
+    # must not compile mid-measurement: full-hit installs (the COW jit
+    # on the first decode) and suffix-only prefills (one trace per
+    # power-of-two suffix bucket). ONE shared probe prompt across all
+    # lengths produces exactly those: the first call per length misses
+    # (already-warm full prefill) and registers, repeats full-hit, and
+    # each longer length suffix-prefills from the previous one.
+    base = trace[0].prompt[:1] * (engine.cfg.max_len - 2)
+    for plen in sorted(warm):
+        for nb in widths:
+            try:
+                engine.generate([base[:plen]] * nb,
+                                SamplingParams(max_tokens=2))
+            except ValueError:
+                break
 
 
-def _replay(engine, trace) -> dict:
+def _replay(engine, trace, handles_out=None) -> dict:
     """Warm (on the engine itself), reset telemetry, then replay the
     trace against the arrival clock. ``engine`` is an Engine or a
-    ReplicaSet — both speak add_request/step/stats."""
+    ReplicaSet — both speak add_request/step/stats. ``handles_out``
+    (optional list) receives the finished request handles in trace
+    order, for sections that compare emitted tokens across configs."""
     if hasattr(engine, "replicas"):       # warm each replica's jit caches
         for rep in engine.replicas:
             _warm(rep, trace)
@@ -176,6 +228,8 @@ def _replay(engine, trace) -> dict:
         elif pending:
             _wait_until(t0, pending[0].arrival)
     dt = time.time() - t0
+    if handles_out is not None:
+        handles_out.extend(handles)
     useful = sum(len(h.token_ids) for h in handles)
     st = engine.stats()
     slots = getattr(engine, "total_slots", engine.cfg.num_slots)
@@ -338,6 +392,55 @@ def _replay_speculative(model, params, args) -> dict:
     return res
 
 
+def _replay_shared_prefix(model, params, args) -> dict:
+    """The ``"shared_prefix"`` section: a saturated trace of prompts
+    sharing one long system prefix, through the paged backend with the
+    COW prefix cache OFF and ON at equal cache memory. Reports both
+    tok/s, the hit rate, prefill tokens computed under each config (the
+    saved volume is the caching win), COW copy and LRU eviction counts,
+    and whether the two runs emitted bit-identical tokens (the
+    correctness contract tests/test_prefix_cache.py pins; the bench
+    re-checks it on every run because BENCH_serve.json is CI-gated)."""
+    trace = make_shared_prefix_trace(model.cfg,
+                                     n_requests=2 * args.requests,
+                                     seed=args.seed + 3)
+    base_cfg = EngineConfig(
+        backend="paged", num_slots=args.slots, block_size=args.block_size,
+        num_blocks=args.mem_tokens // args.block_size + 1,
+        max_len=args.max_len, watermark_blocks=args.watermark,
+        prefix_cache=False)
+    off = Engine(model, params, base_cfg)
+    h_off: list = []
+    res_off = _replay(off, trace, h_off)
+    st_off = off.stats()
+    del off
+    on = Engine(model, params,
+                dataclasses.replace(base_cfg, prefix_cache=True))
+    h_on: list = []
+    res = _replay(on, trace, h_on)
+    st = on.stats()
+    pc = st["prefix_cache"]
+    res["base_tok_s"] = res_off["tok_s"]
+    res["speedup_vs_uncached"] = res["tok_s"] / max(res_off["tok_s"],
+                                                    1e-9)
+    res["hit_rate"] = round(pc["hits"] / max(pc["lookups"], 1), 4)
+    res["hits"] = pc["hits"]
+    res["lookups"] = pc["lookups"]
+    res["hit_tokens"] = pc["hit_tokens"]
+    res["prefill_tokens"] = st["prefill_tokens"]
+    res["prefill_tokens_uncached"] = st_off["prefill_tokens"]
+    res["prefill_tokens_saved"] = (st_off["prefill_tokens"]
+                                   - st["prefill_tokens"])
+    res["prefill_reduction"] = (st_off["prefill_tokens"]
+                                / max(st["prefill_tokens"], 1))
+    res["cow_copies"] = pc["cow_copies"]
+    res["evictions"] = pc["evictions"]
+    res["suffix_compiles"] = pc["suffix_compiles"]
+    res["outputs_match"] = ([h.token_ids for h in h_on]
+                            == [h.token_ids for h in h_off])
+    return res
+
+
 def run_bench(args) -> dict:
     cfg = get_config(args.arch)
     if args.smoke:
@@ -367,6 +470,7 @@ def run_bench(args) -> dict:
                            rate=args.rate, seed=args.seed + 1)
     res_r = _replay_replicas(model, params, rep_trace, args)
     res_sp = _replay_speculative(model, params, args)
+    res_px = _replay_shared_prefix(model, params, args)
     return {
         "arch": cfg.name,
         "mem_tokens": args.mem_tokens,
@@ -375,6 +479,7 @@ def run_bench(args) -> dict:
         "sharded": res_sh,
         "replicas": res_r,
         "speculative": res_sp,
+        "shared_prefix": res_px,
         "speedup": res_c["tok_s"] / max(res_s["tok_s"], 1e-9),
     }
 
@@ -387,8 +492,11 @@ def _write_json(result: dict, json_path: str):
     if result["continuous"]["blocks_leaked"] \
             or result["sharded"]["blocks_leaked"] \
             or result["replicas"]["blocks_leaked"] \
-            or result["speculative"]["blocks_leaked"]:
+            or result["speculative"]["blocks_leaked"] \
+            or result["shared_prefix"]["blocks_leaked"]:
         raise SystemExit("block leak detected")
+    if not result["shared_prefix"]["outputs_match"]:
+        raise SystemExit("prefix cache changed emitted tokens")
 
 
 def _emit(result: dict, json_path: str):
@@ -412,6 +520,10 @@ def _emit(result: dict, json_path: str):
     print(f"serve_speculative,{res_p['tok_s']:.2f},"
           f"{res_p['cache_util']:.3f},{res_p['lane_eff']:.3f},"
           f"{res_p['useful']},{res_p['wall_s']:.2f}")
+    res_x = result["shared_prefix"]
+    print(f"serve_shared_prefix,{res_x['tok_s']:.2f},"
+          f"{res_x['cache_util']:.3f},{res_x['lane_eff']:.3f},"
+          f"{res_x['useful']},{res_x['wall_s']:.2f}")
     print(f"# sharded mesh {res_m['mesh']['axes']}; "
           f"head_sharded={res_m['head_sharded']}; "
           f"per-device cache {res_m['per_device_cache']}")
@@ -428,6 +540,17 @@ def _emit(result: dict, json_path: str):
           f"({res_p['base_tok_s']:.1f}) on the repetitive trace; "
           f"accept rate {res_p['accept_rate']:.2f}, "
           f"{res_p['accepted_per_step']:.2f} accepted drafts/step")
+    print(f"# shared prefix: hit rate {res_x['hit_rate']:.2f} "
+          f"({res_x['hits']}/{res_x['lookups']}), prefill tokens "
+          f"{res_x['prefill_tokens']} vs "
+          f"{res_x['prefill_tokens_uncached']} uncached "
+          f"({res_x['prefill_reduction']:.2f}x fewer, "
+          f"{res_x['prefill_tokens_saved']} saved); "
+          f"{res_x['tok_s']:.1f} tok/s = "
+          f"{res_x['speedup_vs_uncached']:.2f}x uncached "
+          f"({res_x['base_tok_s']:.1f}); cow copies "
+          f"{res_x['cow_copies']}; outputs_match "
+          f"{res_x['outputs_match']}")
     print(f"# equal cache budget {result['mem_tokens']} tokens; "
           f"continuous/static tokens/s: {result['speedup']:.2f}x; "
           f"mean active slots {res_c['mean_active']:.2f}; "
@@ -487,7 +610,8 @@ def run():
                     ("serve_continuous", result["continuous"]),
                     ("serve_sharded", result["sharded"]),
                     ("serve_replicas", result["replicas"]),
-                    ("serve_speculative", result["speculative"])):
+                    ("serve_speculative", result["speculative"]),
+                    ("serve_shared_prefix", result["shared_prefix"])):
         emit(name, 1e6 / max(r["tok_s"], 1e-9),
              f"tok_s={r['tok_s']:.2f} util={r['cache_util']:.3f} "
              f"preemptions={r['preemptions']} "

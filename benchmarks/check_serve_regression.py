@@ -11,11 +11,15 @@ bench) and fails on:
     lockstep baseline engine on identical hardware in the same process,
     so the ratio cancels host speed and isolates scheduler regressions.
     ``--absolute`` compares raw tok/s instead (same-machine runs).
-  * any block leak (``blocks_leaked != 0``) in the continuous, sharded
-    or replicas sections.
+  * any block leak (``blocks_leaked != 0``) in the continuous, sharded,
+    replicas, speculative or shared_prefix sections.
   * prefill compile-count growth in the continuous section (the jit
     cache is O(buckets x batch-buckets) by contract; a new trace per
     request length sneaking back in is a regression even when fast).
+  * shared_prefix contract breaks: zero hit rate or zero prefill tokens
+    saved on the >=75%-shared trace, cached outputs differing from the
+    cache-off engine, or the cached-over-uncached speedup dropping more
+    than ``--tolerance`` below baseline.
 
 Usage:
   python benchmarks/check_serve_regression.py \
@@ -32,7 +36,8 @@ import sys
 def check(baseline: dict, fresh: dict, *, tolerance: float,
           absolute: bool) -> list[str]:
     errors = []
-    for section in ("continuous", "sharded", "replicas", "speculative"):
+    for section in ("continuous", "sharded", "replicas", "speculative",
+                    "shared_prefix"):
         leaked = fresh.get(section, {}).get("blocks_leaked", 0)
         if leaked:
             errors.append(f"{section}: {leaked} blocks leaked")
@@ -78,6 +83,37 @@ def check(baseline: dict, fresh: dict, *, tolerance: float,
         if fresh["speculative"]["accepted"] <= 0:
             errors.append("speculative section accepted no drafts — "
                           "the drafter or accept rule is broken")
+    # prefix cache: the shared-prefix trace must actually HIT (rate,
+    # saved prefill volume), must not change emitted tokens, and its
+    # cached-over-uncached speedup (machine-normalized by construction:
+    # both engines run in this process) must hold within tolerance.
+    # Skipped when the baseline predates the section.
+    if "shared_prefix" in fresh:
+        px = fresh["shared_prefix"]
+        print(f"shared_prefix: hit_rate {px['hit_rate']:.3f}, "
+              f"prefill_tokens_saved {px['prefill_tokens_saved']}, "
+              f"outputs_match {px['outputs_match']}")
+        if px["hit_rate"] <= 0:
+            errors.append("shared_prefix: hit rate is 0 — the prefix "
+                          "index matched nothing on a >=75%-shared trace")
+        if px["prefill_tokens_saved"] <= 0:
+            errors.append("shared_prefix: no prefill tokens saved — "
+                          "cache hits are not shrinking admission work")
+        if not px["outputs_match"]:
+            errors.append("shared_prefix: cached outputs differ from "
+                          "the cache-off engine (bit-identity broken)")
+        if "shared_prefix" in baseline:
+            base_x = baseline["shared_prefix"]["speedup_vs_uncached"]
+            fresh_x = px["speedup_vs_uncached"]
+            floor_x = (1.0 - tolerance) * base_x
+            print(f"shared_prefix speedup_vs_uncached: baseline "
+                  f"{base_x:.3f}, fresh {fresh_x:.3f}, "
+                  f"floor {floor_x:.3f}")
+            if fresh_x < floor_x:
+                errors.append(
+                    f"shared_prefix speedup regressed >{tolerance:.0%}: "
+                    f"{fresh_x:.3f} < {floor_x:.3f} "
+                    f"(baseline {base_x:.3f})")
     return errors
 
 

@@ -220,6 +220,16 @@ class EngineConfig:
     max_prefill_batch : int
         Cap on requests prefilled in one batched admission call;
         <= 0 lifts the cap to the slot count.
+    prefix_cache : bool
+        Copy-on-write prefix caching on the paged backend: admissions
+        match the longest block-aligned cached prefix against a
+        host-side trie, share those physical blocks by refcount, and
+        prefill only the non-shared suffix; retirement parks
+        unreferenced indexed blocks in an LRU reclaimed before the
+        allocator reports exhaustion. Active only when the model's
+        whole state lives in the shared pool
+        (``Model.supports_prefix_cache``); outputs are token-identical
+        with it on or off.
     mesh : jax.sharding.Mesh or None
         Shard params (2-D FSDP x TP), the KV pool (head-sharded over
         ``tp_axis``) and the compiled steps over this mesh. Host-side
@@ -254,6 +264,12 @@ class EngineConfig:
     # batch-bucket) pair); the static backend bounds its lockstep batch
     # width with it. <= 0 (default) lifts the cap to the slot count.
     max_prefill_batch: int = 0
+    # Copy-on-write prefix caching (paged backend): share block-aligned
+    # cached prompt prefixes across requests via refcounts, prefill only
+    # the non-shared suffix, keep unreferenced indexed blocks in an LRU
+    # reclaimed before exhaustion. Silently inactive for models with
+    # per-slot decode state (rings/SSM) — see Model.supports_prefix_cache.
+    prefix_cache: bool = True
     # Mesh-sharded serving: when a jax.sharding.Mesh is given, the
     # backend shards params (2-D FSDP x TP rules of launch/sharding.py),
     # the KV block pools (head-sharded over ``tp_axis`` — each device

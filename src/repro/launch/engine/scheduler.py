@@ -60,6 +60,7 @@ class _Slot:
     blocks: list[int] = dataclasses.field(default_factory=list)
     last_token: int = 0
     ticket: int = -1             # admission order; LIFO preemption key
+    shared: int = 0              # leading blocks held by shared reference
 
 
 class PagedBackend:
@@ -74,8 +75,14 @@ class PagedBackend:
         self.layout = paged_kv.PagedLayout(
             num_slots=cfg.num_slots, num_blocks=cfg.num_blocks,
             block_size=cfg.block_size, max_len=cfg.max_len)
+        # COW prefix caching: only when EVERY layer's decode state lives
+        # in the shared pool blocks (rings/SSM carries are per-slot and
+        # a matched block chain cannot reconstruct them)
+        self.prefix = paged_kv.PrefixIndex(cfg.block_size) \
+            if cfg.prefix_cache and model.supports_prefix_cache() else None
         self.alloc = paged_kv.BlockAllocator(
-            self.layout, watermark=cfg.watermark_blocks)
+            self.layout, watermark=cfg.watermark_blocks,
+            on_evict=self._on_evict if self.prefix is not None else None)
         self.pools = model.init_paged_cache(self.layout)
         # Mesh-sharded serving: commit params and pools to their
         # NamedShardings once; shlib.jit_step pins every step's outputs
@@ -108,6 +115,12 @@ class PagedBackend:
         self.preemptions = 0
         self.prefill_calls = 0       # batched prefill launches
         self.prefill_reqs = 0        # requests prefilled (>= calls)
+        self.prefill_tokens = 0      # real tokens computed at admission
+        self.prefix_lookups = 0      # admissions that consulted the index
+        self.prefix_hits = 0         # admissions with a non-empty match
+        self.prefix_hit_tokens = 0   # prompt tokens served from cache
+        self.cow_copies = 0          # shared blocks copied before a write
+        self.prefix_evictions = 0    # indexed blocks reclaimed by alloc
 
         def decode_fn(params, pools, table, lengths, tokens):
             return model.decode_step_paged(params, pools, table, lengths,
@@ -116,6 +129,21 @@ class PagedBackend:
         self._decode = shlib.jit_step(decode_fn, self.shard,
                                       self._pool_sh, donate=(1,))
         self._prefill_cache = {}
+        self._suffix_cache = {}
+
+        def cow_fn(pools, src, dst):
+            # duplicate physical block src into dst across every pool
+            # leaf (leading layer-count axis, then the block axis) —
+            # only reachable when supports_prefix_cache gated the tree
+            # to pure pool leaves
+            return jax.tree.map(
+                lambda p: p.at[:, dst].set(p[:, src]), pools)
+
+        if self.shard is None:
+            self._cow = jax.jit(cow_fn, donate_argnums=(0,))
+        else:
+            self._cow = jax.jit(cow_fn, donate_argnums=(0,),
+                                out_shardings=self._pool_sh)
 
     # -- public backend API ---------------------------------------------
 
@@ -153,6 +181,10 @@ class PagedBackend:
         self._admit(outs)
         self._grow_blocks()
         active = [i for i, s in enumerate(self.slots) if s.req is not None]
+        if not active:
+            return outs
+        self._ensure_cow(active)       # may LIFO-preempt under pressure
+        active = [i for i in active if self.slots[i].req is not None]
         if not active:
             return outs
         tokens = np.zeros((self.cfg.num_slots, 1), np.int32)
@@ -213,6 +245,58 @@ class PagedBackend:
             slot.blocks.append(nb)
             self.table[i, len(slot.blocks) - 1] = nb
 
+    def _on_evict(self, b: int):
+        """Allocator reclaimed an unreferenced cached block: unlink it
+        from the prefix index so it can never be matched again."""
+        self.prefix.evict_block(b)
+        self.prefix_evictions += 1
+
+    def _ensure_cow(self, active):
+        """Copy-on-write pass before a decode/verify device call: any
+        slot whose next write position lands inside its SHARED prefix
+        gets that block copied into a private one first, so the write
+        cannot corrupt other slots sharing the block (or the pristine
+        indexed copy future admissions will match). Only the LAST
+        shared block is ever a write target — writes happen at the
+        length frontier, which a full-prefix hit places one token
+        inside the shared tail (lengths = S - 1)."""
+        if self.prefix is None:
+            return
+        bs = self.cfg.block_size
+        for i in active:
+            slot = self.slots[i]
+            idx = int(self.lengths[i]) // bs
+            if idx >= slot.shared:
+                continue
+            assert idx == slot.shared - 1, \
+                "write frontier deeper than the shared tail block"
+            assert self.alloc.must_cow(slot.blocks[idx])
+            while not self.alloc.can_alloc(1):   # LIFO, like _grow_blocks
+                cands = [(j, self.slots[j].ticket)
+                         for j, s in enumerate(self.slots)
+                         if s.req is not None]
+                victim = self.alloc.select_victim(cands)
+                self._preempt(victim)
+                if victim == i:
+                    break
+            if slot.req is None:           # preempted itself: waits in
+                continue                   # queue, re-admits later
+            self._cow_block(i, idx)
+
+    def _cow_block(self, i: int, idx: int):
+        """Copy shared block ``slot.blocks[idx]`` into a freshly owned
+        one and swap the table entry; the old block keeps its other
+        references (and its place in the prefix index) untouched."""
+        slot = self.slots[i]
+        old = slot.blocks[idx]
+        (new,) = self.alloc.alloc(1)
+        self.pools = self._cow(self.pools, old, new)
+        slot.blocks[idx] = new
+        self.table[i, idx] = new
+        self.alloc.free([old])             # drop only THIS slot's ref
+        slot.shared = idx                  # blocks before idx still shared
+        self.cow_copies += 1
+
     def _imminent_growth(self) -> int:
         """Growth blocks active sequences will claim THIS step. Counted
         into admission so a new request cannot grab the last free blocks
@@ -243,40 +327,78 @@ class PagedBackend:
             return paged_kv.blocks_for(prefill_bucket(S, bs, cap), bs) * bs
         return ("exact", S)
 
-    def _drain_bucket_run(self) -> list[RequestHandle]:
+    def _suffix_bucket(self, n: int) -> int:
+        """Power-of-two bucket for a non-shared admission suffix: same
+        policy as prompt buckets (floor = block size, capped), so
+        suffix-prefill traces stay O(log max_len) like everything else."""
+        bs = self.cfg.block_size
+        cap = paged_kv.blocks_for(self.cfg.max_len, bs) * bs
+        return prefill_bucket(n, bs, cap)
+
+    def _admit_key(self, S: int, matched: int):
+        """The admission-trace identity: full-hit installs (no device
+        call), suffix prefills batched by suffix bucket, full prefills
+        by the standard prompt bucket. Requests batch together iff
+        their keys match."""
+        if matched == S:
+            return ("hit",)
+        if matched > 0:
+            return ("sfx", self._suffix_bucket(S - matched))
+        return self._bucket_key(S)
+
+    def _drain_bucket_run(self):
         """Pop the maximal FCFS PREFIX of the queue that (a) fits the
         free slots and the pool (cumulative current footprint + this
         step's imminent growth, watermark headroom while anything else
-        runs), (b) shares the queue head's prefill bucket, and (c) stays
-        within ``max_prefill_batch``. Strictly a prefix: a request that
-        does not fit ends the run — no skipping ahead — so batching
-        cannot starve the head of the queue."""
+        runs), (b) shares the queue head's admission key (prefill
+        bucket / suffix bucket / full hit), and (c) stays within
+        ``max_prefill_batch``. Strictly a prefix: a request that does
+        not fit ends the run — no skipping ahead — so batching cannot
+        starve the head of the queue.
+
+        Each accepted request's longest block-aligned cached prefix is
+        matched here and its blocks are SHARED immediately (refcount
+        pinned), so a later entry's fresh allocation cannot reclaim
+        them out of the LRU mid-run; a request that then fails the pool
+        check is un-pinned before the run closes. Returns
+        ``(req, matched_blocks, cached_tokens, S)`` entries."""
         free = sum(1 for s in self.slots if s.req is None)
         if not free:
             return []
+        bs = self.cfg.block_size
         cap = free if self.cfg.max_prefill_batch <= 0 else \
             min(free, self.cfg.max_prefill_batch)
-        run: list[RequestHandle] = []
+        run = []
         need = self._imminent_growth()
         key0 = None
         for req in self.waiting:
             if len(run) >= cap:
                 break
-            S = len(self._cached_tokens(req))
-            key = self._bucket_key(S)
+            cached = self._cached_tokens(req)
+            S = len(cached)
+            m = self.prefix.match(cached) if self.prefix is not None \
+                else []
+            key = self._admit_key(S, len(m) * bs)
             if run and key != key0:
                 break
+            for b in m:                   # pin against mid-run reclaim
+                self.alloc.share(b)
             # + 1: the admitted slot decodes THIS step, caching the fed
             # token at position ``cached`` — without that block counted
             # a boundary-length request admits then self-preempts,
-            # wasting a full prefill every step
-            need += paged_kv.blocks_for(S + 1, self.cfg.block_size)
+            # wasting a full prefill every step. Matched blocks are
+            # already resident; for a fresh full hit the +1 covers the
+            # copy-on-write block the first decode claims instead.
+            want = paged_kv.blocks_for(S + 1, bs) - len(m)
             # watermark headroom only matters while others are running;
             # a sole request must always pass (progress guarantee)
             strict = self.num_active > 0 or bool(run)
-            if not self.alloc.can_admit(need, strict=strict):
+            if not self.alloc.can_admit(need + want, strict=strict):
+                if m:
+                    self.alloc.free(m)    # un-pin: hits return to LRU
                 break
-            run.append(req)
+            need += want
+            run.append((req, m, cached, S))
             key0 = key
         for _ in run:
             self.waiting.popleft()
@@ -289,29 +411,125 @@ class PagedBackend:
                 return                    # FCFS: no skipping ahead
             self._place_batch(run, outs)
 
-    def _place_batch(self, reqs: list[RequestHandle],
-                     outs: list[RequestOutput]):
-        """Prefill ``reqs`` (all sharing one bucket) as ONE right-padded
-        batch call and scatter each row's true-length cache into its
-        slot. Rows are FCFS-ordered, so emission order matches the old
-        one-at-a-time admission exactly."""
+    def _place_batch(self, run, outs: list[RequestOutput]):
+        """Admit one drained run (entries all share one admission key):
+        install matched prefix blocks, allocate the rest, and compute
+        ONLY the non-shared tokens — a full-prefix hit costs no device
+        call at all, a partial hit prefills just the suffix through the
+        verify path, and a miss takes the batched full prefill. Rows
+        are FCFS-ordered, so emission order matches one-at-a-time
+        admission exactly (a fresh full hit emits its first token from
+        this step's decode instead of at admission; the token VALUE is
+        bit-identical because it is drawn at the same RNG stream
+        position from the same logits row)."""
         bs = self.cfg.block_size
         free_slots = [i for i, s in enumerate(self.slots) if s.req is None]
         rows = []                          # (slot, req, cached, S, ids)
-        for req in reqs:
-            cached = self._cached_tokens(req)
-            S = len(cached)
+        for req, m, cached, S in run:
             nbp = paged_kv.blocks_for(S, bs)
-            block_ids = self.alloc.alloc(nbp)
+            # matched blocks were share()'d at drain time; only the
+            # non-shared tail is allocated (may reclaim from the LRU,
+            # which cannot touch the pinned matches)
+            block_ids = list(m) + self.alloc.alloc(nbp - len(m))
             i = free_slots.pop(0)
             slot = self.slots[i]
             slot.req = req
             slot.blocks = block_ids
+            slot.shared = len(m)
             slot.ticket = self._ticket
             self._ticket += 1
+            self.table[i, :] = paged_kv.NULL_BLOCK
+            self.table[i, :len(block_ids)] = block_ids
             rows.append((i, req, cached, S, block_ids))
+            if self.prefix is not None:
+                self.prefix_lookups += 1
+                if m:
+                    self.prefix_hits += 1
+                    self.prefix_hit_tokens += len(m) * bs
+        _, m0, _, S0 = run[0]
+        if m0 and len(m0) * bs == S0:
+            row_logits = self._install_hits(rows)
+        elif m0:
+            row_logits = self._suffix_batch(rows)
+        else:
+            row_logits = self._full_batch(rows)
+        self.made_progress = True          # tokens cached in all flavors
+        # index each row's full PROMPT-chunk blocks before sampling: a
+        # max_tokens=1 row retires inside _accept, and its freed chain
+        # must already be registered to land in the LRU (first-wins —
+        # chunks cached earlier, including by this very batch, keep
+        # their original block)
+        if self.prefix is not None:
+            for i, req, cached, S, block_ids in rows:
+                for b in self.prefix.insert(cached, block_ids):
+                    self.alloc.register(b)
+        for i, req, cached, S, block_ids in rows:
+            self.sampler.install(i, req.sampling, req._n_sampled)
+            if req._n_sampled > 0:         # resume: nothing new to sample
+                self.slots[i].last_token = req.token_ids[-1]
+            elif row_logits is not None:   # miss/suffix: sample token 0
+                outs.append(self._accept(
+                    i, self.sampler.sample_one(i, row_logits[i:i + 1])))
+            # fresh full hit: no logits yet — this step's decode replays
+            # the prompt's last token and samples at stream position 0
+        self._post_admit(rows)
+
+    def _install_hits(self, rows):
+        """Full-prefix hit: every block is already resident — no device
+        call. A RESUME row's cache is complete (lengths = S, feed the
+        last emitted token); a FRESH row still owes the sample after
+        its prompt, so its length rewinds one token (lengths = S - 1)
+        and this step's decode replays ``cached[-1]`` — the rewrite
+        lands inside the shared tail block, which ``_ensure_cow``
+        privatizes first."""
+        for i, req, cached, S, block_ids in rows:
+            if req._n_sampled > 0:
+                self.lengths[i] = S
+            else:
+                self.lengths[i] = S - 1
+                self.slots[i].last_token = cached[-1]
+        return None
+
+    def _suffix_batch(self, rows):
+        """Partial hit: prefill ONLY each row's non-shared suffix, in
+        one verify-path call (fed token j caches at ``lengths + j``,
+        which is exactly suffix prefill when lengths = matched tokens).
+        Non-participating slots ride along masked: local table rows at
+        the null block and local lengths 0, so their writes land in the
+        reserved block and their logits rows are ignored. Returns
+        slot-indexed next-token logits."""
+        bs = self.cfg.block_size
+        i0, _, _, S0, _ = rows[0]
+        W = self._suffix_bucket(S0 - self.slots[i0].shared * bs)
+        fn = self._suffix_prefill(W)
+        N = self.cfg.num_slots
+        toks = np.zeros((N, W), np.int32)
+        slens = np.zeros((N,), np.int32)
+        stable = np.full((N, self.layout.max_blocks_per_seq),
+                         paged_kv.NULL_BLOCK, np.int32)
+        last = np.zeros((N,), np.int32)
+        for i, req, cached, S, block_ids in rows:
+            mt = self.slots[i].shared * bs
+            sfx = S - mt
+            toks[i, :sfx] = cached[mt:]
+            slens[i] = mt
+            stable[i, :len(block_ids)] = block_ids
+            last[i] = sfx - 1
+            self.lengths[i] = S
+            self.prefill_tokens += sfx
+        row_logits, self.pools = fn(
+            self.params, self.pools, jnp.asarray(stable),
+            jnp.asarray(slens), jnp.asarray(toks), jnp.asarray(last))
+        self.prefill_calls += 1
+        self.prefill_reqs += len(rows)
+        return np.asarray(row_logits)      # (num_slots, V)
+
+    def _full_batch(self, rows):
+        """Prefix miss: the PR-4 batched full prefill — one right-padded
+        batch call, each row's true-length cache scattered into its
+        slot. Returns slot-indexed next-token logits."""
         fn, tok_w, cache_w, Nb = self._prefill(rows[0][3], len(rows))
-        nbc = cache_w // bs
+        nbc = cache_w // self.cfg.block_size
         toks = np.zeros((Nb, tok_w), np.int32)
         lens = np.ones((Nb,), np.int32)    # batch fillers: harmless len 1
         ids = np.full((Nb, nbc), paged_kv.NULL_BLOCK, np.int32)
@@ -323,25 +541,20 @@ class PagedBackend:
             ids[r, :len(block_ids)] = block_ids  # pad tail -> null block
             row_of_slot[i] = r
             valid[i] = True
-            self.table[i, :] = paged_kv.NULL_BLOCK
-            self.table[i, :len(block_ids)] = block_ids
             self.lengths[i] = S
+            self.prefill_tokens += S
         args = (self.params, self.pools, jnp.asarray(toks),
                 jnp.asarray(ids), jnp.asarray(row_of_slot),
                 jnp.asarray(valid), jnp.asarray(lens))
         row_logits, self.pools = fn(*args)
         self.prefill_calls += 1
         self.prefill_reqs += len(rows)
-        row_logits = np.asarray(row_logits)  # (Nb, V): per-row position S-1
-        self.made_progress = True
-        for r, (i, req, cached, S, block_ids) in enumerate(rows):
-            self.sampler.install(i, req.sampling, req._n_sampled)
-            if req._n_sampled > 0:         # resume: nothing new to sample
-                self.slots[i].last_token = req.token_ids[-1]
-                continue
-            outs.append(self._accept(
-                i, self.sampler.sample_one(i, row_logits[r:r + 1])))
-        self._post_admit(rows)
+        row_logits = np.asarray(row_logits)  # (Nb, V): per-row pos S-1
+        out = np.zeros((self.cfg.num_slots,) + row_logits.shape[1:],
+                       row_logits.dtype)
+        for r, (i, *_rest) in enumerate(rows):
+            out[i] = row_logits[r]
+        return out
 
     def _prefill(self, S: int, n: int):
         """Prefill+pack, jit-cached per (prompt-bucket, batch-bucket):
@@ -384,8 +597,41 @@ class PagedBackend:
             self._prefill_cache[key] = fn
         return fn, tok_w, Sb, Nb
 
+    def _suffix_prefill(self, W: int):
+        """Suffix-only prefill, jit-cached per suffix bucket ``W``
+        (separate cache from full prefill so the O(log max_len) compile
+        caps on each stay independently observable). Reuses the verify
+        pass: fed token j caches at ``lengths + j`` reading the shared
+        prefix through the block table, and ``commit_fn`` exports only
+        each row's next-token logits row. Pad positions past a row's
+        real blocks route to the null block (table rows are NULL beyond
+        the chain; logical indices past the table width null-route in
+        the kernel)."""
+        fn = self._suffix_cache.get(W)
+        if fn is None:
+            model, ctx = self.model, self.ctx
+
+            def suffix_fn(params, pools, table, lengths, tokens, last):
+                def commit_fn(logits):    # (B, W, V) -> per-row last real
+                    rows = jnp.take_along_axis(
+                        logits, last[:, None, None], axis=1)[:, 0]
+                    return rows, jnp.full(lengths.shape, W, jnp.int32)
+
+                rows, _, pools = model.decode_verify(
+                    params, pools, table, lengths, tokens, commit_fn, ctx)
+                return rows, pools
+
+            fn = shlib.jit_step(suffix_fn, self.shard, self._pool_sh,
+                                donate=(1,))
+            self._suffix_cache[W] = fn
+        return fn
+
     def _preempt(self, i: int):
-        """Evict slot i to a host-side recompute record (LIFO victim)."""
+        """Evict slot i to a host-side recompute record (LIFO victim).
+        NOT progress: a step that only evicts and re-queues emits no
+        token and caches none, so reporting progress here would let
+        Engine.drive spin through preempt/re-prefill churn forever —
+        only admissions and decodes flip ``made_progress``."""
         slot = self.slots[i]
         req = slot.req
         req.num_preemptions += 1
@@ -393,7 +639,6 @@ class PagedBackend:
         self.alloc.free(slot.blocks)
         self._clear_slot(i)
         self.waiting.appendleft(req)      # preempted work goes first
-        self.made_progress = True
 
     def _retire(self, i: int):
         """Backend cleanup after register_sample flagged the handle."""
@@ -408,6 +653,7 @@ class PagedBackend:
         slot.blocks = []
         slot.last_token = 0
         slot.ticket = -1
+        slot.shared = 0
         self.table[i, :] = paged_kv.NULL_BLOCK
         self.lengths[i] = 0
         self.sampler.clear(i)
@@ -429,7 +675,10 @@ class PagedBackend:
         self.steps = self.slot_steps = 0
         self.block_token_steps = self.live_token_steps = 0
         self.preemptions = 0
-        self.prefill_calls = self.prefill_reqs = 0
+        self.prefill_calls = self.prefill_reqs = self.prefill_tokens = 0
+        self.prefix_lookups = self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        self.cow_copies = self.prefix_evictions = 0
 
     def stats(self) -> dict:
         """Cache/occupancy/scheduling telemetry for the run so far."""
@@ -444,5 +693,17 @@ class PagedBackend:
             "prefill_compiles": len(self._prefill_cache),
             "prefill_calls": self.prefill_calls,
             "prefill_reqs": self.prefill_reqs,
+            "prefill_tokens": self.prefill_tokens,
             "bucketed_prefill": self.ragged_prefill,
+            "prefix_cache": {
+                "enabled": self.prefix is not None,
+                "lookups": self.prefix_lookups,
+                "hits": self.prefix_hits,
+                "hit_rate": self.prefix_hits / max(self.prefix_lookups, 1),
+                "hit_tokens": self.prefix_hit_tokens,
+                "cow_copies": self.cow_copies,
+                "evictions": self.prefix_evictions,
+                "lru_blocks": self.alloc.lru_count,
+                "suffix_compiles": len(self._suffix_cache),
+            },
         }

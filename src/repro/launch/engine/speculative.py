@@ -414,6 +414,11 @@ class SpecDecodeBackend(PagedBackend):
         if extra:
             self.alloc.free(extra)
             self.table[i, len(slot.blocks):] = paged_kv.NULL_BLOCK
+        # rollback can only drop unwritten growth blocks: the committed
+        # length never retreats below the shared-prefix frontier, so a
+        # shared block can never be freed (or double-freed) here
+        assert len(slot.blocks) >= slot.shared, \
+            "verify rollback rewound into the shared prefix"
 
     # -- the speculative step -------------------------------------------
 
@@ -437,6 +442,13 @@ class SpecDecodeBackend(PagedBackend):
                              self.cfg.max_len - 1 - int(self.lengths[i])))
             drafts[i] = list(d)[:cap]
         self._grow_for_verify(drafts)
+        active = [i for i in active if self.slots[i].req is not None]
+        if not active:
+            return outs
+        # the verify window starts writing at lengths[i]; a fresh
+        # full-prefix hit puts that frontier inside its shared tail
+        # block, which must be privatized before the device call
+        self._ensure_cow(active)
         active = [i for i in active if self.slots[i].req is not None]
         if not active:
             return outs
@@ -492,10 +504,17 @@ class SpecDecodeBackend(PagedBackend):
     # -- reporting ------------------------------------------------------
 
     def reset_telemetry(self):
-        """Zero base + speculative counters (bench warmup boundary)."""
+        """Zero base + speculative counters (bench warmup boundary) —
+        including the per-request draft counters on handles that are
+        still active or queued, which would otherwise leak warmup
+        proposals into the post-reset ``stats()['spec']`` accept rate
+        (finished handles are dropped by the base reset)."""
         super().reset_telemetry()
         self.spec_steps = self.spec_proposed = 0
         self.spec_accepted = self.spec_emitted = 0
+        live = [s.req for s in self.slots if s.req is not None]
+        for r in live + list(self.waiting):
+            r.num_draft_proposed = r.num_draft_accepted = 0
 
     def stats(self) -> dict:
         """Base paged stats + a ``spec`` section (window telemetry and

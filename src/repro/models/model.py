@@ -60,6 +60,22 @@ class Model:
         return (not self.cfg.enc_dec
                 and transformer.prefill_supports_ragged(self.cfg))
 
+    def supports_prefix_cache(self) -> bool:
+        """Block-granular KV prefix sharing is exact for this model:
+        every layer's decode state must live IN the shared pool blocks
+        (full attention, no sliding window), because ring buffers and
+        SSM carries are per-slot state a matched block chain cannot
+        reconstruct. K/V content then depends only on the prefix's
+        token ids and absolute positions, so blocks are content-
+        addressable by their token chunks."""
+        cfg = self.cfg
+        return (not cfg.enc_dec
+                and set(cfg.block_pattern) == {"attn"}
+                and not cfg.sliding_window
+                and cfg.rope_style in ("rope", "none")
+                and cfg.pos_embed == "none"
+                and not cfg.visual_prefix)
+
     def init_cache(self, batch: int, max_len: int):
         if self.cfg.enc_dec:
             return encdec.init_cache(self.cfg, batch, max_len)

@@ -26,6 +26,7 @@ Device-side state is a pure pytree (functional updates under jit); the
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 
 import jax
@@ -80,33 +81,64 @@ class PagedLayout:
 
 
 class BlockAllocator:
-    """Host-side free-list allocator over physical blocks 1..num_blocks-1.
+    """Refcounting allocator over physical blocks 1..num_blocks-1.
 
-    Tracks ownership so double-frees and leaks are detectable (the
-    scheduler invariant tests rely on this). Supports the optimistic
-    admission policy of the serving engine: ``can_admit`` applies a
-    free-block *watermark* so new sequences leave headroom for the
-    in-flight ones to grow, and ``select_victim`` encodes the preemption
+    Every block is in exactly ONE of four states, and the partition is
+    asserted after every transition (``check_invariant``):
+
+    * **owned** — refcount >= 1: referenced by live slot tables. A block
+      shared by N slots (prefix caching) carries refcount N; ``free``
+      decrements and only the last reference releases the block.
+    * **cached** LRU — refcount 0 but registered in a prefix index
+      (``register``): kept resident so a future admission can re-hit it
+      (``share`` revives it), reclaimed oldest-first ONLY when the free
+      list runs dry (``on_evict`` tells the index to unlink it).
+    * **free** — a plain FIFO: ``free`` appends to the tail, ``alloc``
+      pops from the head, so a preempted victim's blocks are the LAST
+      ones recycled and a resumed request can still re-hit its own
+      just-evicted prefix (the old LIFO stack handed them straight to
+      the preemptor, in reverse order).
+    * the reserved null block 0 — never allocated, never freed.
+
+    ``can_admit`` applies a free-block *watermark* so new sequences
+    leave growth headroom, and ``select_victim`` encodes the preemption
     order (LIFO — the most recently admitted sequence is evicted first,
     so the oldest admission always runs to completion and the engine
     cannot livelock)."""
 
-    def __init__(self, layout: PagedLayout, watermark: int = 0):
+    def __init__(self, layout: PagedLayout, watermark: int = 0,
+                 on_evict=None):
         self.layout = layout
         self.watermark = watermark
-        self._free = list(range(layout.num_blocks - 1, 0, -1))  # pop -> 1,2,..
-        self._owned: set[int] = set()
+        self.on_evict = on_evict           # called with each reclaimed
+        self._free = collections.deque(range(1, layout.num_blocks))
+        self._refs: dict[int, int] = {}    # block -> live reference count
+        self._cached: set[int] = set()     # registered in a prefix index
+        # refcount-0 cached blocks, insertion-ordered: oldest first
+        self._lru: collections.OrderedDict[int, None] = \
+            collections.OrderedDict()
 
     @property
     def free_count(self) -> int:
-        return len(self._free)
+        """Blocks allocatable right now (the plain free list plus the
+        reclaimable cached LRU)."""
+        return len(self._free) + len(self._lru)
 
     @property
     def used_count(self) -> int:
-        return len(self._owned)
+        """Blocks with at least one live reference."""
+        return len(self._refs)
+
+    @property
+    def lru_count(self) -> int:
+        """Unreferenced cached blocks awaiting re-hit or reclaim."""
+        return len(self._lru)
+
+    def refcount(self, b: int) -> int:
+        return self._refs.get(b, 0)
 
     def can_alloc(self, n: int) -> bool:
-        return n <= len(self._free)
+        return n <= self.free_count
 
     def can_admit(self, n: int, *, strict: bool = True) -> bool:
         """Admission check for a NEW sequence needing ``n`` blocks now.
@@ -116,8 +148,8 @@ class BlockAllocator:
         nothing else is running (the watermark must never starve a sole
         request — progress beats headroom)."""
         if not strict:
-            return n <= len(self._free)
-        return n + self.watermark <= len(self._free)
+            return n <= self.free_count
+        return n + self.watermark <= self.free_count
 
     @staticmethod
     def select_victim(candidates: list[tuple[int, int]]) -> int:
@@ -128,21 +160,178 @@ class BlockAllocator:
         return max(candidates, key=lambda c: c[1])[0]
 
     def alloc(self, n: int) -> list[int]:
-        if n > len(self._free):
+        """Claim ``n`` exclusively-owned blocks (refcount 1 each),
+        reclaiming the oldest unreferenced cached blocks only after the
+        plain free list is exhausted."""
+        if n > self.free_count:
             raise MemoryError(f"paged pool exhausted: want {n}, "
-                              f"free {len(self._free)}")
-        out = [self._free.pop() for _ in range(n)]
-        self._owned.update(out)
+                              f"free {self.free_count}")
+        out = []
+        for _ in range(n):
+            if self._free:
+                b = self._free.popleft()
+            else:                          # reclaim the oldest cached
+                b, _ = self._lru.popitem(last=False)
+                self._cached.discard(b)
+                if self.on_evict is not None:
+                    self.on_evict(b)
+            self._refs[b] = 1
+            out.append(b)
+        self.check_invariant()
         return out
 
     def free(self, blocks: list[int]):
+        """Drop one reference per block. The LAST reference releases the
+        block: to the cached LRU when a prefix index registered it, else
+        to the tail of the FIFO free list."""
         for b in blocks:
             if b == NULL_BLOCK:
                 raise ValueError("freeing the reserved null block")
-            if b not in self._owned:
+            r = self._refs.get(b, 0)
+            if r <= 0:
                 raise ValueError(f"double-free of block {b}")
-            self._owned.discard(b)
-            self._free.append(b)
+            if r > 1:
+                self._refs[b] = r - 1
+            else:
+                del self._refs[b]
+                if b in self._cached:
+                    self._lru[b] = None    # most recent at the tail
+                else:
+                    self._free.append(b)
+        self.check_invariant()
+
+    def share(self, b: int):
+        """Take one more reference on a resident block: bump a live
+        block's refcount, or revive an unreferenced cached block out of
+        the LRU (a prefix-cache hit). Raises on free/unknown blocks."""
+        if b in self._refs:
+            self._refs[b] += 1
+        elif b in self._lru:
+            del self._lru[b]
+            self._refs[b] = 1
+        else:
+            raise ValueError(f"sharing unreferenced block {b}")
+        self.check_invariant()
+
+    def register(self, b: int):
+        """Mark a LIVE block as indexed by a prefix cache: when its last
+        reference drops it parks in the LRU instead of the free list."""
+        if b not in self._refs:
+            raise ValueError(f"registering non-live block {b}")
+        self._cached.add(b)
+
+    def must_cow(self, b: int) -> bool:
+        """True when an in-place write to ``b`` would be observable
+        outside the writer: another slot holds a reference, or a prefix
+        index could hand the block to a future admission."""
+        return self._refs.get(b, 0) > 1 or b in self._cached
+
+    def check_invariant(self):
+        """owned ⊎ cached-LRU ⊎ free must partition blocks 1..N-1 (and
+        the cached set may only mark resident blocks)."""
+        owned, lru, free = set(self._refs), set(self._lru), set(self._free)
+        if (owned & lru) or (owned & free) or (lru & free):
+            raise AssertionError(
+                f"allocator states overlap: owned∩lru={owned & lru} "
+                f"owned∩free={owned & free} lru∩free={lru & free}")
+        universe = set(range(1, self.layout.num_blocks))
+        if (owned | lru | free) != universe:
+            raise AssertionError(
+                f"allocator lost blocks: missing "
+                f"{universe - (owned | lru | free)}, "
+                f"foreign {(owned | lru | free) - universe}")
+        if not self._cached <= (owned | lru):
+            raise AssertionError(
+                f"cached marks non-resident blocks: "
+                f"{self._cached - (owned | lru)}")
+        if any(r < 1 for r in self._refs.values()):
+            raise AssertionError("non-positive refcount")
+
+
+class _PrefixNode:
+    __slots__ = ("chunk", "block", "parent", "children")
+
+    def __init__(self, chunk, block, parent):
+        self.chunk = chunk
+        self.block = block
+        self.parent = parent              # None for root-level nodes
+        self.children: dict = {}
+
+
+class PrefixIndex:
+    """Host-side trie mapping block-size token chunks to pool blocks.
+
+    Each node keys one FULL block of token ids on the path from the
+    sequence start and names the physical block whose K/V holds exactly
+    those positions — K/V content for an attention layer depends only on
+    the token ids and absolute positions of the prefix, so two requests
+    sharing a prompt prefix can share the physical blocks (the serving
+    analogue of EPAC's interleaved L2: one physical pool, many tiles'
+    address maps pointing into it).
+
+    The index is pure host bookkeeping and holds NO references of its
+    own: the ``BlockAllocator`` keeps indexed blocks resident (cached
+    LRU) and calls ``evict_block`` when it reclaims one. Insertion is
+    first-wins — a chunk already indexed keeps its original block, and
+    later copies of the same content stay private to their slot (they
+    free normally). Evicting a node orphans its descendants: they can
+    no longer be matched (matching walks from the root) and age out of
+    the allocator's LRU like any other cold block.
+    """
+
+    def __init__(self, block_size: int):
+        self.block_size = block_size
+        self.children: dict = {}          # root: chunk tuple -> node
+        self._by_block: dict[int, _PrefixNode] = {}
+
+    def __len__(self) -> int:
+        return len(self._by_block)
+
+    def match(self, tokens) -> list[int]:
+        """Physical blocks of the longest indexed chain of FULL
+        block-size chunks prefixing ``tokens`` (possibly empty)."""
+        bs = self.block_size
+        out: list[int] = []
+        kids = self.children
+        for c in range(len(tokens) // bs):
+            node = kids.get(tuple(tokens[c * bs:(c + 1) * bs]))
+            if node is None:
+                break
+            out.append(node.block)
+            kids = node.children
+        return out
+
+    def insert(self, tokens, blocks) -> list[int]:
+        """Index ``blocks[c]`` under the c-th full chunk of ``tokens``
+        (first-wins). Returns the block ids newly indexed — the caller
+        must ``register`` exactly those with the allocator."""
+        bs = self.block_size
+        new: list[int] = []
+        kids = self.children
+        parent = None
+        for c in range(min(len(tokens) // bs, len(blocks))):
+            chunk = tuple(tokens[c * bs:(c + 1) * bs])
+            node = kids.get(chunk)
+            if node is None:
+                node = _PrefixNode(chunk, blocks[c], parent)
+                kids[chunk] = node
+                self._by_block[blocks[c]] = node
+                new.append(blocks[c])
+            parent = node
+            kids = node.children
+        return new
+
+    def evict_block(self, b: int):
+        """Unlink the node indexing block ``b`` (allocator reclaim
+        callback). Descendants become unmatchable orphans and are
+        unlinked the same way when their blocks are reclaimed."""
+        node = self._by_block.pop(b, None)
+        if node is None:
+            return
+        kids = self.children if node.parent is None \
+            else node.parent.children
+        if kids.get(node.chunk) is node:
+            del kids[node.chunk]
 
 
 def head_shard_ok(cfg, tp_size: int) -> bool:
@@ -257,8 +446,8 @@ def pack_prefill_state(state, dense_state, row_of_slot, valid):
 
 
 __all__ = [
-    "NULL_BLOCK", "PagedLayout", "BlockAllocator", "blocks_for",
-    "head_shard_ok", "init_layer_pool", "init_slot_tables",
+    "NULL_BLOCK", "PagedLayout", "BlockAllocator", "PrefixIndex",
+    "blocks_for", "head_shard_ok", "init_layer_pool", "init_slot_tables",
     "pack_prefill_kv", "pack_prefill_ring", "pack_prefill_state",
     "rollback_tail",
 ]

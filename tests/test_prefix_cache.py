@@ -1,0 +1,346 @@
+"""Copy-on-write prefix caching: allocator refcounts, the trie index,
+and engine-level bit-identity with the cache on vs off.
+
+Contract chain, weakest to strongest:
+  1. allocator: FIFO free order, share/refcount lifecycle, LRU reclaim
+     with index eviction callback, and the partition invariant
+     (owned ⊎ LRU ⊎ free == blocks 1..N-1) enforced on every
+     transition;
+  2. prefix index: block-chunk insert/match/evict semantics, first
+     insert wins, descendants of an evicted block become unmatchable;
+  3. engine equivalence: outputs with the prefix cache ON are
+     bit-identical to the cache-OFF engine — greedy and seeded, across
+     architectures (non-attention stacks auto-disable), under full-hit
+     COW, preemption mid-shared-prefix and speculative rejection at a
+     shared-block boundary — with zero block leaks throughout;
+  4. scheduler bugfix sweep regressions: a preempt-only step reports no
+     progress; telemetry reset clears per-request draft counters on
+     still-live handles.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.engine import Engine, EngineConfig, SamplingParams
+from repro.models import paged_kv
+from repro.models.model import Model
+
+
+# -- 1. allocator -------------------------------------------------------
+
+
+def _layout(num_blocks=9, bs=4):
+    return paged_kv.PagedLayout(num_slots=2, num_blocks=num_blocks,
+                                block_size=bs, max_len=bs * 4)
+
+
+def test_allocator_fifo_free_order():
+    """Freed blocks go to the BACK of the free queue: a preempted
+    victim's blocks are not handed straight to its preemptor, so the
+    victim can re-hit its own prefix blocks on resume (regression for
+    the LIFO free stack)."""
+    al = paged_kv.BlockAllocator(_layout(num_blocks=9))
+    a = al.alloc(4)
+    al.free(a)
+    b = al.alloc(4)                       # the 4 never-used blocks first
+    assert set(a).isdisjoint(b)
+    c = al.alloc(4)                       # now the freed ones, same order
+    assert c == a
+
+
+def test_allocator_share_refcount_lru_reclaim():
+    evicted = []
+    al = paged_kv.BlockAllocator(_layout(num_blocks=5),
+                                 on_evict=evicted.append)
+    (b,) = al.alloc(1)
+    assert al.refcount(b) == 1
+    al.share(b)
+    assert al.refcount(b) == 2
+    al.register(b)                        # indexed: free -> LRU, not pool
+    al.free([b])
+    assert al.refcount(b) == 1 and al.used_count == 1
+    al.free([b])
+    assert al.used_count == 0
+    assert al.lru_count == 1              # cached, reclaimable
+    assert al.free_count == al.layout.usable_blocks
+    got = al.alloc(4)                     # 3 fresh + the LRU block last
+    assert b in got and evicted == [b]
+    assert al.lru_count == 0
+
+
+def test_allocator_share_resurrects_lru_block():
+    al = paged_kv.BlockAllocator(_layout())
+    (b,) = al.alloc(1)
+    al.register(b)
+    al.free([b])
+    assert al.used_count == 0
+    al.share(b)                           # cache hit on an LRU block
+    assert al.refcount(b) == 1 and al.lru_count == 0
+    assert al.must_cow(b)                 # indexed: writes must copy
+    al.free([b])
+    assert al.lru_count == 1
+
+
+def test_allocator_misuse_raises():
+    al = paged_kv.BlockAllocator(_layout(num_blocks=4))
+    blocks = al.alloc(3)
+    with pytest.raises(MemoryError):
+        al.alloc(1)
+    al.free(blocks)
+    with pytest.raises(ValueError):
+        al.free([blocks[0]])              # double free
+    with pytest.raises(ValueError):
+        al.free([paged_kv.NULL_BLOCK])
+    with pytest.raises(ValueError):
+        al.share(blocks[0])               # unreferenced, not cached
+
+
+def test_allocator_invariant_checked():
+    """The partition invariant is asserted after every transition and
+    catches corrupted internal state."""
+    al = paged_kv.BlockAllocator(_layout())
+    al.check_invariant()
+    (b,) = al.alloc(1)
+    al._free.append(b)                    # corrupt: owned AND free
+    with pytest.raises(AssertionError):
+        al.check_invariant()
+
+
+# -- 2. prefix index ----------------------------------------------------
+
+
+def test_prefix_index_insert_match_evict():
+    ix = paged_kv.PrefixIndex(4)
+    toks = list(range(11))                # two full chunks + partial tail
+    assert ix.insert(toks, [5, 6, 7]) == [5, 6]
+    assert ix.match(toks) == [5, 6]
+    assert ix.match(toks[:4]) == [5]
+    assert ix.match(toks[:3]) == []       # sub-chunk prefix: no match
+    assert ix.match([9] + toks[1:]) == []
+    assert ix.insert(toks, [8, 9]) == []  # first insert wins
+    assert ix.match(toks) == [5, 6]
+    ix.evict_block(5)
+    assert ix.match(toks) == []           # 6 orphaned -> unmatchable
+    assert ix.insert(toks[:8], [3, 4]) == [3, 4]
+    assert ix.match(toks) == [3, 4]
+
+
+# -- 3. engine equivalence: cache on == cache off -----------------------
+
+
+def _shared_work(rng, vocab, n=6, shared=12, unique=3):
+    """Prompts sharing a long common prefix (block-aligned at bs=4)."""
+    common = list(map(int, rng.integers(0, vocab, shared)))
+    return [common + list(map(int, rng.integers(0, vocab, unique)))
+            for _ in range(n)]
+
+
+def _eng(model, params, *, prefix_cache, backend="paged", **kw):
+    base = dict(backend=backend, num_slots=2, block_size=4, num_blocks=33,
+                max_len=48, prefix_cache=prefix_cache)
+    base.update(kw)
+    return Engine(model, params, EngineConfig(**base))
+
+
+def _assert_clean(be):
+    assert be.alloc.used_count == 0
+    assert be.alloc.free_count == be.layout.usable_blocks
+    be.alloc.check_invariant()
+
+
+@pytest.mark.parametrize("arch", ["olmo_1b", "recurrentgemma_2b",
+                                  "xlstm_1_3b"])
+def test_prefix_cache_bit_identical_greedy(rng, arch):
+    """Outputs with the prefix cache on == off, greedy, shared-prefix
+    trace. Non-attention stacks silently disable the cache (per-slot
+    recurrent state cannot ride a matched block chain) and must be
+    trivially identical."""
+    cfg = get_config(arch).smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _shared_work(rng, cfg.vocab_size)
+    sp = SamplingParams(max_tokens=5)
+    off = _eng(model, params, prefix_cache=False).generate(prompts, sp)
+    on = _eng(model, params, prefix_cache=True)
+    assert on.generate(prompts, sp) == off
+    st = on.stats()["prefix_cache"]
+    if arch == "olmo_1b":
+        assert st["enabled"] and st["hits"] > 0 and st["hit_tokens"] > 0
+    else:
+        assert not st["enabled"]
+    _assert_clean(on.backend)
+
+
+def test_prefix_cache_bit_identical_seeded(rng):
+    """Seeded sampling: the hit path samples each request's first token
+    from the admission step's decode instead of the prefill logits —
+    same RNG stream position, same logits row, bit-identical tokens."""
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _shared_work(rng, cfg.vocab_size)
+    sps = [SamplingParams(max_tokens=5, temperature=0.8, top_k=20,
+                          seed=100 + i) for i in range(len(prompts))]
+    off = _eng(model, params, prefix_cache=False).generate(prompts, sps)
+    on = _eng(model, params, prefix_cache=True)
+    assert on.generate(prompts, sps) == off
+    assert on.stats()["prefix_cache"]["hits"] > 0
+    _assert_clean(on.backend)
+
+
+def test_prefix_cache_full_hit_cow(rng):
+    """An identical prompt re-submitted is a FULL-prefix hit: no prefill
+    call at all, and the first decode triggers exactly one
+    copy-on-write of the shared tail block."""
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = list(map(int, rng.integers(0, cfg.vocab_size, 12)))
+    sp = SamplingParams(max_tokens=4)
+    eng = _eng(model, params, prefix_cache=True, num_slots=1)
+    want = _eng(model, params, prefix_cache=False,
+                num_slots=1).generate([prompt], sp)[0]
+    assert eng.generate([prompt], sp) == [want]
+    calls0 = eng.stats()["prefill_calls"]
+    assert eng.generate([prompt], sp) == [want]
+    st = eng.stats()
+    pc = st["prefix_cache"]
+    assert st["prefill_calls"] == calls0   # full hit: no device prefill
+    assert pc["hit_tokens"] >= 12 and pc["cow_copies"] >= 1
+    _assert_clean(eng.backend)
+
+
+def test_prefix_cache_partial_hit_prefills_only_suffix(rng):
+    """A block-aligned shared prefix leaves only the unique suffix to
+    prefill: prefill_tokens with the cache on must shrink by at least
+    the shared-token volume of the hits."""
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _shared_work(rng, cfg.vocab_size, n=6, shared=16, unique=3)
+    sp = SamplingParams(max_tokens=3)
+    off = _eng(model, params, prefix_cache=False)
+    out_off = off.generate(prompts, sp)
+    on = _eng(model, params, prefix_cache=True)
+    assert on.generate(prompts, sp) == out_off
+    st_on, st_off = on.stats(), off.stats()
+    # the first TWO prompts co-admit into slots before anything is
+    # registered (one batch), so at most n-2 can hit
+    assert st_on["prefix_cache"]["hits"] >= 4
+    assert st_on["prefill_tokens"] <= st_off["prefill_tokens"] - 4 * 16
+    _assert_clean(on.backend)
+
+
+def test_prefix_cache_under_preemption(rng):
+    """A pool tight enough to preempt mid-run must still produce
+    bit-identical outputs with shared prefixes resumed through the
+    cache (preempted victims re-hit their own just-freed blocks)."""
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _shared_work(rng, cfg.vocab_size, n=5, shared=8, unique=3)
+    sp = SamplingParams(max_tokens=8)
+    off = _eng(model, params, prefix_cache=False, num_slots=3,
+               num_blocks=17, max_len=32)
+    out_off = off.generate(prompts, sp)
+    on = _eng(model, params, prefix_cache=True, num_slots=3,
+              num_blocks=17, max_len=32)
+    out_on = on.generate(prompts, sp)
+    assert out_on == out_off
+    _assert_clean(on.backend)
+
+
+@pytest.mark.parametrize("temp", [0.0, 0.9])
+def test_prefix_cache_with_spec_decode(rng, temp):
+    """Speculative decoding over shared prefixes: the ngram drafter
+    matches across the shared history, verify windows start inside a
+    shared tail block (COW before the device call), and rejection at a
+    shared-block boundary rolls back without touching shared blocks.
+    Outputs must equal the non-speculative cache-off engine."""
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # periodic prompts: the self-drafter actually proposes, and the
+    # shared prefix is an exact block multiple (boundary rejections)
+    base = [7, 3, 9, 5] * 3
+    prompts = [base + [11 + i] for i in range(4)]
+    sps = [SamplingParams(max_tokens=6, temperature=temp, seed=i)
+           for i in range(4)]
+    off = _eng(model, params, prefix_cache=False).generate(prompts, sps)
+    on = _eng(model, params, prefix_cache=True, spec_tokens=3)
+    assert on.generate(prompts, sps) == off
+    st = on.stats()
+    assert st["prefix_cache"]["hits"] > 0
+    _assert_clean(on.backend)
+
+
+def test_prefix_cache_survives_eviction_pressure(rng):
+    """More distinct prompts than the pool can cache: LRU reclaim must
+    fire (evictions > 0), matches must stay exact, outputs greedy-
+    stable, and the pool must drain clean."""
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, 12)))
+               for _ in range(8)]
+    sp = SamplingParams(max_tokens=4)
+    off = _eng(model, params, prefix_cache=False, num_blocks=13,
+               max_len=24).generate(prompts, sp)
+    on = _eng(model, params, prefix_cache=True, num_blocks=13,
+              max_len=24)
+    assert on.generate(prompts, sp) == off
+    assert on.stats()["prefix_cache"]["evictions"] > 0
+    _assert_clean(on.backend)
+
+
+# -- 4. bugfix-sweep regressions ----------------------------------------
+
+
+def test_preempt_only_step_reports_no_progress(rng):
+    """Satellite regression: ``_preempt`` must NOT set made_progress —
+    a step that only evicts and re-queues emits nothing, and counting
+    it as progress would let Engine.drive spin through
+    preempt/re-prefill churn without a token leaving."""
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = _eng(model, params, prefix_cache=False, num_slots=2)
+    eng.add_request(list(rng.integers(0, cfg.vocab_size, 6)),
+                    SamplingParams(max_tokens=4))
+    be = eng.backend
+    be.step()                              # admit + first decode
+    assert be.num_active == 1
+    be.made_progress = False
+    be._preempt(next(i for i, s in enumerate(be.slots)
+                     if s.req is not None))
+    assert not be.made_progress
+    eng.drain()                            # and the engine still finishes
+    _assert_clean(be)
+
+
+def test_spec_reset_telemetry_clears_live_handles(rng):
+    """Satellite regression: warmup -> reset -> measure. Per-request
+    draft counters on STILL-ACTIVE handles must reset with the
+    aggregates, or the warmup proposals pollute the measured
+    ``stats()['spec']`` per-request accept rates."""
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = _eng(model, params, prefix_cache=False, spec_tokens=3,
+               num_slots=2)
+    base = [7, 3, 9, 5] * 3               # periodic: drafter proposes
+    eng.add_request(base, SamplingParams(max_tokens=24))
+    be = eng.backend
+    for _ in range(6):                    # warmup with the request LIVE
+        be.step()
+    live = [s.req for s in be.slots if s.req is not None]
+    assert live and any(r.num_draft_proposed > 0 for r in live)
+    be.reset_telemetry()
+    st = be.stats()["spec"]
+    assert st["proposed"] == st["accepted"] == 0
+    assert all(v["proposed"] == 0 and v["accepted"] == 0
+               for v in st["per_request"].values())
+    eng.drain()
+    _assert_clean(be)

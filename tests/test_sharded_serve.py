@@ -234,3 +234,36 @@ def test_sharded_speculative_token_identical():
         assert spec.stats()["blocks_used"] == 0
     print("body ran")
     """)
+
+
+def test_sharded_prefix_cache_token_identical():
+    """COW prefix caching on the head-sharded pool: the trie index and
+    refcounts are per-replica HOST state, the COW block copy runs under
+    the pool's NamedSharding, and outputs stay token-identical to the
+    cache-off sharded engine with real hits and zero leaks."""
+    _run("""
+    rng = np.random.default_rng(7)
+    cfg, model, params = setup("olmo_1b")
+    common = list(map(int, rng.integers(0, cfg.vocab_size, 12)))
+    prompts = [common + list(map(int, rng.integers(0, cfg.vocab_size, 3)))
+               for _ in range(5)] + [common]      # last: full-prefix hit
+    sp = [SamplingParams(max_tokens=5, temperature=t, seed=i)
+          for i, t in enumerate((0.0, 0.9, 0.0, 1.0, 0.0, 0.9))]
+    base = dict(num_slots=2, block_size=4, num_blocks=33, max_len=32,
+                mesh=MESH)
+    want = Engine(model, params, EngineConfig(
+        backend="paged", prefix_cache=False, **base)).generate(prompts, sp)
+    eng = Engine(model, params, EngineConfig(
+        backend="paged", prefix_cache=True, **base))
+    assert eng.backend.ctx.decode_head_shard
+    got = eng.generate(prompts, sp)
+    assert got == want, (got, want)
+    st = eng.stats()
+    pc = st["prefix_cache"]
+    assert pc["enabled"] and pc["hits"] >= 4 and pc["cow_copies"] >= 1, pc
+    assert st["blocks_used"] == 0
+    be = eng.backend
+    assert be.alloc.free_count == be.layout.usable_blocks
+    be.alloc.check_invariant()
+    print("body ran")
+    """)
