@@ -33,6 +33,16 @@ prompts sharing one long system prefix through the paged backend with
 the COW prefix cache off and on: hit rate, prefill tokens saved, COW
 copies, and a bit-identity check between the two runs (outputs_match).
 
+A seventh section, ``disagg``, replays a mixed-prompt-length trace
+through a symmetric ``ReplicaSet`` and a ``DisaggregatedEngine`` of the
+same ``--dp`` at identical per-replica config (equal total cache
+memory): prefill/decode role specialization vs everyone-does-both.
+Reports wall tok/s and TTFT p50/p95 for both (long co-resident prefills
+are exactly the interference TTFT p95 measures), migration volume
+(packets, bytes, estimated fabric seconds via ``core.noc.p2p_time``)
+and a bit-identity check (outputs_match). Every section now carries a
+``ttft`` sub-dict computed from per-request submit/first-token stamps.
+
 The comparison is at EQUAL CACHE MEMORY (--mem-tokens of KV capacity):
 the static engine must preallocate max_len per lane, so its batch is
 ``mem // max_len``; the paged engine spends the same tokens of pool on
@@ -208,8 +218,16 @@ def _replay(engine, trace, handles_out=None) -> dict:
     (optional list) receives the finished request handles in trace
     order, for sections that compare emitted tokens across configs."""
     if hasattr(engine, "replicas"):       # warm each replica's jit caches
+        pre = list(getattr(engine, "prefill_ids", ()))
+        for r in pre:                     # let prefill-only replicas
+            engine.replicas[r].backend.prefill_only = False   # finish _warm
         for rep in engine.replicas:
             _warm(rep, trace)
+        for r in pre:
+            engine.replicas[r].backend.prefill_only = True
+        if pre:                           # trace the migration jits too
+            engine.generate([t.prompt for t in trace[:2]],
+                            SamplingParams(max_tokens=2))
         engine.reset_telemetry()
     else:
         _warm(engine, trace)
@@ -234,7 +252,14 @@ def _replay(engine, trace, handles_out=None) -> dict:
     st = engine.stats()
     slots = getattr(engine, "total_slots", engine.cfg.num_slots)
     lane_eff = useful / max(st["steps"] * slots, 1)
+    lat = [h.t_first_token - h.t_submit for h in handles
+           if h.t_first_token is not None]
+    ttft = {"mean_s": float(np.mean(lat)),
+            "p50_s": float(np.percentile(lat, 50)),
+            "p95_s": float(np.percentile(lat, 95))} if lat else \
+        {"mean_s": 0.0, "p50_s": 0.0, "p95_s": 0.0}
     return {"tok_s": useful / dt, "useful": useful, "wall_s": dt,
+            "ttft": ttft,
             "lane_eff": lane_eff,
             "cache_util": st["cache_utilization"],
             "mean_active": st["mean_active_slots"],
@@ -441,6 +466,63 @@ def _replay_shared_prefix(model, params, args) -> dict:
     return res
 
 
+def _replay_disagg(model, params, args) -> dict:
+    """The ``"disagg"`` section: prefill/decode disaggregation
+    (DisaggregatedEngine, roles="auto") against a symmetric ReplicaSet
+    of the same ``--dp`` at IDENTICAL per-replica config — equal total
+    cache memory — on a mixed-prompt-length trace whose long prefills
+    are the TTFT interference role specialization removes. Reports wall
+    tok/s and TTFT p50/p95 for both, migration volume (packets / bytes /
+    estimated fabric seconds from ``core.noc.p2p_time``), steal count,
+    and the bit-identity check (outputs_match) the CI gate enforces."""
+    from repro.launch.engine import DisaggregatedEngine, ReplicaSet
+    from repro.launch.mesh import make_mesh, mesh_summary
+
+    # 2x requests per replica (like the replicas section): percentile
+    # TTFT stats need the sample count, and the win lives in the
+    # saturated regime where symmetric slots are decode-occupied
+    trace = make_trace(model.cfg, n_requests=2 * args.requests * args.dp,
+                       rate=args.rate, seed=args.seed + 4,
+                       prompt_lens=(6, 12, 24, 40))
+    cfg = EngineConfig(
+        backend="paged", num_slots=args.slots,
+        block_size=args.block_size,
+        num_blocks=args.mem_tokens // args.block_size + 1,
+        max_len=args.max_len, watermark_blocks=args.watermark)
+    mesh = None
+    if len(jax.devices()) >= args.dp * args.tp and \
+            args.dp * args.tp > 1:
+        mesh = make_mesh((args.dp, args.tp), ("data", "model"))
+    sym = ReplicaSet(model, params, cfg, dp=args.dp, mesh=mesh)
+    h_s: list = []
+    res_sym = _replay(sym, trace, h_s)
+    # drop the symmetric set's pools before the disagg replay so
+    # resident cache stays at the dp x pool the section budgets
+    del sym
+    dis = DisaggregatedEngine(model, params, cfg, dp=args.dp,
+                              mesh=mesh, roles="auto")
+    h_d: list = []
+    res = _replay(dis, trace, h_d)
+    st = dis.stats()["disagg"]
+    res["dp"] = args.dp
+    res["roles"] = list(dis.roles)
+    res["mesh"] = mesh_summary(mesh) if mesh is not None else None
+    res["sym_tok_s"] = res_sym["tok_s"]
+    res["sym_ttft"] = res_sym["ttft"]
+    res["speedup_wall"] = res["tok_s"] / max(res_sym["tok_s"], 1e-9)
+    res["ttft_p95_ratio"] = (res["ttft"]["p95_s"]
+                             / max(res_sym["ttft"]["p95_s"], 1e-9))
+    res["packets"] = st["imported"]
+    res["stolen"] = st["stolen"]
+    res["bytes_moved"] = st["bytes_moved"]
+    res["bytes_per_packet"] = round(st["bytes_per_packet"], 1)
+    res["fabric_s"] = st["fabric_s"]
+    res["outputs_match"] = ([h.token_ids for h in h_d]
+                            == [h.token_ids for h in h_s])
+    res["sym_blocks_leaked"] = res_sym["blocks_leaked"]
+    return res
+
+
 def run_bench(args) -> dict:
     cfg = get_config(args.arch)
     if args.smoke:
@@ -471,6 +553,7 @@ def run_bench(args) -> dict:
     res_r = _replay_replicas(model, params, rep_trace, args)
     res_sp = _replay_speculative(model, params, args)
     res_px = _replay_shared_prefix(model, params, args)
+    res_dg = _replay_disagg(model, params, args)
     return {
         "arch": cfg.name,
         "mem_tokens": args.mem_tokens,
@@ -480,6 +563,7 @@ def run_bench(args) -> dict:
         "replicas": res_r,
         "speculative": res_sp,
         "shared_prefix": res_px,
+        "disagg": res_dg,
         "speedup": res_c["tok_s"] / max(res_s["tok_s"], 1e-9),
     }
 
@@ -493,10 +577,14 @@ def _write_json(result: dict, json_path: str):
             or result["sharded"]["blocks_leaked"] \
             or result["replicas"]["blocks_leaked"] \
             or result["speculative"]["blocks_leaked"] \
-            or result["shared_prefix"]["blocks_leaked"]:
+            or result["shared_prefix"]["blocks_leaked"] \
+            or result["disagg"]["blocks_leaked"] \
+            or result["disagg"]["sym_blocks_leaked"]:
         raise SystemExit("block leak detected")
     if not result["shared_prefix"]["outputs_match"]:
         raise SystemExit("prefix cache changed emitted tokens")
+    if not result["disagg"]["outputs_match"]:
+        raise SystemExit("disaggregation changed emitted tokens")
 
 
 def _emit(result: dict, json_path: str):
@@ -524,6 +612,10 @@ def _emit(result: dict, json_path: str):
     print(f"serve_shared_prefix,{res_x['tok_s']:.2f},"
           f"{res_x['cache_util']:.3f},{res_x['lane_eff']:.3f},"
           f"{res_x['useful']},{res_x['wall_s']:.2f}")
+    res_d = result["disagg"]
+    print(f"serve_disagg,{res_d['tok_s']:.2f},"
+          f"{res_d['cache_util']:.3f},{res_d['lane_eff']:.3f},"
+          f"{res_d['useful']},{res_d['wall_s']:.2f}")
     print(f"# sharded mesh {res_m['mesh']['axes']}; "
           f"head_sharded={res_m['head_sharded']}; "
           f"per-device cache {res_m['per_device_cache']}")
@@ -551,6 +643,18 @@ def _emit(result: dict, json_path: str):
           f"({res_x['base_tok_s']:.1f}); cow copies "
           f"{res_x['cow_copies']}; outputs_match "
           f"{res_x['outputs_match']}")
+    print(f"# disagg dp={res_d['dp']} roles={res_d['roles']}: "
+          f"{res_d['tok_s']:.1f} tok/s vs symmetric "
+          f"{res_d['sym_tok_s']:.1f} ({res_d['speedup_wall']:.2f}x); "
+          f"ttft p50/p95 {res_d['ttft']['p50_s'] * 1e3:.1f}/"
+          f"{res_d['ttft']['p95_s'] * 1e3:.1f} ms vs "
+          f"{res_d['sym_ttft']['p50_s'] * 1e3:.1f}/"
+          f"{res_d['sym_ttft']['p95_s'] * 1e3:.1f} ms "
+          f"(p95 ratio {res_d['ttft_p95_ratio']:.2f}); "
+          f"{res_d['packets']} packets ({res_d['stolen']} stolen), "
+          f"{res_d['bytes_moved']} bytes, "
+          f"fabric {res_d['fabric_s']:.2e} s; "
+          f"outputs_match {res_d['outputs_match']}")
     print(f"# equal cache budget {result['mem_tokens']} tokens; "
           f"continuous/static tokens/s: {result['speedup']:.2f}x; "
           f"mean active slots {res_c['mean_active']:.2f}; "
@@ -611,7 +715,8 @@ def run():
                     ("serve_sharded", result["sharded"]),
                     ("serve_replicas", result["replicas"]),
                     ("serve_speculative", result["speculative"]),
-                    ("serve_shared_prefix", result["shared_prefix"])):
+                    ("serve_shared_prefix", result["shared_prefix"]),
+                    ("serve_disagg", result["disagg"])):
         emit(name, 1e6 / max(r["tok_s"], 1e-9),
              f"tok_s={r['tok_s']:.2f} util={r['cache_util']:.3f} "
              f"preemptions={r['preemptions']} "

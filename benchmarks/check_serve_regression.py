@@ -12,7 +12,8 @@ bench) and fails on:
     so the ratio cancels host speed and isolates scheduler regressions.
     ``--absolute`` compares raw tok/s instead (same-machine runs).
   * any block leak (``blocks_leaked != 0``) in the continuous, sharded,
-    replicas, speculative or shared_prefix sections.
+    replicas, speculative, shared_prefix or disagg sections (disagg also
+    checks its symmetric-baseline run).
   * prefill compile-count growth in the continuous section (the jit
     cache is O(buckets x batch-buckets) by contract; a new trace per
     request length sneaking back in is a regression even when fast).
@@ -20,6 +21,12 @@ bench) and fails on:
     saved on the >=75%-shared trace, cached outputs differing from the
     cache-off engine, or the cached-over-uncached speedup dropping more
     than ``--tolerance`` below baseline.
+  * disagg contract breaks: disaggregated outputs differing from the
+    symmetric ReplicaSet (bit-identity), a run that migrated nothing
+    (zero packets or bytes — the subsystem silently off), or the
+    TTFT-p95 ratio / wall-speedup vs symmetric drifting more than
+    ``--tolerance`` past baseline (both ratios are machine-normalized by
+    construction: the two engines run in the same process).
 
 Usage:
   python benchmarks/check_serve_regression.py \
@@ -37,10 +44,12 @@ def check(baseline: dict, fresh: dict, *, tolerance: float,
           absolute: bool) -> list[str]:
     errors = []
     for section in ("continuous", "sharded", "replicas", "speculative",
-                    "shared_prefix"):
+                    "shared_prefix", "disagg"):
         leaked = fresh.get(section, {}).get("blocks_leaked", 0)
         if leaked:
             errors.append(f"{section}: {leaked} blocks leaked")
+    if fresh.get("disagg", {}).get("sym_blocks_leaked", 0):
+        errors.append("disagg: symmetric baseline run leaked blocks")
     if absolute:
         base_v = baseline["continuous"]["tok_s"]
         fresh_v = fresh["continuous"]["tok_s"]
@@ -114,6 +123,52 @@ def check(baseline: dict, fresh: dict, *, tolerance: float,
                     f"shared_prefix speedup regressed >{tolerance:.0%}: "
                     f"{fresh_x:.3f} < {floor_x:.3f} "
                     f"(baseline {base_x:.3f})")
+    # disaggregation: migration must be live and token-invisible, and
+    # the two comparisons against the in-process symmetric ReplicaSet
+    # (TTFT p95 ratio, wall speedup) must hold within tolerance of the
+    # committed baseline. Skipped when the baseline predates the
+    # section.
+    if "disagg" in fresh:
+        dg = fresh["disagg"]
+        print(f"disagg: tok_s {dg['tok_s']:.1f} vs symmetric "
+              f"{dg['sym_tok_s']:.1f} (x{dg['speedup_wall']:.3f}), "
+              f"ttft_p95_ratio {dg['ttft_p95_ratio']:.3f}, "
+              f"packets {dg['packets']}, "
+              f"outputs_match {dg['outputs_match']}")
+        if not dg["outputs_match"]:
+            errors.append("disagg: outputs differ from the symmetric "
+                          "ReplicaSet (bit-identity broken)")
+        if dg["packets"] <= 0 or dg["bytes_moved"] <= 0:
+            errors.append("disagg: no KV blocks migrated — the "
+                          "prefill/decode split is silently inactive")
+        if "disagg" in baseline:
+            # TTFT percentiles on a time-shared CPU host are noisy run
+            # to run, so a strong committed baseline must not make the
+            # gate flaky: the ceiling never drops below 1.0 — only a
+            # run where disagg is outright WORSE than symmetric (and
+            # past tolerance) fails.
+            base_r = baseline["disagg"]["ttft_p95_ratio"]
+            ceil_r = max((1.0 + tolerance) * base_r, 1.0)
+            print(f"disagg ttft_p95_ratio: baseline {base_r:.3f}, "
+                  f"fresh {dg['ttft_p95_ratio']:.3f}, "
+                  f"ceiling {ceil_r:.3f}")
+            if dg["ttft_p95_ratio"] > ceil_r:
+                errors.append(
+                    f"disagg TTFT p95 vs symmetric worsened "
+                    f">{tolerance:.0%}: {dg['ttft_p95_ratio']:.3f} > "
+                    f"{ceil_r:.3f} (baseline {base_r:.3f})")
+            # same noise argument, floor side: never demand more than
+            # 0.9x symmetric wall throughput regardless of how good
+            # the committed baseline run happened to be
+            base_w = baseline["disagg"]["speedup_wall"]
+            floor_w = min((1.0 - tolerance) * base_w, 0.9)
+            print(f"disagg speedup_wall: baseline {base_w:.3f}, "
+                  f"fresh {dg['speedup_wall']:.3f}, floor {floor_w:.3f}")
+            if dg["speedup_wall"] < floor_w:
+                errors.append(
+                    f"disagg wall speedup vs symmetric regressed "
+                    f">{tolerance:.0%}: {dg['speedup_wall']:.3f} < "
+                    f"{floor_w:.3f} (baseline {base_w:.3f})")
     return errors
 
 

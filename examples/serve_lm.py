@@ -21,8 +21,8 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch.engine import (Engine, EngineConfig, ReplicaSet,
-                                 SamplingParams)
+from repro.launch.engine import (DisaggregatedEngine, Engine, EngineConfig,
+                                 ReplicaSet, SamplingParams)
 from repro.models.model import Model
 
 
@@ -54,6 +54,14 @@ def main():
                          "(paged backend; ngram self-drafting — outputs "
                          "are bit-identical, only faster on repetitive "
                          "text)")
+    ap.add_argument("--roles", default=None,
+                    help="prefill/decode disaggregation over the dp "
+                         "replicas: comma-separated roles (e.g. "
+                         "'prefill,decode') or 'auto'. Prefill replicas "
+                         "export first-token slots as migration packets; "
+                         "decode replicas import them — outputs stay "
+                         "bit-identical, stats() grows a 'disagg' "
+                         "section")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace for CI")
     args = ap.parse_args()
@@ -81,7 +89,14 @@ def main():
         backend=args.backend, num_slots=args.slots, block_size=16,
         num_blocks=args.mem_tokens // 16 + 1, max_len=128,
         spec_tokens=args.spec_tokens)
-    if args.dp > 1:
+    if args.roles is not None:
+        roles = args.roles if args.roles == "auto" \
+            else tuple(args.roles.split(","))
+        engine = DisaggregatedEngine(model, params, ecfg, dp=args.dp,
+                                     mesh=mesh, roles=roles)
+        print(f"disaggregated: roles={list(engine.roles)}, "
+              f"{engine.total_slots} total slots")
+    elif args.dp > 1:
         engine = ReplicaSet(model, params, ecfg, dp=args.dp, mesh=mesh)
         print(f"replica set: dp={args.dp}, "
               f"{engine.total_slots} total slots")

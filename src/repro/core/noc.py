@@ -50,6 +50,30 @@ def _axis_bw(axis: str, fabric: FabricSpec) -> float:
     return fabric.pod_bw if axis == "pod" else fabric.ici_bw
 
 
+def p2p_time(nbytes: float, hops: int, axis: str,
+             fabric: FabricSpec = V5E_FABRIC) -> float:
+    """Point-to-point transfer estimate: one source, one destination,
+    ``hops`` links of the given axis tier apart.
+
+    The EPAC analogue is a tile-to-tile line transfer over the CHI NoC
+    (or across the C2C SerDes when the peers sit on different dies):
+    the payload serializes once onto the first link and cuts through —
+    wormhole routing, not store-and-forward — so bandwidth is paid once
+    and only the per-hop latency accumulates with distance:
+
+        time = nbytes / bw(axis) + hops * latency_us * 1e-6
+
+    ``hops <= 0`` (same device) is free. Used by the serving layer's
+    KV-block migration accounting (launch/engine/transport.py) to price
+    a prefill->decode cache handoff the way the uncore prices an L2
+    line movement.
+    """
+    if hops <= 0:
+        return 0.0
+    bw = _axis_bw(axis, fabric)
+    return nbytes / bw + hops * fabric.latency_us * 1e-6
+
+
 def all_reduce_time(bytes_per_device: float, axis_size: int, axis: str,
                     fabric: FabricSpec = V5E_FABRIC) -> float:
     """Ring all-reduce: 2(n-1)/n * bytes over the axis link."""

@@ -38,10 +38,19 @@ admission drains same-bucket FCFS runs of the queue and prefills them
 as one right-padded batch call (one jit trace per (bucket,
 batch-bucket) pair); the static lockstep batch is already one batched
 prefill call, width-capped by the same ``max_prefill_batch``.
+
+``DisaggregatedEngine`` specializes those replicas by ROLE — prefill
+replicas run admission + prefill only and export first-token slots as
+``MigrationPacket``s; decode replicas import them (paged-block gather /
+device_put / scatter, engine/transport.py) and run them to retirement —
+EPAC's heterogeneous tiles behind one fabric, with ``core.noc.p2p_time``
+pricing each migration. Outputs stay bit-identical to ``ReplicaSet`` by
+the RNG-stream contract (sampler state travels in the packet).
 """
 
 from repro.launch.engine.api import (Engine, EngineConfig, RequestHandle,
                                      RequestOutput, SamplingParams)
+from repro.launch.engine.disagg import DisaggregatedEngine
 from repro.launch.engine.replica import ReplicaSet
 from repro.launch.engine.sampling import sample_tokens
 from repro.launch.engine.scheduler import PagedBackend
@@ -49,10 +58,11 @@ from repro.launch.engine.speculative import (DraftModelDrafter,
                                              NgramDrafter,
                                              SpecDecodeBackend)
 from repro.launch.engine.static import StaticBackend
+from repro.launch.engine.transport import MigrationPacket
 
 __all__ = [
-    "DraftModelDrafter", "Engine", "EngineConfig", "NgramDrafter",
-    "PagedBackend", "ReplicaSet", "RequestHandle", "RequestOutput",
-    "SamplingParams", "SpecDecodeBackend", "StaticBackend",
-    "sample_tokens",
+    "DisaggregatedEngine", "DraftModelDrafter", "Engine", "EngineConfig",
+    "MigrationPacket", "NgramDrafter", "PagedBackend", "ReplicaSet",
+    "RequestHandle", "RequestOutput", "SamplingParams",
+    "SpecDecodeBackend", "StaticBackend", "sample_tokens",
 ]

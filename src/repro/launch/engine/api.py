@@ -11,6 +11,7 @@ request never pays for caching a token nobody will attend.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Optional, Sequence
 
 from repro.models.model import Model
@@ -114,6 +115,10 @@ class RequestHandle:
         accepted into this request (0 unless ``spec_tokens > 0``) —
         the per-request source of truth behind
         ``Engine.stats()["spec"]``.
+    t_submit, t_first_token : float or None
+        Wall-clock (``time.monotonic``) stamps at handle creation and at
+        the first sampled token; their difference is the request's TTFT,
+        aggregated into p50/p95 by ``ReplicaSet.stats()["ttft"]``.
     """
 
     uid: int
@@ -127,6 +132,9 @@ class RequestHandle:
     # request (the bench's accepted-tokens-per-step source of truth)
     num_draft_proposed: int = 0
     num_draft_accepted: int = 0
+    # TTFT telemetry: stamped at submission / first sampled token
+    t_submit: float = dataclasses.field(default_factory=time.monotonic)
+    t_first_token: Optional[float] = None
     # internal: RNG stream position (== tokens sampled; differs from
     # len(token_ids) only after a stripped stop token)
     _n_sampled: int = 0
@@ -177,6 +185,8 @@ def register_sample(req: RequestHandle, tok: int, eos_id: int,
     finished/finish_reason flags are set — keeping both backends on
     byte-identical emission semantics."""
     req._n_sampled += 1
+    if req._n_sampled == 1:
+        req.t_first_token = time.monotonic()
     stop = (eos_id >= 0 and tok == eos_id) \
         or tok in req.sampling.stop_token_ids
     if not stop:

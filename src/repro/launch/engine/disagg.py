@@ -1,0 +1,346 @@
+"""DisaggregatedEngine: prefill/decode role-specialized replicas.
+
+EPAC's defining move is heterogeneous specialization behind a coherent
+fabric: VEC, STX and VRP tiles split the workload by *kind* and share
+one CHI NoC, distributed L2 and a C2C SerDes off-chip. Serving has the
+same split hiding inside every request: prefill is compute-bound batch
+work, decode is latency-bound incremental work, and a symmetric replica
+set makes every replica do both — a long prompt's prefill stalls the
+decode steps of everything co-resident, which is exactly what TTFT p95
+measures. This module dedicates replicas to one role each and hands
+finished prefill caches across as paged-block transfers
+(launch/engine/transport.py), priced per packet by the uncore model's
+point-to-point primitive (``core.noc.p2p_time``).
+
+Role lifecycle of one request::
+
+    shared queue --dispatch--> prefill replica: admit + prefill + token 0
+                 --export--> MigrationPacket (blocks + RNG position)
+                 --migrate--> gather / device_put / scatter
+                 --import--> decode replica: decode to retirement
+
+Straggler handling is the same code path run backwards: an idle decode
+replica pulls the oldest exported-but-unclaimed packet, and when none
+are in flight it *steals* — the busiest decode replica re-exports its
+newest-ticket slot mid-decode (migration is position-agnostic) so the
+idle replica shares the tail. The donor keeps its oldest admission, so
+the engine-level no-livelock guarantee survives stealing.
+
+Invariants (pinned by tests/test_disagg_serve.py):
+
+* **Bit-identical outputs** to a single ``Engine`` and a symmetric
+  ``ReplicaSet``: the sampler seed and stream position travel in the
+  packet, so by the RNG-stream contract tokens are a pure function of
+  (params, prompt, SamplingParams) — independent of roles, migration,
+  stealing and preemption.
+* **Strict FCFS**: fresh dispatch only ever pops the shared-queue head,
+  packets only ever land from the head of the packet deque — no
+  request is overtaken at either hop.
+* **Zero leaks across BOTH pools**: export frees source blocks eagerly
+  (the packet carries gathered content, not block ids), so a packet
+  dropped mid-migration holds nothing; import allocs destination
+  blocks under the same admission accounting as the scheduler.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Optional, Sequence
+
+from repro.core import noc
+from repro.launch.engine import transport
+from repro.launch.engine.api import EngineConfig
+from repro.launch.engine.replica import ReplicaSet
+from repro.models import paged_kv
+from repro.models.model import Model
+
+ROLES = ("prefill", "decode")
+
+
+class DisaggregatedEngine(ReplicaSet):
+    """Engine-shaped front-end over role-specialized engine replicas.
+
+    Same surface as ``ReplicaSet`` (``add_request`` / ``step`` /
+    ``generate`` / ``stats``), but each replica is pinned to one role:
+    prefill replicas run admission + prefill only (their backends are
+    ``prefill_only`` and never decode, grow, preempt or COW) and export
+    every first-token slot as a ``MigrationPacket``; decode replicas
+    import migrated slots ahead of fresh work and run them to
+    retirement.
+
+    Parameters
+    ----------
+    model, params
+        The target model and its parameter tree (shared by replicas).
+    cfg : EngineConfig, optional
+        The baseline PER-REPLICA configuration. Must select the paged
+        backend; must not carry a mesh (pass ``mesh=``).
+    roles : tuple of str or "auto"
+        One role per replica over ``mesh.submeshes`` order, e.g.
+        ``("prefill", "prefill", "decode", "decode")``; at least one of
+        each. ``"auto"`` splits ``dp`` replicas by
+        ``prefill_fraction``.
+    prefill_fraction : float, optional
+        ``roles="auto"`` split: ``round(dp * prefill_fraction)`` prefill
+        replicas, clamped to [1, dp - 1]. Default 0.5.
+    role_overrides : dict, optional
+        ``EngineConfig`` field replacements per role name, e.g.
+        ``{"decode": {"spec_tokens": 4}}`` so decode replicas keep
+        speculative decoding (prefill replicas are always forced to
+        ``spec_tokens=0`` — they never decode, so drafts are waste).
+        Migration geometry (``block_size``, ``max_len``) and
+        ``backend`` may not differ per role.
+    max_inflight : int, optional
+        Packet backpressure: fresh dispatch to prefill replicas pauses
+        while this many packets are exported-but-unclaimed (default:
+        2x the decode-side slot count). Keeps "prefill replicas never
+        decode" true with bounded staging memory.
+    fabric : core.noc.FabricSpec, optional
+        Fabric model pricing each packet via ``noc.p2p_time`` (bytes,
+        data-axis hop distance). Default ``noc.V5E_FABRIC``.
+    dp, mesh, policy, ctx, step_workers
+        As for ``ReplicaSet``; the placement policy picks among role
+        candidates only (prefill for dispatch, decode for imports).
+
+    Attributes
+    ----------
+    roles : tuple of str
+        The resolved per-replica role assignment.
+    prefill_ids, decode_ids : list of int
+        Replica indices per role.
+    packets : deque of MigrationPacket
+        Exported-but-unclaimed packets, oldest first (import pops the
+        head only).
+
+    Notes
+    -----
+    Outputs are bit-identical to a plain ``ReplicaSet`` and a single
+    ``Engine`` on the same requests (RNG-stream contract; the packet
+    carries the sampler stream position). ``stats()["disagg"]`` reports
+    packets exported/imported/stolen, bytes moved and estimated fabric
+    seconds. Decode-side preemption stays replica-local, exactly as in
+    ``ReplicaSet``; a preempted imported request re-prefills on its
+    decode replica (correct, merely not role-pure — the same tradeoff
+    EPAC makes when a VRP iteration falls back to scalar code).
+
+    Examples
+    --------
+    >>> eng = DisaggregatedEngine(model, params, cfg, dp=4, roles="auto")
+    >>> outs = eng.generate(prompts, sampling)     # == ReplicaSet's
+    >>> eng.stats()["disagg"]["bytes_moved"]
+    """
+
+    def __init__(self, model: Model, params, cfg: EngineConfig = None,
+                 *, roles="auto", prefill_fraction: float = 0.5,
+                 role_overrides: Optional[dict] = None,
+                 max_inflight: Optional[int] = None, fabric=None,
+                 dp: Optional[int] = None, mesh=None,
+                 policy="least_loaded", ctx=None, step_workers=None):
+        cfg = cfg or EngineConfig()
+        if cfg.backend != "paged":
+            raise ValueError("disaggregation requires the paged backend "
+                             "(block migration has no static analogue)")
+        n = int(mesh.shape["data"]) if mesh is not None and dp is None \
+            else (dp or 1)
+        self.roles = self._resolve_roles(roles, n, prefill_fraction)
+        role_overrides = role_overrides or {}
+        if not set(role_overrides) <= set(ROLES):
+            raise ValueError(f"unknown role in overrides "
+                             f"{sorted(role_overrides)} (have {ROLES})")
+        frozen = {"block_size", "max_len", "backend"}
+        for role, ov in role_overrides.items():
+            if frozen & set(ov):
+                raise ValueError(
+                    f"{sorted(frozen & set(ov))} cannot differ per role "
+                    "(shared migration geometry)")
+        overrides = []
+        for role in self.roles:
+            ov = dict(role_overrides.get(role, {}))
+            if role == "prefill":
+                ov["spec_tokens"] = 0     # never decodes; drafts are waste
+            overrides.append(ov)
+        super().__init__(model, params, cfg, dp=len(self.roles),
+                         mesh=mesh, policy=policy, ctx=ctx,
+                         step_workers=step_workers, overrides=overrides)
+        self.prefill_ids = [r for r, ro in enumerate(self.roles)
+                            if ro == "prefill"]
+        self.decode_ids = [r for r, ro in enumerate(self.roles)
+                           if ro == "decode"]
+        for r in self.prefill_ids:
+            self.replicas[r].backend.prefill_only = True
+        self.packets: collections.deque = collections.deque()
+        dec_slots = sum(self.replicas[r].cfg.num_slots
+                        for r in self.decode_ids)
+        self.max_inflight = 2 * dec_slots if max_inflight is None \
+            else max_inflight
+        self.fabric = fabric or noc.V5E_FABRIC
+        # migration telemetry
+        self.exported = 0
+        self.imported = 0
+        self.stolen = 0
+        self.bytes_moved = 0
+        self.fabric_s = 0.0
+
+    @staticmethod
+    def _resolve_roles(roles, dp: int, prefill_fraction: float):
+        if roles == "auto":
+            if dp < 2:
+                raise ValueError("disaggregation needs dp >= 2 "
+                                 "(one replica per role minimum)")
+            n_pre = max(1, min(dp - 1, round(dp * prefill_fraction)))
+            roles = ("prefill",) * n_pre + ("decode",) * (dp - n_pre)
+        roles = tuple(roles)
+        if not set(roles) <= set(ROLES):
+            raise ValueError(f"unknown role in {roles} (have {ROLES})")
+        if "prefill" not in roles or "decode" not in roles:
+            raise ValueError(f"need at least one replica per role, "
+                             f"got {roles}")
+        return roles
+
+    # -- step loop -------------------------------------------------------
+
+    def step(self):
+        """One engine step: dispatch fresh work to prefill replicas
+        (packet backpressure permitting), step them, export every
+        first-token slot, land packets FCFS on decode replicas, steal
+        for idle ones, then step the decode side."""
+        self.steps += 1
+        moved = self._dispatch()
+        busy_pre = [(r, self.replicas[r]) for r in self.prefill_ids
+                    if self.replicas[r].has_work]
+        outs = self._timed_steps(busy_pre)
+        exported = self._export_ready()
+        imported = self._import_packets()
+        stolen = self._steal()
+        busy_dec = [(r, self.replicas[r]) for r in self.decode_ids
+                    if self.replicas[r].has_work]
+        outs += self._timed_steps(busy_dec)
+        self.made_progress = bool(
+            moved or exported or imported or stolen
+            or any(eng.backend.made_progress
+                   for _, eng in busy_pre + busy_dec))
+        self._finish(outs)
+        return outs
+
+    @property
+    def has_work(self) -> bool:
+        """True while anything is queued, in flight, or active."""
+        return bool(self.queue) or bool(self.packets) \
+            or any(e.has_work for e in self.replicas)
+
+    def _dispatch_candidates(self) -> list[int]:
+        """Fresh admissions go to prefill replicas only; pause dispatch
+        under packet backpressure so staging stays bounded."""
+        if len(self.packets) >= self.max_inflight:
+            return []
+        return list(self.prefill_ids)
+
+    # -- migration -------------------------------------------------------
+
+    def _export_ready(self) -> int:
+        """Export every occupied prefill slot (its prefill — and token 0
+        unless it was a full-prefix hit — happened this step) to the
+        packet deque, freeing the source blocks immediately."""
+        n = 0
+        for r in self.prefill_ids:
+            be = self.replicas[r].backend
+            for i, slot in enumerate(be.slots):
+                if slot.req is not None:
+                    self.packets.append(
+                        transport.extract_slot(be, i, src=r))
+                    n += 1
+        self.exported += n
+        return n
+
+    def _import_packets(self) -> int:
+        """Land packets on decode replicas, oldest first, head-blocking:
+        a head that no decode replica can take yet parks the whole
+        deque (never overtaken; an idle decode replica can always take
+        it, so the head waits boundedly — same no-deadlock argument as
+        the shared queue)."""
+        n = 0
+        while self.packets:
+            pkt = self.packets[0]
+            cands = [r for r in self.decode_ids if transport.can_import(
+                self.replicas[r].backend, pkt)]
+            if not cands:
+                break
+            self.packets.popleft()
+            self._land(pkt, self.policy(self, cands))
+            n += 1
+        return n
+
+    def _land(self, pkt, r: int):
+        """Insert a packet into replica ``r`` and account the transfer:
+        payload bytes over the data-axis hop distance between source
+        and destination submeshes, priced by ``noc.p2p_time``."""
+        transport.insert_packet(self.replicas[r].backend, pkt)
+        self.imported += 1
+        self.bytes_moved += pkt.payload_bytes
+        self.fabric_s += noc.p2p_time(pkt.payload_bytes,
+                                      abs(pkt.src - r), "data",
+                                      self.fabric)
+
+    def _steal(self) -> int:
+        """Straggler handling: when no packets are in flight, an idle
+        decode replica pulls work from the busiest one — the donor
+        re-exports its NEWEST-ticket slot mid-decode (keeping its
+        oldest admission, so the no-livelock guarantee survives) and
+        the thief imports it through the ordinary migration path."""
+        if self.packets:
+            return 0
+        n = 0
+        for thief in self.decode_ids:
+            tbe = self.replicas[thief].backend
+            if tbe.has_work:
+                continue
+            donors = [r for r in self.decode_ids
+                      if r != thief
+                      and self.replicas[r].backend.num_active >= 2
+                      and not self.replicas[r].backend.waiting]
+            if not donors:
+                continue
+            donor = max(donors,
+                        key=lambda r: self.replicas[r].backend.num_active)
+            dbe = self.replicas[donor].backend
+            i = max((j for j, s in enumerate(dbe.slots)
+                     if s.req is not None),
+                    key=lambda j: dbe.slots[j].ticket)
+            # pre-check the thief can land it (idle => no watermark),
+            # so the slot is only uprooted when the move will succeed
+            need = paged_kv.blocks_for(int(dbe.lengths[i]) + 1,
+                                       tbe.cfg.block_size)
+            if not tbe.alloc.can_admit(need, strict=False):
+                continue
+            self._land(transport.extract_slot(dbe, i, src=donor), thief)
+            self.stolen += 1
+            n += 1
+        return n
+
+    # -- reporting -------------------------------------------------------
+
+    def stats(self) -> dict:
+        """ReplicaSet telemetry plus a ``"disagg"`` section: roles,
+        packet counts (exported / imported / stolen / in flight), bytes
+        moved and estimated fabric seconds."""
+        st = super().stats()
+        st["disagg"] = {
+            "roles": list(self.roles),
+            "packets_inflight": len(self.packets),
+            "exported": self.exported,
+            "imported": self.imported,
+            "stolen": self.stolen,
+            "bytes_moved": self.bytes_moved,
+            "fabric_s": self.fabric_s,
+            "bytes_per_packet": (self.bytes_moved
+                                 / max(self.imported, 1)),
+        }
+        return st
+
+    def reset_telemetry(self):
+        """Zero replica + set counters and the migration telemetry
+        (bench warmup boundary); in-flight packets are untouched."""
+        super().reset_telemetry()
+        self.exported = self.imported = self.stolen = 0
+        self.bytes_moved = 0
+        self.fabric_s = 0.0

@@ -50,6 +50,8 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Optional, Sequence
 
+import numpy as np
+
 from repro.launch.engine import api
 from repro.launch.engine.api import (Engine, EngineConfig, RequestHandle,
                                      RequestOutput, SamplingParams)
@@ -94,6 +96,14 @@ class ReplicaSet:
         FCFS dispatch placement: ``"least_loaded"`` (default,
         fewest committed blocks, ties to the lowest index),
         ``"round_robin"``, or a callable ``(rset, candidates) -> int``.
+    overrides : sequence of dict or None, optional
+        Per-replica ``EngineConfig`` field replacements (one entry per
+        replica; None entries keep ``cfg``) — e.g. ``spec_tokens`` per
+        role so prefill replicas skip speculative decoding. May not
+        carry ``mesh`` (pass ``mesh=``) or ``eos_id`` (stop semantics
+        must match for outputs to stay request-pure). With overrides
+        present, requests validate against EVERY replica, since any of
+        them may end up serving the request.
     ctx : RunCtx, optional
         Kernel/sharding context forwarded to every replica.
     step_workers : int, optional
@@ -127,7 +137,8 @@ class ReplicaSet:
 
     def __init__(self, model: Model, params, cfg: EngineConfig = None,
                  *, dp: Optional[int] = None, mesh=None,
-                 policy="least_loaded", ctx=None, step_workers=None):
+                 policy="least_loaded", ctx=None, step_workers=None,
+                 overrides: Optional[Sequence[Optional[dict]]] = None):
         cfg = cfg or EngineConfig()
         if mesh is not None:
             from repro.launch.mesh import submeshes
@@ -145,10 +156,26 @@ class ReplicaSet:
         if not meshes:
             raise ValueError("dp must be >= 1")
         self.dp = len(meshes)
+        if overrides is not None and len(overrides) != self.dp:
+            raise ValueError(f"{len(overrides)} overrides for "
+                             f"{self.dp} replicas")
+        cfgs = [cfg] * self.dp
+        if overrides is not None:
+            bad = {"mesh", "eos_id"} & set().union(
+                *(ov.keys() for ov in overrides if ov))
+            if bad:
+                raise ValueError(f"per-replica overrides cannot change "
+                                 f"{sorted(bad)}")
+            cfgs = [dataclasses.replace(cfg, **(ov or {}))
+                    for ov in overrides]
         self.replicas = [
-            Engine(model, params, dataclasses.replace(cfg, mesh=m),
-                   ctx=ctx) for m in meshes]
-        self.cfg = cfg                   # per-replica config
+            Engine(model, params, dataclasses.replace(c, mesh=m),
+                   ctx=ctx) for c, m in zip(cfgs, meshes)]
+        self.cfg = cfg                   # baseline per-replica config
+        # replicas usually vouch for each other; with overrides any of
+        # them may serve a request, so each must accept it individually
+        self._validators = self.replicas if overrides is not None \
+            else self.replicas[:1]
         self.policy = _POLICIES.get(policy, policy)
         if not callable(self.policy):
             raise ValueError(f"unknown dispatch policy {policy!r}")
@@ -174,8 +201,8 @@ class ReplicaSet:
 
     @property
     def total_slots(self) -> int:
-        """Decode slots across the whole set (dp x per-replica slots)."""
-        return self.dp * self.cfg.num_slots
+        """Decode slots across the whole set (per-replica cfgs summed)."""
+        return sum(e.cfg.num_slots for e in self.replicas)
 
     # -- request lifecycle ----------------------------------------------
 
@@ -186,8 +213,10 @@ class ReplicaSet:
         shared FCFS queue; returns the live handle."""
         sampling = sampling or SamplingParams()
         prompt = list(prompt)
-        # replicas are identical, so replica 0 vouches for all of them
-        self.replicas[0].check_request(prompt, sampling)
+        # identical replicas: replica 0 vouches for all of them;
+        # per-replica overrides: every replica must accept
+        for eng in self._validators:
+            eng.check_request(prompt, sampling)
         handle = RequestHandle(self._uid, prompt, sampling)
         self._uid += 1
         self._by_uid[handle.uid] = handle
@@ -203,7 +232,16 @@ class ReplicaSet:
         moved = self._dispatch()
         busy = [(r, eng) for r, eng in enumerate(self.replicas)
                 if eng.has_work]
+        outs = self._timed_steps(busy)
+        self.made_progress = moved > 0 or any(
+            eng.backend.made_progress for _, eng in busy)
+        self._finish(outs)
+        return outs
 
+    def _timed_steps(self, busy) -> list[RequestOutput]:
+        """Step the given ``(index, engine)`` pairs — through the thread
+        pool when one is configured — metering per-replica busy clocks
+        and token counts; streams merge in replica order."""
         def timed_step(pair):
             r, eng = pair
             t0 = time.time()
@@ -219,12 +257,13 @@ class ReplicaSet:
         outs: list[RequestOutput] = []
         for part in outs_per:
             outs.extend(part)
-        self.made_progress = moved > 0 or any(
-            eng.backend.made_progress for _, eng in busy)
+        return outs
+
+    def _finish(self, outs: list[RequestOutput]):
+        """Move retired handles from the in-flight map to ``finished``."""
         for out in outs:
             if out.finished:
                 self.finished.append(self._by_uid.pop(out.request_id))
-        return outs
 
     @property
     def has_work(self) -> bool:
@@ -253,6 +292,7 @@ class ReplicaSet:
             "queue_wait_steps_max": max(self.wait_steps, default=0),
             "queue_wait_s_mean": (sum(self.wait_wall)
                                   / max(len(self.wait_wall), 1)),
+            "ttft": self._ttft_stats(),
             # aggregate views the bench / leak checks read
             "mean_active_slots": sum(p["mean_active_slots"] for p in per),
             "cache_utilization": live / max(cap, 1),
@@ -262,6 +302,21 @@ class ReplicaSet:
             "prefill_calls": sum(p.get("prefill_calls", 0) for p in per),
             "prefill_reqs": sum(p.get("prefill_reqs", 0) for p in per),
         }
+
+    def _ttft_stats(self) -> dict:
+        """Time-to-first-token distribution (seconds) over every request
+        that has sampled its first token so far — retired handles plus
+        the in-flight map; the metric disaggregation is meant to win."""
+        lat = [h.t_first_token - h.t_submit
+               for h in list(self.finished) + list(self._by_uid.values())
+               if h.t_first_token is not None]
+        if not lat:
+            return {"count": 0, "mean_s": 0.0, "p50_s": 0.0, "p95_s": 0.0}
+        arr = np.asarray(lat)
+        return {"count": len(lat),
+                "mean_s": float(arr.mean()),
+                "p50_s": float(np.percentile(arr, 50)),
+                "p95_s": float(np.percentile(arr, 95))}
 
     def reset_telemetry(self):
         """Zero every replica's counters and the set-level telemetry
@@ -288,7 +343,7 @@ class ReplicaSet:
             # resume re-prefills its whole history, not just the prompt
             queued = sum(paged_kv.blocks_for(
                 len(h.prompt) + len(h.token_ids) + 1,
-                self.cfg.block_size) for h in be.waiting)
+                self.replicas[r].cfg.block_size) for h in be.waiting)
             return be.alloc.used_count + queued
         return be.num_active + len(be.waiting)
 
@@ -297,12 +352,20 @@ class ReplicaSet:
         for; beyond that, requests are better off in the shared queue
         where the policy can still steer them."""
         be = self.replicas[r].backend
-        return self.cfg.num_slots - be.num_active - len(be.waiting) > 0
+        return self.replicas[r].cfg.num_slots \
+            - be.num_active - len(be.waiting) > 0
+
+    def _dispatch_candidates(self) -> list[int]:
+        """Replica indices dispatch may target (subclass hook: the
+        disaggregated engine restricts fresh admissions to prefill
+        replicas, with a packet-backpressure gate)."""
+        return list(range(self.dp))
 
     def _dispatch(self) -> int:
         moved = 0
         while self.queue:
-            cands = [r for r in range(self.dp) if self.can_accept(r)]
+            cands = [r for r in self._dispatch_candidates()
+                     if self.can_accept(r)]
             if not cands:
                 break                     # head waits; never skip ahead
             handle = self.queue.popleft()

@@ -66,6 +66,12 @@ class _Slot:
 class PagedBackend:
     """Host-side scheduler state + jit'd device steps (paged pools)."""
 
+    # Role specialization (launch/engine/disagg.py): a prefill-only
+    # backend runs admission + prefill and returns before the decode
+    # phase — its slots never grow, preempt or COW; they are exported
+    # as MigrationPackets by the disaggregated front-end instead.
+    prefill_only = False
+
     def __init__(self, model: Model, params, cfg: EngineConfig,
                  ctx: RunCtx):
         self.model = model
@@ -179,6 +185,8 @@ class PagedBackend:
         outs: list[RequestOutput] = []
         self.made_progress = False
         self._admit(outs)
+        if self.prefill_only:
+            return outs               # role-specialized: no decode here
         self._grow_blocks()
         active = [i for i, s in enumerate(self.slots) if s.req is not None]
         if not active:
@@ -658,6 +666,63 @@ class PagedBackend:
         self.lengths[i] = 0
         self.sampler.clear(i)
         self._post_clear(i)
+
+    # -- migration (prefill/decode disaggregation) ----------------------
+
+    def export_slot(self, i: int):
+        """Host-side migration snapshot of occupied slot ``i``: the
+        handle, its physical block chain, the cached length and the
+        next token to feed. Device content is gathered separately by
+        launch/engine/transport.py — JAX arrays are functional, so the
+        gather may happen before or after ``detach_slot`` frees the
+        chain without ever observing the reuse."""
+        slot = self.slots[i]
+        assert slot.req is not None, "exporting an empty slot"
+        return slot.req, list(slot.blocks), int(self.lengths[i]), \
+            slot.last_token
+
+    def detach_slot(self, i: int):
+        """Drop slot ``i`` WITHOUT retiring or re-queueing: its request
+        now lives in a MigrationPacket. The block chain is freed here
+        (shared references just decrement) because the packet carries
+        gathered *content*, not block ids into this pool — a packet
+        dropped mid-migration therefore leaks nothing on either side."""
+        slot = self.slots[i]
+        self.alloc.free(slot.blocks)
+        self._clear_slot(i)
+
+    def import_slot(self, req: RequestHandle, block_ids: list[int],
+                    length: int, last_token: int) -> int:
+        """Install a migrated request into a free slot over freshly
+        alloc()'d ``block_ids`` (the transport scatters the packet's
+        content into them; this installs the host-side view). The path
+        is position-agnostic: ``length`` may sit anywhere from the
+        full-hit rewind (S - 1, nothing sampled yet) to deep mid-decode
+        re-export — ``cached`` reconstructs the block contents from the
+        handle exactly like ``_cached_tokens`` does on a preemption
+        resume. Full prompt+output chunks are registered in the prefix
+        index so later admissions on THIS replica can share them."""
+        free = [i for i, s in enumerate(self.slots) if s.req is None]
+        assert free, "import into a full backend (caller gates on this)"
+        i = free[0]
+        slot = self.slots[i]
+        slot.req = req
+        slot.blocks = list(block_ids)
+        slot.shared = 0                  # fresh private copies, COW-free
+        slot.last_token = last_token
+        slot.ticket = self._ticket
+        self._ticket += 1
+        self.table[i, :] = paged_kv.NULL_BLOCK
+        self.table[i, :len(block_ids)] = block_ids
+        self.lengths[i] = length
+        self.sampler.install(i, req.sampling, req._n_sampled)
+        cached = (list(req.prompt) + req.token_ids)[:length]
+        if self.prefix is not None:
+            for b in self.prefix.insert(cached, slot.blocks):
+                self.alloc.register(b)
+        self._post_admit([(i, req, cached, length, list(block_ids))])
+        self.made_progress = True
+        return i
 
     def _post_admit(self, rows):
         """Subclass hook: ``(slot, req, cached, S, block_ids)`` rows just

@@ -1,0 +1,202 @@
+"""KV-cache migration between replica pools (prefill/decode handoff).
+
+EPAC moves a cache line between tiles by gathering it from the owning L2
+slice, cutting it through the CHI NoC (or the C2C SerDes when the peers
+sit on different dies) and installing it in the destination slice with
+the directory updated. This module is the serving analogue for one
+request's paged KV state: **gather** the slot's block chain and per-slot
+recurrent state out of the source replica's pools
+(``paged_kv.extract_blocks``), **move** it across submeshes with
+``jax.device_put`` onto the destination pool's shardings, and
+**scatter** it into freshly alloc()'d destination blocks
+(``paged_kv.insert_blocks``) with the host-side view installed by
+``PagedBackend.import_slot`` (refcounts, block table, sampler stream
+position, prefix-index registration).
+
+Design notes:
+
+* **One jit trace per backend and direction.** Block-id vectors are
+  padded to ``layout.max_blocks_per_seq`` with the reserved null block:
+  pad gathers read null content nobody consumes, pad scatters collide
+  in the destination null block (harmless by the same argument as
+  ``pack_prefill_kv``'s pad routing), and the destination slot index is
+  a traced scalar — so chain length and slot never retrigger
+  compilation.
+* **Leak-free by construction.** ``extract_slot`` gathers *content*
+  (functional arrays — the gather snapshots values, so freeing the
+  chain afterwards can never corrupt the packet), then
+  ``detach_slot`` returns the source blocks immediately. A packet that
+  is later dropped — cancellation mid-migration, shutdown — holds no
+  block in ANY pool.
+* **Position-agnostic.** The packet carries the cached length, the next
+  token to feed and the handle (whose ``_n_sampled`` is the RNG stream
+  position), so first-token handoff, the full-hit rewind
+  (``length = S - 1``, nothing sampled yet) and mid-decode re-export
+  for straggler stealing all take the same path, and outputs stay
+  bit-identical by the engine's RNG-stream contract.
+
+``payload_bytes`` counts the *useful* payload (real blocks + per-slot
+state, not the null-block padding); the disaggregated front-end prices
+it with ``core.noc.p2p_time`` per packet.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.engine.api import RequestHandle
+from repro.models import paged_kv
+
+
+@dataclasses.dataclass
+class MigrationPacket:
+    """One request's cache in flight between replica pools.
+
+    Attributes
+    ----------
+    req : RequestHandle
+        The live handle — prompt, emitted tokens, SamplingParams and
+        the RNG stream position (``_n_sampled``) all travel with it.
+    length : int
+        Cached tokens at export (position-agnostic: anywhere from the
+        full-hit rewind to deep mid-decode).
+    last_token : int
+        The next token the destination decode feeds.
+    n_blocks : int
+        Real blocks in the chain (the gathered state is padded to the
+        layout's max chain width with null-block content).
+    state : Any
+        The gathered device tree: block-pool leaves ``(L, W, ...)`` and
+        per-slot leaves ``(L, 1, ...)``, same structure as the pools.
+    payload_bytes : int
+        Useful payload (real blocks + per-slot state; padding excluded)
+        — what ``core.noc.p2p_time`` prices.
+    src : int
+        Exporting replica index (hop-count accounting).
+    """
+
+    req: RequestHandle
+    length: int
+    last_token: int
+    n_blocks: int
+    state: Any
+    payload_bytes: int
+    src: int
+
+
+def _pool_mask(backend):
+    """Cached block-pool/per-slot boolean tree for a backend's pools."""
+    mask = getattr(backend, "_migration_mask", None)
+    if mask is None:
+        mask = backend.model.paged_pool_mask(backend.layout)
+        backend._migration_mask = mask
+    return mask
+
+
+def _gather_fn(backend):
+    """Cached jit: (pools, padded ids, slot) -> gathered packet state."""
+    fn = getattr(backend, "_migration_gather", None)
+    if fn is None:
+        mask = _pool_mask(backend)
+
+        def gather(pools, ids, slot):
+            return paged_kv.extract_blocks(pools, mask, ids, slot)
+
+        fn = jax.jit(gather)
+        backend._migration_gather = fn
+    return fn
+
+
+def _scatter_fn(backend):
+    """Cached jit: (pools, state, padded ids, slot) -> pools, with the
+    destination pools donated (same buffer-reuse pattern as the COW
+    copy) and pinned to their NamedShardings when sharded."""
+    fn = getattr(backend, "_migration_scatter", None)
+    if fn is None:
+        mask = _pool_mask(backend)
+
+        def scatter(pools, state, ids, slot):
+            return paged_kv.insert_blocks(pools, mask, state, ids, slot)
+
+        if backend._pool_sh is None:
+            fn = jax.jit(scatter, donate_argnums=(0,))
+        else:
+            fn = jax.jit(scatter, donate_argnums=(0,),
+                         out_shardings=backend._pool_sh)
+        backend._migration_scatter = fn
+    return fn
+
+
+def _pad_ids(ids, width: int):
+    """Pad a block chain to the fixed trace width with the null block."""
+    out = np.full((width,), paged_kv.NULL_BLOCK, np.int32)
+    out[:len(ids)] = ids
+    return jnp.asarray(out)
+
+
+def _payload_bytes(state, mask, n_blocks: int) -> int:
+    """Useful packet bytes: real blocks of every pool leaf (padding to
+    the trace width excluded) plus the full per-slot state."""
+    total = 0
+    for leaf, pool in zip(jax.tree.leaves(state), jax.tree.leaves(mask)):
+        nbytes = leaf.size * jnp.dtype(leaf.dtype).itemsize
+        if pool:
+            nbytes = nbytes // leaf.shape[1] * n_blocks
+        total += nbytes
+    return int(total)
+
+
+def extract_slot(backend, i: int, *, src: int = 0) -> MigrationPacket:
+    """Export occupied slot ``i`` as a MigrationPacket and release it.
+
+    Gathers the slot's block chain and per-slot state out of the pools,
+    then ``detach_slot`` frees the chain — eagerly, so the packet holds
+    no source-pool blocks and dropping it leaks nothing. Safe because
+    the gather snapshots values (JAX arrays are functional); a later
+    reuse of those physical blocks cannot reach into the packet.
+    """
+    req, blocks, length, last_token = backend.export_slot(i)
+    width = backend.layout.max_blocks_per_seq
+    state = _gather_fn(backend)(
+        backend.pools, _pad_ids(blocks, width), jnp.int32(i))
+    nbytes = _payload_bytes(state, _pool_mask(backend), len(blocks))
+    backend.detach_slot(i)
+    return MigrationPacket(req, length, last_token, len(blocks), state,
+                           nbytes, src)
+
+
+def can_import(backend, packet: MigrationPacket) -> bool:
+    """True when ``backend`` can land the packet now: a decode lane not
+    spoken for, and admission headroom for the chain plus this step's
+    growth block (the watermark is waived for an idle backend — the
+    same sole-request progress guarantee as ``_drain_bucket_run``, and
+    why an idle decode replica can ALWAYS take the queue head)."""
+    if backend.num_active + len(backend.waiting) >= backend.cfg.num_slots:
+        return False
+    need = paged_kv.blocks_for(packet.length + 1, backend.cfg.block_size)
+    return backend.alloc.can_admit(need, strict=backend.num_active > 0)
+
+
+def insert_packet(backend, packet: MigrationPacket) -> int:
+    """Land a packet: alloc destination blocks, install the host-side
+    slot view (``import_slot``), move the state onto the destination
+    pools' placement and scatter it in. Returns the slot index.
+
+    Callers gate on ``can_import`` first; the alloc here may still
+    reclaim prefix-LRU blocks (the allocator unlinks them from the
+    index via its eviction hook, exactly like admission).
+    """
+    ids = backend.alloc.alloc(packet.n_blocks)
+    i = backend.import_slot(packet.req, ids, packet.length,
+                            packet.last_token)
+    state = jax.tree.map(lambda d, p: jax.device_put(p, d.sharding),
+                         backend.pools, packet.state)
+    width = backend.layout.max_blocks_per_seq
+    backend.pools = _scatter_fn(backend)(
+        backend.pools, state, _pad_ids(ids, width), jnp.int32(i))
+    return i

@@ -25,8 +25,8 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch.engine import (Engine, EngineConfig, ReplicaSet,
-                                 SamplingParams)
+from repro.launch.engine import (DisaggregatedEngine, Engine, EngineConfig,
+                                 ReplicaSet, SamplingParams)
 from repro.launch.mesh import replica_cli_mesh
 from repro.models.model import Model
 
@@ -52,6 +52,12 @@ def main():
                     help="speculative decoding: ngram-drafted tokens "
                          "per step (paged backend; bit-identical "
                          "outputs)")
+    ap.add_argument("--roles", default=None,
+                    help="prefill/decode disaggregation over the dp "
+                         "replicas: comma-separated roles (e.g. "
+                         "'prefill,decode') or 'auto'; requires dp >= 2 "
+                         "and the paged backend (bit-identical outputs, "
+                         "KV blocks migrate between pools)")
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if args.smoke:
@@ -62,7 +68,12 @@ def main():
     mesh = replica_cli_mesh(args.dp, args.tp)
     ecfg = EngineConfig(backend=args.backend, num_slots=args.slots,
                         max_len=128, spec_tokens=args.spec_tokens)
-    if args.dp > 1:
+    if args.roles is not None:
+        roles = args.roles if args.roles == "auto" \
+            else tuple(args.roles.split(","))
+        engine = DisaggregatedEngine(model, params, ecfg, dp=args.dp,
+                                     mesh=mesh, roles=roles)
+    elif args.dp > 1:
         engine = ReplicaSet(model, params, ecfg, dp=args.dp, mesh=mesh)
     else:
         engine = Engine(model, params,

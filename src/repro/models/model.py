@@ -101,6 +101,13 @@ class Model:
         pools head-sharded over TP; per-slot state on cache rules)."""
         return transformer.paged_cache_specs(self.cfg, layout, shard)
 
+    def paged_pool_mask(self, layout):
+        """Same-structure boolean tree over ``init_paged_cache``: True
+        on block-pool leaves, False on per-slot state — classified by
+        layer kind (see transformer.paged_pool_mask). Drives the KV
+        migration gather/scatter in launch/engine/transport.py."""
+        return transformer.paged_pool_mask(self.cfg, layout)
+
     def pack_prefill_into_paged(self, layout, pools, dense_caches,
                                 row_of_slot, valid, block_ids):
         """Batched install: block_ids (N, nbp) per prefill row;

@@ -445,9 +445,51 @@ def pack_prefill_state(state, dense_state, row_of_slot, valid):
         state, dense_state)
 
 
+def extract_blocks(pools, is_pool, block_ids, slot):
+    """Gather ONE slot's migratable cache out of a paged tree.
+
+    ``is_pool`` is a same-structure tree of booleans (built by
+    ``transformer.paged_pool_mask`` — classified by LAYER KIND, never by
+    shape): pool leaves ``(L, NB, BS, Hkv, D)`` gather the ``block_ids``
+    rows along the block axis (axis 1, after the stacked layer-count
+    axis — the same convention ``pack_prefill_kv`` and the COW copy
+    write through); per-slot leaves (rings, SSM carries, conv tails —
+    slot axis also at axis 1) take the slot's own row, kept at size 1
+    so every leaf preserves its rank (and therefore its PartitionSpec)
+    across the migration. ``block_ids`` is padded to a fixed width with
+    the null block so the jit traces ONCE per engine; pad rows carry
+    null-block content and land back in the destination's null block on
+    insert. Pure function of its inputs — the source pool is never
+    mutated, so the caller may free the source blocks in any order
+    relative to this gather."""
+    def one(leaf, pool):
+        if pool:
+            return jnp.take(leaf, block_ids, axis=1)
+        return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=1)
+
+    return jax.tree.map(one, pools, is_pool)
+
+
+def insert_blocks(pools, is_pool, packet, block_ids, slot):
+    """Scatter an ``extract_blocks`` packet into a destination tree.
+
+    The inverse of ``extract_blocks`` against a DIFFERENT pool: pool
+    leaves scatter the packet's block rows into freshly allocated
+    ``block_ids`` (pad entries point at the null block, where their
+    null-content writes collide harmlessly — the ``pack_prefill_kv``
+    argument); per-slot leaves overwrite the destination slot's row.
+    Donatable: the caller's jit donates ``pools``."""
+    def one(leaf, pool, pk):
+        if pool:
+            return leaf.at[:, block_ids].set(pk)
+        return jax.lax.dynamic_update_slice_in_dim(leaf, pk, slot, axis=1)
+
+    return jax.tree.map(one, pools, is_pool, packet)
+
+
 __all__ = [
     "NULL_BLOCK", "PagedLayout", "BlockAllocator", "PrefixIndex",
-    "blocks_for", "head_shard_ok", "init_layer_pool", "init_slot_tables",
-    "pack_prefill_kv", "pack_prefill_ring", "pack_prefill_state",
-    "rollback_tail",
+    "blocks_for", "extract_blocks", "head_shard_ok", "init_layer_pool",
+    "init_slot_tables", "insert_blocks", "pack_prefill_kv",
+    "pack_prefill_ring", "pack_prefill_state", "rollback_tail",
 ]

@@ -668,6 +668,29 @@ def init_paged_cache(cfg: ModelConfig, layout):
     return pools
 
 
+def paged_pool_mask(cfg: ModelConfig, layout):
+    """Same-structure tree of booleans over ``init_paged_cache``: True
+    for full-attention BLOCK-POOL leaves (block axis at axis 1, after
+    the stacked layer-count axis), False for PER-SLOT state (windowed
+    rings, SSM carries, conv tails — slot axis also at axis 1). The
+    classification walks layer KINDS, exactly like ``paged_cache_specs``
+    — never shapes, so a ring buffer whose slot count happens to equal
+    the pool's block count cannot be misclassified. Consumed by
+    ``paged_kv.extract_blocks``/``insert_blocks`` (KV migration between
+    replicas)."""
+    shapes = jax.eval_shape(lambda: init_paged_cache(cfg, layout))
+    mask = {}
+    for g, (pattern, count) in enumerate(layer_groups(cfg)):
+        gp = {}
+        for pi, kind in enumerate(pattern):
+            flag = kind in ("attn", "local") \
+                and _window_for(cfg, kind) is None
+            gp[f"p{pi}"] = jax.tree.map(lambda t, f=flag: f,
+                                        shapes[f"g{g}"][f"p{pi}"])
+        mask[f"g{g}"] = gp
+    return mask
+
+
 def paged_cache_specs(cfg: ModelConfig, layout, shard):
     """PartitionSpecs for the ``init_paged_cache`` tree under a mesh:
     block pools head-sharded over TP (every device owns its kv-head

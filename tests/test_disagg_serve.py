@@ -1,0 +1,357 @@
+"""Prefill/decode disaggregation: role replicas + KV-block migration.
+
+Contract:
+
+  * DisaggregatedEngine is token-identical to a single Engine AND a
+    symmetric ReplicaSet on ragged prompts, greedy and seeded sampling,
+    across olmo (pure-attention pools), recurrentgemma (per-slot ring +
+    conv state) and xlstm (mlstm/slstm per-slot state, exact-length
+    prefill) — the RNG stream position travels in the packet;
+  * a MigrationPacket round-trips through one pool bit-exactly (packet
+    unit test) and holds NO blocks: export frees the source chain
+    eagerly, so cancelling a migration mid-flight leaks nothing;
+  * zero block leaks across BOTH pools under decode-side preemption;
+  * work-stealing: an idle decode replica pulls a mid-decode slot from
+    the busiest one and outputs stay bit-identical;
+  * per-replica EngineConfig overrides carry role configs (prefill
+    forces spec_tokens=0); migration geometry may not differ per role;
+  * TTFT telemetry: per-request stamps aggregate to p50/p95 in stats().
+
+The sharded (submesh) variant lives in tests/test_sharded_serve.py.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+from repro.configs import get_config
+from repro.launch.engine import (DisaggregatedEngine, Engine, EngineConfig,
+                                 ReplicaSet, SamplingParams)
+from repro.launch.engine import transport
+from repro.models.model import Model
+
+ARCHS = ("olmo_1b", "recurrentgemma_2b", "xlstm_1_3b")
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    out = {}
+    for arch in ARCHS:
+        cfg = get_config(arch).smoke()
+        model = Model(cfg)
+        out[arch] = (cfg, model, model.init(jax.random.PRNGKey(0)))
+    return out
+
+
+def _work(cfg, rng, n=6, max_tokens=6):
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, L)))
+               for L in (3, 7, 12, 5, 9, 14)[:n]]
+    sp = [SamplingParams(max_tokens=max_tokens),
+          SamplingParams(max_tokens=max_tokens, temperature=0.9, top_k=12,
+                         seed=3),
+          SamplingParams(max_tokens=max_tokens, temperature=1.0,
+                         top_p=0.85, seed=5),
+          SamplingParams(max_tokens=max_tokens),
+          SamplingParams(max_tokens=max_tokens, temperature=0.7, seed=11),
+          SamplingParams(max_tokens=max_tokens)][:n]
+    return prompts, sp
+
+
+def _assert_no_leaks(engine):
+    for eng in engine.replicas:
+        be = eng.backend
+        assert be.alloc.free_count == be.layout.usable_blocks, \
+            (be.alloc.free_count, be.layout.usable_blocks)
+        be.alloc.check_invariant()
+
+
+_BASE = dict(backend="paged", num_slots=3, block_size=4, num_blocks=33,
+             max_len=48)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_disagg_token_identical_to_single_engine(smoke, rng, arch):
+    """Migration (pool blocks + per-slot recurrent state + RNG stream
+    position) is invisible in the tokens: disagg == one engine, greedy
+    and seeded, on all three state families; zero leaks in every pool."""
+    cfg, model, params = smoke[arch]
+    prompts, sp = _work(cfg, rng)
+    want = Engine(model, params, EngineConfig(**_BASE)).generate(
+        prompts, sp)
+    dis = DisaggregatedEngine(model, params, EngineConfig(**_BASE),
+                              dp=2, roles=("prefill", "decode"))
+    got = dis.generate(prompts, sp)
+    assert got == want, (arch, got, want)
+    _assert_no_leaks(dis)
+    st = dis.stats()["disagg"]
+    assert st["exported"] == st["imported"] == len(prompts)
+    assert st["packets_inflight"] == 0
+    assert st["bytes_moved"] > 0 and st["fabric_s"] >= 0.0
+
+
+def test_disagg_matches_symmetric_replicaset(smoke, rng):
+    """Same trace through a symmetric dp=2 ReplicaSet and a dp=2
+    disaggregated set: bit-identical streams (the acceptance-criteria
+    comparison the bench gates on)."""
+    cfg, model, params = smoke["olmo_1b"]
+    prompts, sp = _work(cfg, rng)
+    sym = ReplicaSet(model, params, EngineConfig(**_BASE), dp=2)
+    dis = DisaggregatedEngine(model, params, EngineConfig(**_BASE),
+                              dp=2, roles="auto")
+    assert dis.roles == ("prefill", "decode")
+    got_s = sym.generate(prompts, sp)
+    got_d = dis.generate(prompts, sp)
+    assert got_d == got_s
+    _assert_no_leaks(sym)
+    _assert_no_leaks(dis)
+
+
+def test_packet_roundtrip_unit(smoke, rng):
+    """Unit: export a live slot to a MigrationPacket (source chain freed
+    eagerly), re-import into the SAME pool, and the request finishes
+    with exactly the tokens of an unmigrated run."""
+    cfg, model, params = smoke["olmo_1b"]
+    prompts, sp = _work(cfg, rng, n=2)
+    want = Engine(model, params, EngineConfig(**_BASE)).generate(
+        prompts, sp)
+    eng = Engine(model, params, EngineConfig(**_BASE))
+    handles = [eng.add_request(p, s) for p, s in zip(prompts, sp)]
+    eng.step()                          # admit + prefill + first decode
+    be = eng.backend
+    used_before = be.alloc.used_count
+    assert used_before > 0
+    i = next(j for j, s in enumerate(be.slots)
+             if s.req is handles[0])
+    pkt = transport.extract_slot(be, i, src=0)
+    assert pkt.req is handles[0]
+    assert pkt.n_blocks > 0 and pkt.payload_bytes > 0
+    # eager free: the packet holds no blocks in the source pool
+    assert be.alloc.used_count < used_before
+    assert be.slots[i].req is None
+    assert transport.can_import(be, pkt)
+    j = transport.insert_packet(be, pkt)
+    assert be.slots[j].req is handles[0]
+    assert int(be.lengths[j]) == pkt.length
+    eng.drain()
+    assert [h.token_ids for h in handles] == want
+    assert be.alloc.free_count == be.layout.usable_blocks
+
+
+def test_mid_migration_cancel_leaks_nothing(smoke, rng):
+    """Packets dropped between export and import (cancellation,
+    shutdown) leave BOTH pools fully free — the export already returned
+    the source blocks and no destination block was ever allocated."""
+    cfg, model, params = smoke["olmo_1b"]
+    prompts, sp = _work(cfg, rng, n=3)
+    dis = DisaggregatedEngine(model, params, EngineConfig(**_BASE),
+                              dp=2, roles=("prefill", "decode"))
+    for p, s in zip(prompts, sp):
+        dis.add_request(p, s)
+    dis._import_packets = lambda: 0     # park every packet in flight
+    while dis.queue or any(dis.replicas[r].has_work
+                           for r in dis.prefill_ids):
+        dis.step()
+    assert len(dis.packets) == len(prompts)
+    # simulate cancel: drop every in-flight packet on the floor
+    for pkt in dis.packets:
+        pkt.req.finished = True
+        dis._by_uid.pop(pkt.req.uid, None)
+    dis.packets.clear()
+    assert not dis.has_work
+    _assert_no_leaks(dis)
+
+
+def test_decode_side_preemption_no_leaks(smoke, rng):
+    """A decode replica pool too small for its imports preempts LIFO and
+    re-prefills locally; outputs stay bit-identical to an uncontended
+    single engine and both pools return to all-free."""
+    cfg, model, params = smoke["olmo_1b"]
+    prompts, sp = _work(cfg, rng, n=4, max_tokens=12)
+    big = dict(_BASE, max_len=64, num_blocks=65)
+    want = Engine(model, params, EngineConfig(**big)).generate(
+        prompts, sp)
+    dis = DisaggregatedEngine(
+        model, params, EngineConfig(**big), dp=2,
+        roles=("prefill", "decode"),
+        # starve ONLY the decode pool so imports collide mid-decode
+        role_overrides={"decode": {"num_blocks": 12}})
+    got = dis.generate(prompts, sp)
+    assert got == want
+    preempts = sum(e.stats()["preemptions"]
+                   for e in [dis.replicas[r] for r in dis.decode_ids])
+    assert preempts >= 1
+    _assert_no_leaks(dis)
+
+
+def test_work_stealing_fairness(smoke, rng):
+    """Pin imports to ONE decode replica; the idle one must steal the
+    donor's newest-ticket slot (donor keeps its oldest admission) and
+    every output still matches the single engine bit-exactly."""
+    cfg, model, params = smoke["olmo_1b"]
+    prompts, sp = _work(cfg, rng, n=6, max_tokens=10)
+    big = dict(_BASE, max_len=64, num_blocks=65)
+    want = Engine(model, params, EngineConfig(**big)).generate(
+        prompts, sp)
+    dis = DisaggregatedEngine(
+        model, params, EngineConfig(**big), dp=3,
+        roles=("prefill", "decode", "decode"),
+        policy=lambda rset, cands: cands[0])   # pile onto replica 1
+    got = dis.generate(prompts, sp)
+    assert got == want
+    st = dis.stats()["disagg"]
+    assert st["stolen"] >= 1, st
+    # a steal re-exports from a decode replica, so it counts as an
+    # extra import but not a prefill-side export
+    assert st["imported"] == st["exported"] + st["stolen"]
+    _assert_no_leaks(dis)
+
+
+def test_steal_keeps_donor_oldest(smoke, rng):
+    """Directly pin the steal victim: with two slots mid-decode on one
+    donor, ``_steal`` moves the NEWER ticket to the idle replica — the
+    oldest admission never migrates away, preserving no-livelock — and
+    the mid-decode migration is token-invisible."""
+    cfg, model, params = smoke["olmo_1b"]
+    prompts, sp = _work(cfg, rng, n=2, max_tokens=12)
+    want = Engine(model, params, EngineConfig(**_BASE)).generate(
+        prompts, sp)
+    dis = DisaggregatedEngine(model, params, EngineConfig(**_BASE),
+                              dp=3, roles=("prefill", "decode", "decode"))
+    donor_eng = dis.replicas[dis.decode_ids[0]]
+    thief_be = dis.replicas[dis.decode_ids[1]].backend
+    handles = [donor_eng.add_request(p, s) for p, s in zip(prompts, sp)]
+    donor_eng.step()                    # admit + prefill both mid-decode
+    dbe = donor_eng.backend
+    assert dbe.num_active == 2
+    by_ticket = sorted(((s.ticket, i) for i, s in enumerate(dbe.slots)
+                        if s.req is not None))
+    oldest_req = dbe.slots[by_ticket[0][1]].req
+    newest_req = dbe.slots[by_ticket[-1][1]].req
+    assert dis._steal() == 1 and dis.stolen == 1
+    assert any(s.req is oldest_req for s in dbe.slots), \
+        "steal uprooted the donor's oldest admission"
+    assert any(s.req is newest_req for s in thief_be.slots)
+    # requests were injected engine-side, so finish them engine-side
+    while any(e.has_work for e in dis.replicas):
+        for e in dis.replicas:
+            if e.has_work:
+                e.step()
+    assert [h.token_ids for h in handles] == want
+    _assert_no_leaks(dis)
+
+
+def test_prefix_hit_migrates_full_hit_rewind(smoke, rng):
+    """A full-prefix hit on a prefill replica has nothing sampled yet
+    (lengths = S - 1, stream position 0): migration must carry that
+    rewind so the decode replica samples token 0 at position 0 —
+    bit-identical to the unmigrated prefix-cache engine."""
+    cfg, model, params = smoke["olmo_1b"]
+    prompt = list(map(int, rng.integers(0, cfg.vocab_size, 8)))
+    sp = [SamplingParams(max_tokens=5, temperature=0.8, seed=7)] * 2
+    base = dict(_BASE, prefix_cache=True)
+    want = Engine(model, params, EngineConfig(**base)).generate(
+        [prompt, prompt], sp)
+    dis = DisaggregatedEngine(model, params, EngineConfig(**base),
+                              dp=2, roles=("prefill", "decode"))
+    h0 = dis.add_request(prompt, sp[0])
+    while not h0.finished:
+        dis.step()
+    h1 = dis.add_request(prompt, sp[1])     # full hit on the prefill pool
+    dis.drain()
+    assert [h0.token_ids, h1.token_ids] == want
+    pre = dis.replicas[dis.prefill_ids[0]].stats()["prefix_cache"]
+    assert pre["hits"] >= 1, pre
+    _assert_no_leaks(dis)
+
+
+def test_role_overrides_and_validation(smoke):
+    """Per-replica overrides: prefill forces spec_tokens=0 while decode
+    keeps its drafter; migration geometry and role names validate."""
+    cfg, model, params = smoke["olmo_1b"]
+    base = EngineConfig(**dict(_BASE, spec_tokens=2))
+    dis = DisaggregatedEngine(model, params, base, dp=2,
+                              roles=("prefill", "decode"))
+    assert dis.replicas[0].cfg.spec_tokens == 0
+    assert dis.replicas[1].cfg.spec_tokens == 2
+    assert dis.replicas[0].backend.prefill_only
+    assert not dis.replicas[1].backend.prefill_only
+    with pytest.raises(ValueError, match="per role"):
+        DisaggregatedEngine(model, params, EngineConfig(**_BASE), dp=2,
+                            roles=("prefill", "decode"),
+                            role_overrides={"decode": {"block_size": 8}})
+    with pytest.raises(ValueError, match="unknown role"):
+        DisaggregatedEngine(model, params, EngineConfig(**_BASE), dp=2,
+                            roles=("prefill", "verify"))
+    with pytest.raises(ValueError, match="one replica per role"):
+        DisaggregatedEngine(model, params, EngineConfig(**_BASE), dp=2,
+                            roles=("decode", "decode"))
+    with pytest.raises(ValueError, match="dp >= 2"):
+        DisaggregatedEngine(model, params, EngineConfig(**_BASE), dp=1,
+                            roles="auto")
+    with pytest.raises(ValueError, match="paged"):
+        DisaggregatedEngine(model, params,
+                            EngineConfig(backend="static"), dp=2)
+
+
+def test_replicaset_overrides_validation(smoke, rng):
+    """The generic ReplicaSet overrides: per-replica fields apply, the
+    mesh/eos_id escape hatches are rejected, and validation runs
+    against EVERY replica when configs differ."""
+    cfg, model, params = smoke["olmo_1b"]
+    rs = ReplicaSet(model, params, EngineConfig(**_BASE), dp=2,
+                    overrides=[None, {"num_slots": 2}])
+    assert rs.replicas[0].cfg.num_slots == 3
+    assert rs.replicas[1].cfg.num_slots == 2
+    assert rs.total_slots == 5
+    with pytest.raises(ValueError, match="cannot change"):
+        ReplicaSet(model, params, EngineConfig(**_BASE), dp=2,
+                   overrides=[None, {"eos_id": 5}])
+    with pytest.raises(ValueError, match="overrides for"):
+        ReplicaSet(model, params, EngineConfig(**_BASE), dp=2,
+                   overrides=[{}])
+    # the smaller replica's max_len bounds every request
+    small = ReplicaSet(model, params, EngineConfig(**_BASE), dp=2,
+                       overrides=[None, {"max_len": 8}])
+    with pytest.raises(ValueError, match="max_len"):
+        small.add_request(list(range(1, 7)),
+                          SamplingParams(max_tokens=8))
+
+
+def test_ttft_telemetry(smoke, rng):
+    """Every finished request carries submit/first-token stamps and
+    stats() aggregates them into a p50 <= p95 distribution, on both
+    front-ends."""
+    cfg, model, params = smoke["olmo_1b"]
+    prompts, sp = _work(cfg, rng)
+    for eng in (ReplicaSet(model, params, EngineConfig(**_BASE), dp=2),
+                DisaggregatedEngine(model, params, EngineConfig(**_BASE),
+                                    dp=2, roles="auto")):
+        eng.generate(prompts, sp)
+        for h in eng.finished:
+            assert h.t_first_token is not None
+            assert h.t_first_token >= h.t_submit
+        tt = eng.stats()["ttft"]
+        assert tt["count"] == len(prompts)
+        assert 0.0 <= tt["p50_s"] <= tt["p95_s"]
+        eng.reset_telemetry()
+        assert eng.stats()["ttft"]["count"] == 0
+
+
+def test_backpressure_bounds_inflight_packets(smoke, rng):
+    """max_inflight=1 pauses fresh dispatch while a packet waits; the
+    trace still completes bit-identically (head-blocking import can
+    always land on an eventually-idle decode replica)."""
+    cfg, model, params = smoke["olmo_1b"]
+    prompts, sp = _work(cfg, rng)
+    want = Engine(model, params, EngineConfig(**_BASE)).generate(
+        prompts, sp)
+    dis = DisaggregatedEngine(model, params, EngineConfig(**_BASE),
+                              dp=2, roles=("prefill", "decode"),
+                              max_inflight=1)
+    got = dis.generate(prompts, sp)
+    assert got == want
+    assert dis._dispatch_candidates() == dis.prefill_ids
+    dis.packets.append(object())            # fake backlog
+    assert dis._dispatch_candidates() == []
+    dis.packets.clear()
+    _assert_no_leaks(dis)

@@ -106,6 +106,48 @@ def test_collective_formula_shapes():
         + noc.all_gather_time(by / n, n, "data"))
 
 
+def test_p2p_time_formula():
+    """Wormhole point-to-point: bandwidth paid once, latency per hop;
+    same-device transfers are free."""
+    f = noc.V5E_FABRIC
+    by = 1e6
+    assert noc.p2p_time(by, 0, "data") == 0.0
+    assert noc.p2p_time(by, -1, "data") == 0.0
+    assert noc.p2p_time(by, 1, "data") == pytest.approx(
+        by / f.ici_bw + f.latency_us * 1e-6)
+    assert noc.p2p_time(by, 3, "data") == pytest.approx(
+        by / f.ici_bw + 3 * f.latency_us * 1e-6)
+    # slow tier: the pod axis maps to the C2C SerDes analogue
+    assert noc.p2p_time(by, 1, "pod") == pytest.approx(
+        by / f.pod_bw + f.latency_us * 1e-6)
+
+
+def test_p2p_time_monotone():
+    """More bytes or more hops never gets cheaper."""
+    ts = [noc.p2p_time(b, 1, "data") for b in (1e3, 1e6, 1e9)]
+    assert ts == sorted(ts) and ts[0] < ts[-1]
+    th = [noc.p2p_time(1e6, h, "data") for h in (1, 2, 4, 8)]
+    assert th == sorted(th) and th[0] < th[-1]
+
+
+def test_p2p_time_epac_section4_numbers():
+    """Cross-check against the paper's §4 bandwidth table: one 64-byte
+    L2 line over a 64 GB/s NoC port takes 1 ns at zero latency, and the
+    default fabric's slow tier IS the 25 GB/s C2C per-direction rate."""
+    port = noc.FabricSpec(
+        ici_bw=noc.EPAC_NOC["noc_port_bw_GBps_per_dir"] * 1e9,
+        latency_us=0.0)
+    line = noc.EPAC_NOC["l2_line_bytes"]
+    assert noc.p2p_time(line, 1, "data", port) == pytest.approx(1e-9)
+    assert noc.V5E_FABRIC.pod_bw == pytest.approx(
+        noc.EPAC_NOC["c2c_bw_GBps_per_dir"] * 1e9)
+    # the demonstrated bring-up rate (§5) prices a transfer slower than
+    # the spec rate for the same payload
+    demo = noc.FabricSpec(
+        pod_bw=noc.EPAC_NOC["c2c_demonstrated_GBps"] * 1e9)
+    assert noc.p2p_time(1e6, 1, "pod", demo) > noc.p2p_time(1e6, 1, "pod")
+
+
 def test_tile_dispatch_agreement(rng):
     x = jnp.asarray(rng.normal(size=(48, 32)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)

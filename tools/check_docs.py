@@ -34,6 +34,7 @@ SECTION_RE = re.compile(
 NUMPY_STYLE_REQUIRED = {
     "Engine", "SamplingParams", "RequestHandle", "RequestOutput",
     "EngineConfig", "ReplicaSet", "SpecDecodeBackend",
+    "DisaggregatedEngine",
 }
 
 
