@@ -43,6 +43,16 @@ are exactly the interference TTFT p95 measures), migration volume
 and a bit-identity check (outputs_match). Every section now carries a
 ``ttft`` sub-dict computed from per-request submit/first-token stamps.
 
+An eighth section, ``workloads``, prices the two NON-dense request
+classes the one Engine serves: dropless MoE (qwen3-moe smoke) and
+encoder-decoder traffic (whisper smoke — ``Request.encoder_features``
+through the cross-KV arena), each at the same ``--mem-tokens`` budget
+as the dense sections, each replayed co-batched and again
+one-request-at-a-time at identical cache config. Reports per-class
+tok/s, the co-batching speedup, arena sharing/leak telemetry, and the
+bit-identity check (outputs_match) between the two replays — the
+workload-generalization contract tests/test_workload_serve.py pins.
+
 The comparison is at EQUAL CACHE MEMORY (--mem-tokens of KV capacity):
 the static engine must preallocate max_len per lane, so its batch is
 ``mem // max_len``; the paged engine spends the same tokens of pool on
@@ -248,6 +258,13 @@ def _replay(engine, trace, handles_out=None) -> dict:
     dt = time.time() - t0
     if handles_out is not None:
         handles_out.extend(handles)
+    return _result_row(engine, handles, dt)
+
+
+def _result_row(engine, handles, dt) -> dict:
+    """Per-section telemetry row from finished handles + engine stats
+    (shared by ``_replay`` and the workload-class replays so every
+    section reports the same columns)."""
     useful = sum(len(h.token_ids) for h in handles)
     st = engine.stats()
     slots = getattr(engine, "total_slots", engine.cfg.num_slots)
@@ -523,6 +540,125 @@ def _replay_disagg(model, params, args) -> dict:
     return res
 
 
+def _replay_encdec(engine, items, handles_out=None) -> dict:
+    """Offline (arrival-0) replay of encoder-decoder requests — a list
+    of ``(prompt, frames, max_new)`` triples — with ``_replay``'s warm /
+    reset / time discipline. Needs its own warm pass because the
+    generic ``_warm`` probes carry no encoder features, which
+    ``check_request`` rejects on an enc-dec config; probe clips are all
+    one encoder length, so the enc bucket axis contributes exactly one
+    bucket of compiles."""
+    cfg = engine.backend.model.cfg
+    flen = max(f.shape[0] for _, f, _ in items)
+    widths = [1]
+    while widths[-1] * 2 <= engine.cfg.num_slots:
+        widths.append(widths[-1] * 2)
+    probe_rng = np.random.default_rng(0)
+    c = 1
+    for plen in sorted({len(p) for p, _, _ in items}):
+        for nb in widths:
+            prompts, feats = [], []
+            for _ in range(nb):
+                pat = [c % cfg.vocab_size, (c // cfg.vocab_size)
+                       % cfg.vocab_size]
+                prompts.append((pat * plen)[:plen])
+                feats.append(probe_rng.standard_normal(
+                    (flen, cfg.d_model)).astype(np.float32))
+                c += 1
+            engine.generate(prompts, SamplingParams(max_tokens=2),
+                            encoder_features=feats)
+    engine.backend.reset_telemetry()
+    t0 = time.time()
+    handles = [engine.add_request(p, SamplingParams(max_tokens=n),
+                                  encoder_features=f)
+               for p, f, n in items]
+    while engine.has_work:
+        engine.step()
+    dt = time.time() - t0
+    if handles_out is not None:
+        handles_out.extend(handles)
+    res = _result_row(engine, handles, dt)
+    arena = engine.stats()["cross_arena"]
+    res["arena_rows_leaked"] = arena["rows_used"]
+    res["arena_shared_hits"] = arena["shared_hits"]
+    return res
+
+
+def _replay_workloads(args) -> dict:
+    """The ``"workloads"`` section: the OTHER two request classes —
+    dropless MoE (qwen3-moe smoke) and encoder-decoder (whisper smoke,
+    cross-KV arena) — through the same paged ``Engine`` at the same
+    ``--mem-tokens`` cache budget the dense sections spend. Each class
+    replays its trace co-batched across ``--slots`` lanes and again
+    one-request-at-a-time on an identically-budgeted single-slot
+    engine: tokens must be bit-identical (the co-batching-invariance
+    contract tests/test_workload_serve.py pins, re-checked every run
+    because BENCH_serve.json is CI-gated), nothing may leak from the
+    block pool or the cross-KV arena, and the repeated-clip enc-dec
+    trace must actually share arena rows by feature identity."""
+    out = {}
+    base = dict(backend="paged", block_size=args.block_size,
+                num_blocks=args.mem_tokens // args.block_size + 1,
+                max_len=args.max_len, watermark_blocks=args.watermark)
+
+    cfg = get_config("qwen3_moe_30b_a3b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    trace = make_trace(cfg, n_requests=args.requests, rate=args.rate,
+                       seed=args.seed + 5)
+    eng = Engine(model, params,
+                 EngineConfig(num_slots=args.slots, **base))
+    h: list = []
+    res = _replay(eng, trace, h)
+    del eng
+    seq = Engine(model, params, EngineConfig(num_slots=1, **base))
+    h_seq: list = []
+    res_seq = _replay(seq, trace, h_seq)
+    del seq, model, params
+    res["arch"] = cfg.name
+    res["seq_tok_s"] = res_seq["tok_s"]
+    res["cobatch_speedup"] = res["tok_s"] / max(res_seq["tok_s"], 1e-9)
+    res["seq_blocks_leaked"] = res_seq["blocks_leaked"]
+    res["outputs_match"] = ([x.token_ids for x in h]
+                            == [x.token_ids for x in h_seq])
+    out["moe"] = res
+
+    cfg = get_config("whisper_base").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(args.seed + 6)
+    flen = cfg.encoder_len
+    shared_clip = rng.standard_normal(
+        (flen, cfg.d_model)).astype(np.float32)
+    items = []
+    for i in range(args.requests):
+        plen = int(rng.choice((6, 10)))
+        prompt = list(rng.integers(0, cfg.vocab_size, plen))
+        # every third request decodes the SAME clip object — the
+        # several-transcripts-per-audio pattern identity sharing
+        # detects, so co-resident repeats hold one arena row
+        clip = shared_clip if i % 3 == 0 else rng.standard_normal(
+            (flen, cfg.d_model)).astype(np.float32)
+        items.append((prompt, clip, 12))
+    eng = Engine(model, params,
+                 EngineConfig(num_slots=args.slots, **base))
+    h = []
+    res = _replay_encdec(eng, items, h)
+    del eng
+    seq = Engine(model, params, EngineConfig(num_slots=1, **base))
+    h_seq = []
+    res_seq = _replay_encdec(seq, items, h_seq)
+    del seq, model, params
+    res["arch"] = cfg.name
+    res["seq_tok_s"] = res_seq["tok_s"]
+    res["cobatch_speedup"] = res["tok_s"] / max(res_seq["tok_s"], 1e-9)
+    res["seq_blocks_leaked"] = res_seq["blocks_leaked"]
+    res["outputs_match"] = ([x.token_ids for x in h]
+                            == [x.token_ids for x in h_seq])
+    out["encdec"] = res
+    return out
+
+
 def run_bench(args) -> dict:
     cfg = get_config(args.arch)
     if args.smoke:
@@ -554,6 +690,7 @@ def run_bench(args) -> dict:
     res_sp = _replay_speculative(model, params, args)
     res_px = _replay_shared_prefix(model, params, args)
     res_dg = _replay_disagg(model, params, args)
+    res_w = _replay_workloads(args)
     return {
         "arch": cfg.name,
         "mem_tokens": args.mem_tokens,
@@ -564,6 +701,7 @@ def run_bench(args) -> dict:
         "speculative": res_sp,
         "shared_prefix": res_px,
         "disagg": res_dg,
+        "workloads": res_w,
         "speedup": res_c["tok_s"] / max(res_s["tok_s"], 1e-9),
     }
 
@@ -585,6 +723,14 @@ def _write_json(result: dict, json_path: str):
         raise SystemExit("prefix cache changed emitted tokens")
     if not result["disagg"]["outputs_match"]:
         raise SystemExit("disaggregation changed emitted tokens")
+    for cls in ("moe", "encdec"):
+        w = result["workloads"][cls]
+        if w["blocks_leaked"] or w["seq_blocks_leaked"]:
+            raise SystemExit(f"{cls} workload leaked blocks")
+        if not w["outputs_match"]:
+            raise SystemExit(f"co-batching changed {cls} emitted tokens")
+    if result["workloads"]["encdec"]["arena_rows_leaked"]:
+        raise SystemExit("cross-KV arena leaked rows")
 
 
 def _emit(result: dict, json_path: str):
@@ -616,6 +762,11 @@ def _emit(result: dict, json_path: str):
     print(f"serve_disagg,{res_d['tok_s']:.2f},"
           f"{res_d['cache_util']:.3f},{res_d['lane_eff']:.3f},"
           f"{res_d['useful']},{res_d['wall_s']:.2f}")
+    res_w = result["workloads"]
+    for nm, r in (("serve_moe", res_w["moe"]),
+                  ("serve_encdec", res_w["encdec"])):
+        print(f"{nm},{r['tok_s']:.2f},{r['cache_util']:.3f},"
+              f"{r['lane_eff']:.3f},{r['useful']},{r['wall_s']:.2f}")
     print(f"# sharded mesh {res_m['mesh']['axes']}; "
           f"head_sharded={res_m['head_sharded']}; "
           f"per-device cache {res_m['per_device_cache']}")
@@ -655,6 +806,19 @@ def _emit(result: dict, json_path: str):
           f"{res_d['bytes_moved']} bytes, "
           f"fabric {res_d['fabric_s']:.2e} s; "
           f"outputs_match {res_d['outputs_match']}")
+    print(f"# workloads at the same {result['mem_tokens']}-token "
+          f"budget: moe ({res_w['moe']['arch']}) "
+          f"{res_w['moe']['tok_s']:.1f} tok/s = "
+          f"{res_w['moe']['cobatch_speedup']:.2f}x one-at-a-time "
+          f"({res_w['moe']['seq_tok_s']:.1f}), outputs_match "
+          f"{res_w['moe']['outputs_match']}; encdec "
+          f"({res_w['encdec']['arch']}) "
+          f"{res_w['encdec']['tok_s']:.1f} tok/s = "
+          f"{res_w['encdec']['cobatch_speedup']:.2f}x one-at-a-time "
+          f"({res_w['encdec']['seq_tok_s']:.1f}), arena shared hits "
+          f"{res_w['encdec']['arena_shared_hits']}, rows leaked "
+          f"{res_w['encdec']['arena_rows_leaked']}, outputs_match "
+          f"{res_w['encdec']['outputs_match']}")
     print(f"# equal cache budget {result['mem_tokens']} tokens; "
           f"continuous/static tokens/s: {result['speedup']:.2f}x; "
           f"mean active slots {res_c['mean_active']:.2f}; "
@@ -716,7 +880,9 @@ def run():
                     ("serve_replicas", result["replicas"]),
                     ("serve_speculative", result["speculative"]),
                     ("serve_shared_prefix", result["shared_prefix"]),
-                    ("serve_disagg", result["disagg"])):
+                    ("serve_disagg", result["disagg"]),
+                    ("serve_moe", result["workloads"]["moe"]),
+                    ("serve_encdec", result["workloads"]["encdec"])):
         emit(name, 1e6 / max(r["tok_s"], 1e-9),
              f"tok_s={r['tok_s']:.2f} util={r['cache_util']:.3f} "
              f"preemptions={r['preemptions']} "

@@ -27,6 +27,11 @@ bench) and fails on:
     TTFT-p95 ratio / wall-speedup vs symmetric drifting more than
     ``--tolerance`` past baseline (both ratios are machine-normalized by
     construction: the two engines run in the same process).
+  * workloads contract breaks: MoE or encoder-decoder traffic whose
+    co-batched outputs differ from the one-request-at-a-time run of
+    the same config (bit-identity), a block or cross-KV-arena row
+    leaked in either class, or an enc-dec run that shared no arena
+    rows on the repeated-clip trace (identity sharing silently off).
 
 Usage:
   python benchmarks/check_serve_regression.py \
@@ -169,6 +174,32 @@ def check(baseline: dict, fresh: dict, *, tolerance: float,
                     f"disagg wall speedup vs symmetric regressed "
                     f">{tolerance:.0%}: {dg['speedup_wall']:.3f} < "
                     f"{floor_w:.3f} (baseline {base_w:.3f})")
+    # workload classes: MoE and enc-dec must stay bit-identical to a
+    # one-at-a-time replay (co-batching invariance), leak nothing from
+    # the block pool or the cross-KV arena, and the repeated-clip
+    # enc-dec trace must actually share arena rows. All in-process
+    # invariants, no baseline ratio — skipped only when the fresh run
+    # predates the section.
+    if "workloads" in fresh:
+        for cls in ("moe", "encdec"):
+            w = fresh["workloads"][cls]
+            print(f"workloads/{cls}: tok_s {w['tok_s']:.1f} "
+                  f"(x{w['cobatch_speedup']:.2f} vs sequential), "
+                  f"outputs_match {w['outputs_match']}")
+            if not w["outputs_match"]:
+                errors.append(
+                    f"workloads/{cls}: co-batched outputs differ from "
+                    "the sequential run (bit-identity broken)")
+            if w["blocks_leaked"] or w["seq_blocks_leaked"]:
+                errors.append(f"workloads/{cls}: blocks leaked")
+        enc = fresh["workloads"]["encdec"]
+        if enc["arena_rows_leaked"]:
+            errors.append("workloads/encdec: cross-KV arena rows "
+                          "leaked")
+        if enc["arena_shared_hits"] <= 0:
+            errors.append("workloads/encdec: no arena rows shared on "
+                          "the repeated-clip trace — feature-identity "
+                          "sharing is silently off")
     return errors
 
 

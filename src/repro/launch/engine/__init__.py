@@ -48,8 +48,9 @@ pricing each migration. Outputs stay bit-identical to ``ReplicaSet`` by
 the RNG-stream contract (sampler state travels in the packet).
 """
 
-from repro.launch.engine.api import (Engine, EngineConfig, RequestHandle,
-                                     RequestOutput, SamplingParams)
+from repro.launch.engine.api import (Engine, EngineConfig, Request,
+                                     RequestHandle, RequestOutput,
+                                     SamplingParams)
 from repro.launch.engine.disagg import DisaggregatedEngine
 from repro.launch.engine.replica import ReplicaSet
 from repro.launch.engine.sampling import sample_tokens
@@ -63,6 +64,6 @@ from repro.launch.engine.transport import MigrationPacket
 __all__ = [
     "DisaggregatedEngine", "DraftModelDrafter", "Engine", "EngineConfig",
     "MigrationPacket", "NgramDrafter", "PagedBackend", "ReplicaSet",
-    "RequestHandle", "RequestOutput", "SamplingParams",
+    "Request", "RequestHandle", "RequestOutput", "SamplingParams",
     "SpecDecodeBackend", "StaticBackend", "sample_tokens",
 ]

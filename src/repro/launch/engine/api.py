@@ -90,6 +90,37 @@ class SamplingParams:
         return self.temperature <= 0.0
 
 
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One unit of admission work, as submitted.
+
+    ``Engine.add_request`` accepts either a bare prompt or a Request;
+    the Request form is how encoder-decoder workloads attach their
+    encoder features. The same object travels unchanged through the
+    ``ReplicaSet`` shared queue and ``DisaggregatedEngine`` migration
+    packets — validation happens once, at submission.
+
+    Parameters
+    ----------
+    prompt : sequence of int
+        Decoder prompt token ids (>= 1 token; for enc-dec models this
+        is the decoder-side prompt, e.g. whisper's task tokens).
+    sampling : SamplingParams, optional
+        Decoding parameters; defaults to ``SamplingParams()``.
+    encoder_features : array or None
+        Precomputed encoder-frontend embeddings of shape
+        ``(frames, d_model)`` — whisper log-mel conv frames or qwen2-vl
+        patch embeds per ``input_specs``. Required for enc-dec configs,
+        rejected otherwise (``Engine.check_request``). Submitting the
+        SAME array object with several requests shares one cross-KV
+        arena row by refcount (e.g. best-of-n over one audio clip).
+    """
+
+    prompt: Sequence[int]
+    sampling: Optional[SamplingParams] = None
+    encoder_features: Any = None
+
+
 @dataclasses.dataclass
 class RequestHandle:
     """Live view of one request; ``token_ids`` grows as the engine steps.
@@ -119,11 +150,16 @@ class RequestHandle:
         Wall-clock (``time.monotonic``) stamps at handle creation and at
         the first sampled token; their difference is the request's TTFT,
         aggregated into p50/p95 by ``ReplicaSet.stats()["ttft"]``.
+    encoder_features : array or None
+        The submitted ``Request.encoder_features``, carried with the
+        handle through replica queues and migration packets (the
+        cross-KV arena row is recomputed from it on (re-)admission).
     """
 
     uid: int
     prompt: list[int]
     sampling: SamplingParams
+    encoder_features: Any = None
     token_ids: list[int] = dataclasses.field(default_factory=list)
     finished: bool = False
     finish_reason: Optional[str] = None      # "length" | "stop"
@@ -238,7 +274,7 @@ class EngineConfig:
         unreferenced indexed blocks in an LRU reclaimed before the
         allocator reports exhaustion. Active only when the model's
         whole state lives in the shared pool
-        (``Model.supports_prefix_cache``); outputs are token-identical
+        (``ServingCaps.prefix_cache``); outputs are token-identical
         with it on or off.
     mesh : jax.sharding.Mesh or None
         Shard params (2-D FSDP x TP), the KV pool (head-sharded over
@@ -278,7 +314,8 @@ class EngineConfig:
     # cached prompt prefixes across requests via refcounts, prefill only
     # the non-shared suffix, keep unreferenced indexed blocks in an LRU
     # reclaimed before exhaustion. Silently inactive for models with
-    # per-slot decode state (rings/SSM) — see Model.supports_prefix_cache.
+    # per-slot decode state (rings/SSM) or cross-attention — see
+    # ServingCaps.prefix_cache.
     prefix_cache: bool = True
     # Mesh-sharded serving: when a jax.sharding.Mesh is given, the
     # backend shards params (2-D FSDP x TP rules of launch/sharding.py),
@@ -308,14 +345,17 @@ class Engine:
 
     The Engine owns request validation and the step loop; the backend
     owns device state and scheduling (admission, growth, preemption,
-    retirement). Decoder-only text LMs with relative/absent positions
-    only.
+    retirement). Three workload classes share the one stack: dense
+    decoder-only text LMs, MoE LMs (expert-sharded decode under a
+    mesh), and encoder-decoder models whose requests carry encoder
+    features (``Request.encoder_features`` -> per-slot cross-KV arena).
 
     Parameters
     ----------
     model : Model
-        The target model (decoder-only; enc-dec and absolute-position
-        models raise NotImplementedError).
+        The target model; configs without a paged decode path
+        (``ServingCaps.paged_decode`` — e.g. qwen2-vl's mrope/visual
+        prefix frontend) raise NotImplementedError.
     params
         Its parameter tree (placed onto ``cfg.mesh`` when sharded).
     cfg : EngineConfig, optional
@@ -364,14 +404,23 @@ class Engine:
         self.cfg = cfg or EngineConfig()
         self.model = model
         mc = model.cfg
-        if mc.enc_dec or mc.rope_style == "mrope" or mc.visual_prefix \
-                or mc.pos_embed != "none":
-            # pos_embed gate: the backends decode with per-row (B,)
-            # positions, which _embed's sinusoidal path would
-            # mis-broadcast (no such decoder-only config exists today)
+        self.caps = model.serving_caps()
+        if not self.caps.paged_decode:
             raise NotImplementedError(
-                "the serving engine targets decoder-only text LMs "
-                "with relative/absent positions")
+                f"no paged decode path for config {mc.family}/{mc.name}: "
+                "mrope / visual-prefix frontends (qwen2-vl) and "
+                "decoder-only absolute-position embeddings are not "
+                "served (ServingCaps.paged_decode)")
+        if self.caps.cross_attn and self.cfg.backend == "static":
+            raise ValueError(
+                "encoder-decoder serving needs the paged backend "
+                "(the cross-KV arena lives in the paged pool); use "
+                "backend='paged'")
+        if self.caps.cross_attn and self.cfg.spec_tokens > 0:
+            raise ValueError(
+                "speculative decoding is decoder-only: the verify pass "
+                "has no cross-attention path; set spec_tokens=0 for "
+                f"{mc.family}/{mc.name}")
         ctx = ctx or RunCtx(kernel_mode="ref")
         if self.cfg.mesh is not None and ctx.shard is None:
             from repro.launch.sharding import make_shard_ctx
@@ -382,6 +431,15 @@ class Engine:
             ctx = dataclasses.replace(
                 ctx, shard=shard,
                 decode_head_shard=head_shard_ok(mc, shard.tp_size))
+        # Expert-sharded decode: shard_map the MoE FFN over the model
+        # axis when the widths divide (decode/verify run at num_slots
+        # width; the scheduler drops back to GSPMD for pow-2 prefill
+        # buckets, which need not divide dp — see PagedBackend).
+        if (self.caps.moe and ctx.shard is not None
+                and self.cfg.backend == "paged"
+                and mc.n_experts % ctx.shard.tp_size == 0
+                and self.cfg.num_slots % ctx.shard.dp_size == 0):
+            ctx = dataclasses.replace(ctx, moe_sharded=True)
         if self.cfg.backend == "paged":
             if self.cfg.spec_tokens > 0:
                 from repro.launch.engine.speculative import SpecDecodeBackend
@@ -401,12 +459,16 @@ class Engine:
     # -- request lifecycle ----------------------------------------------
 
     def check_request(self, prompt: Sequence[int],
-                      sampling: SamplingParams):
+                      sampling: SamplingParams,
+                      encoder_features=None):
         """Raise ValueError when this engine could never serve the
-        request (empty prompt, position cap, backend capacity bound).
-        Shared by ``add_request`` and the ReplicaSet front-end, which
-        validates once against a representative replica before the
-        request enters the shared queue."""
+        request (empty prompt, position cap, backend capacity bound,
+        encoder features absent/present against the config's declared
+        ``ServingCaps.cross_attn``). Shared by ``add_request`` and the
+        ReplicaSet front-end, which validates once against a
+        representative replica before the request enters the shared
+        queue."""
+        mc = self.model.cfg
         if len(prompt) < 1:
             raise ValueError("empty prompt")
         if len(prompt) + sampling.max_tokens > self.cfg.max_len:
@@ -414,18 +476,52 @@ class Engine:
                 f"prompt ({len(prompt)}) + max_tokens "
                 f"({sampling.max_tokens}) exceeds max_len "
                 f"{self.cfg.max_len}")
+        if encoder_features is not None and not self.caps.cross_attn:
+            raise ValueError(
+                f"encoder features on a non-encoder-decoder config: "
+                f"{mc.family}/{mc.name} has no cross-attention "
+                f"(enc_dec=False) — drop Request.encoder_features, or "
+                f"serve an enc-dec config (e.g. whisper)")
+        if self.caps.cross_attn:
+            if encoder_features is None:
+                raise ValueError(
+                    f"encoder-decoder config {mc.family}/{mc.name} "
+                    f"needs Request.encoder_features (a "
+                    f"(frames, {mc.d_model}) array — whisper mel-conv "
+                    f"frames per input_specs); bare prompts are "
+                    f"decoder-only")
+            shape = getattr(encoder_features, "shape", None)
+            if shape is None or len(shape) != 2 or shape[1] != mc.d_model:
+                raise ValueError(
+                    f"encoder_features must be a (frames, d_model="
+                    f"{mc.d_model}) array, got shape {shape}")
+            if not 1 <= shape[0] <= mc.encoder_len:
+                raise ValueError(
+                    f"encoder_features frames ({shape[0]}) outside "
+                    f"[1, encoder_len={mc.encoder_len}] for "
+                    f"{mc.family}/{mc.name}")
         check = getattr(self.backend, "check_request", None)
         if check is not None:            # paged: worst-case pool bound
             check(len(prompt), sampling)
 
-    def add_request(self, prompt: Sequence[int],
-                    sampling: Optional[SamplingParams] = None
-                    ) -> RequestHandle:
-        """Validate and enqueue one request; returns its live handle."""
+    def add_request(self, prompt,
+                    sampling: Optional[SamplingParams] = None,
+                    encoder_features=None) -> RequestHandle:
+        """Validate and enqueue one request; returns its live handle.
+        ``prompt`` is a token-id sequence or a ``Request`` (the latter
+        carries sampling and encoder features itself)."""
+        if isinstance(prompt, Request):
+            if sampling is not None or encoder_features is not None:
+                raise ValueError("pass sampling/encoder_features inside "
+                                 "the Request, not alongside it")
+            sampling = prompt.sampling
+            encoder_features = prompt.encoder_features
+            prompt = prompt.prompt
         sampling = sampling or SamplingParams()
         prompt = list(prompt)
-        self.check_request(prompt, sampling)
-        handle = RequestHandle(self._uid, prompt, sampling)
+        self.check_request(prompt, sampling, encoder_features)
+        handle = RequestHandle(self._uid, prompt, sampling,
+                               encoder_features=encoder_features)
         self._uid += 1
         self.backend.enqueue(handle)
         return handle
@@ -466,12 +562,15 @@ class Engine:
                      "engine stalled: waiting requests cannot be admitted")
 
     def generate(self, prompts: Sequence[Sequence[int]],
-                 sampling=None, max_steps: int = 100_000
-                 ) -> list[list[int]]:
+                 sampling=None, max_steps: int = 100_000,
+                 encoder_features=None) -> list[list[int]]:
         """Submit ``prompts`` and drive to completion; returns token ids
         per prompt in submission order. ``sampling`` is one
-        SamplingParams for all or a per-prompt sequence."""
-        return run_generate(self, prompts, sampling, max_steps)
+        SamplingParams for all or a per-prompt sequence;
+        ``encoder_features`` a per-prompt sequence of feature arrays
+        for enc-dec models (entries may repeat to share arena rows)."""
+        return run_generate(self, prompts, sampling, max_steps,
+                            encoder_features=encoder_features)
 
 
 def drive(engine, max_steps: int, stall_msg: str) -> list[RequestOutput]:
@@ -491,7 +590,8 @@ def drive(engine, max_steps: int, stall_msg: str) -> list[RequestOutput]:
     return stream
 
 
-def run_generate(engine, prompts, sampling, max_steps) -> list[list[int]]:
+def run_generate(engine, prompts, sampling, max_steps,
+                 encoder_features=None) -> list[list[int]]:
     """Shared ``generate`` driver: broadcast/validate sampling params,
     submit everything, drain, collect per-prompt tokens in order."""
     if sampling is None or isinstance(sampling, SamplingParams):
@@ -499,7 +599,12 @@ def run_generate(engine, prompts, sampling, max_steps) -> list[list[int]]:
     if len(sampling) != len(prompts):
         raise ValueError(f"{len(sampling)} sampling params for "
                          f"{len(prompts)} prompts")
-    handles = [engine.add_request(p, s)
-               for p, s in zip(prompts, sampling)]
+    if encoder_features is None:
+        encoder_features = [None] * len(prompts)
+    if len(encoder_features) != len(prompts):
+        raise ValueError(f"{len(encoder_features)} encoder features for "
+                         f"{len(prompts)} prompts")
+    handles = [engine.add_request(p, s, encoder_features=f)
+               for p, s, f in zip(prompts, sampling, encoder_features)]
     engine.drain(max_steps=max_steps)
     return [list(h.token_ids) for h in handles]

@@ -206,18 +206,27 @@ class ReplicaSet:
 
     # -- request lifecycle ----------------------------------------------
 
-    def add_request(self, prompt: Sequence[int],
-                    sampling: Optional[SamplingParams] = None
-                    ) -> RequestHandle:
+    def add_request(self, prompt,
+                    sampling: Optional[SamplingParams] = None,
+                    encoder_features=None) -> RequestHandle:
         """Validate against a representative replica and append to the
-        shared FCFS queue; returns the live handle."""
+        shared FCFS queue; returns the live handle. ``prompt`` is a
+        token-id sequence or an ``api.Request``."""
+        if isinstance(prompt, api.Request):
+            if sampling is not None or encoder_features is not None:
+                raise ValueError("pass sampling/encoder_features inside "
+                                 "the Request, not alongside it")
+            sampling = prompt.sampling
+            encoder_features = prompt.encoder_features
+            prompt = prompt.prompt
         sampling = sampling or SamplingParams()
         prompt = list(prompt)
         # identical replicas: replica 0 vouches for all of them;
         # per-replica overrides: every replica must accept
         for eng in self._validators:
-            eng.check_request(prompt, sampling)
-        handle = RequestHandle(self._uid, prompt, sampling)
+            eng.check_request(prompt, sampling, encoder_features)
+        handle = RequestHandle(self._uid, prompt, sampling,
+                               encoder_features=encoder_features)
         self._uid += 1
         self._by_uid[handle.uid] = handle
         self._enq[handle.uid] = (self.steps, time.time())
@@ -388,9 +397,10 @@ class ReplicaSet:
             "on any replica")
 
     def generate(self, prompts: Sequence[Sequence[int]],
-                 sampling=None, max_steps: int = 100_000
-                 ) -> list[list[int]]:
+                 sampling=None, max_steps: int = 100_000,
+                 encoder_features=None) -> list[list[int]]:
         """Submit ``prompts`` and drive to completion; returns token ids
         per prompt in submission order (token-identical to a single
         Engine serving the same prompts)."""
-        return api.run_generate(self, prompts, sampling, max_steps)
+        return api.run_generate(self, prompts, sampling, max_steps,
+                                encoder_features=encoder_features)

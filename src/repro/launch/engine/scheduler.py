@@ -81,14 +81,24 @@ class PagedBackend:
         self.layout = paged_kv.PagedLayout(
             num_slots=cfg.num_slots, num_blocks=cfg.num_blocks,
             block_size=cfg.block_size, max_len=cfg.max_len)
+        self.caps = model.serving_caps()
         # COW prefix caching: only when EVERY layer's decode state lives
         # in the shared pool blocks (rings/SSM carries are per-slot and
         # a matched block chain cannot reconstruct them)
         self.prefix = paged_kv.PrefixIndex(cfg.block_size) \
-            if cfg.prefix_cache and model.supports_prefix_cache() else None
+            if cfg.prefix_cache and self.caps.prefix_cache else None
         self.alloc = paged_kv.BlockAllocator(
             self.layout, watermark=cfg.watermark_blocks,
             on_evict=self._on_evict if self.prefix is not None else None)
+        # Cross-KV arena (encoder-decoder): one row per resident
+        # request, refcount-shared across identical feature arrays,
+        # freed with the slot at retirement AND preemption (resume
+        # re-encodes — the recompute philosophy of the block pool).
+        self.arena = paged_kv.CrossArena(cfg.num_slots) \
+            if self.caps.cross_attn else None
+        self.arena_ids = np.zeros((cfg.num_slots,), np.int32)
+        self.enc_lengths = np.zeros((cfg.num_slots,), np.int32)
+        self.arena_hits = 0          # admissions sharing a resident row
         self.pools = model.init_paged_cache(self.layout)
         # Mesh-sharded serving: commit params and pools to their
         # NamedShardings once; shlib.jit_step pins every step's outputs
@@ -110,7 +120,14 @@ class PagedBackend:
         self.waiting: collections.deque[RequestHandle] = collections.deque()
         self.finished: list[RequestHandle] = []
         self.ragged_prefill = (cfg.bucketed_prefill
-                               and model.supports_ragged_prefill())
+                               and self.caps.ragged_prefill)
+        # Expert-sharded MoE decode runs the shard_map whose batch spec
+        # requires B to divide |dp| — true for the decode/verify widths
+        # (num_slots, checked by the Engine) but NOT for pow-2 prefill
+        # batch buckets (e.g. a single admission), so prefill keeps the
+        # unsharded expert path and lets GSPMD partition it.
+        self.prefill_ctx = dataclasses.replace(ctx, moe_sharded=False) \
+            if ctx.moe_sharded else ctx
         self.made_progress = False
         self._ticket = 0
         # telemetry
@@ -128,9 +145,16 @@ class PagedBackend:
         self.cow_copies = 0          # shared blocks copied before a write
         self.prefix_evictions = 0    # indexed blocks reclaimed by alloc
 
-        def decode_fn(params, pools, table, lengths, tokens):
-            return model.decode_step_paged(params, pools, table, lengths,
-                                           tokens, self.ctx)
+        if self.arena is not None:
+            def decode_fn(params, pools, table, lengths, tokens,
+                          arena_ids, enc_lengths):
+                return model.decode_step_paged(
+                    params, pools, table, lengths, tokens, self.ctx,
+                    arena_ids=arena_ids, enc_lengths=enc_lengths)
+        else:
+            def decode_fn(params, pools, table, lengths, tokens):
+                return model.decode_step_paged(params, pools, table,
+                                               lengths, tokens, self.ctx)
 
         self._decode = shlib.jit_step(decode_fn, self.shard,
                                       self._pool_sh, donate=(1,))
@@ -198,9 +222,12 @@ class PagedBackend:
         tokens = np.zeros((self.cfg.num_slots, 1), np.int32)
         for i in active:
             tokens[i, 0] = self.slots[i].last_token
-        logits, self.pools = self._decode(
-            self.params, self.pools, jnp.asarray(self.table),
-            jnp.asarray(self.lengths), jnp.asarray(tokens))
+        args = (self.params, self.pools, jnp.asarray(self.table),
+                jnp.asarray(self.lengths), jnp.asarray(tokens))
+        if self.arena is not None:
+            args += (jnp.asarray(self.arena_ids),
+                     jnp.asarray(self.enc_lengths))
+        logits, self.pools = self._decode(*args)
         toks = self.sampler.sample(logits)
         self.steps += 1
         self.slot_steps += len(active)
@@ -343,16 +370,29 @@ class PagedBackend:
         cap = paged_kv.blocks_for(self.cfg.max_len, bs) * bs
         return prefill_bucket(n, bs, cap)
 
-    def _admit_key(self, S: int, matched: int):
+    def _enc_bucket(self, F: int) -> int:
+        """Power-of-two bucket for an encoder frame count — its OWN
+        axis (floor 8, capped at encoder_len), so prefill traces stay
+        O(log max_len x log encoder_len) and the compile-cap gate keeps
+        both axes observable."""
+        return prefill_bucket(F, 8, self.model.cfg.encoder_len)
+
+    def _admit_key(self, S: int, matched: int, req=None):
         """The admission-trace identity: full-hit installs (no device
         call), suffix prefills batched by suffix bucket, full prefills
-        by the standard prompt bucket. Requests batch together iff
-        their keys match."""
+        by the standard prompt bucket — times the frame bucket for
+        encoder-decoder requests. Requests batch together iff their
+        keys match."""
         if matched == S:
-            return ("hit",)
-        if matched > 0:
-            return ("sfx", self._suffix_bucket(S - matched))
-        return self._bucket_key(S)
+            key = ("hit",)
+        elif matched > 0:
+            key = ("sfx", self._suffix_bucket(S - matched))
+        else:
+            key = self._bucket_key(S)
+        if self.arena is not None:
+            key = (key, "enc",
+                   self._enc_bucket(req.encoder_features.shape[0]))
+        return key
 
     def _drain_bucket_run(self):
         """Pop the maximal FCFS PREFIX of the queue that (a) fits the
@@ -379,6 +419,8 @@ class PagedBackend:
         run = []
         need = self._imminent_growth()
         key0 = None
+        arena_need = 0
+        seen_feats: set[int] = set()
         for req in self.waiting:
             if len(run) >= cap:
                 break
@@ -386,9 +428,21 @@ class PagedBackend:
             S = len(cached)
             m = self.prefix.match(cached) if self.prefix is not None \
                 else []
-            key = self._admit_key(S, len(m) * bs)
+            key = self._admit_key(S, len(m) * bs, req)
             if run and key != key0:
                 break
+            if self.arena is not None:
+                # a fresh feature array claims an arena row; identity-
+                # shared features (resident or earlier in this run) ride
+                # an existing row's refcount
+                fk = id(req.encoder_features)
+                fresh = (fk not in seen_feats and self.arena.lookup(fk)
+                         == paged_kv.NULL_ARENA)
+                if fresh and not self.arena.can_admit(arena_need + 1):
+                    break
+                if fresh:
+                    arena_need += 1
+                    seen_feats.add(fk)
             for b in m:                   # pin against mid-run reclaim
                 self.alloc.share(b)
             # + 1: the admitted slot decodes THIS step, caching the fed
@@ -448,6 +502,8 @@ class PagedBackend:
             self._ticket += 1
             self.table[i, :] = paged_kv.NULL_BLOCK
             self.table[i, :len(block_ids)] = block_ids
+            if self.arena is not None:
+                self._install_arena(i, req)
             rows.append((i, req, cached, S, block_ids))
             if self.prefix is not None:
                 self.prefix_lookups += 1
@@ -459,6 +515,8 @@ class PagedBackend:
             row_logits = self._install_hits(rows)
         elif m0:
             row_logits = self._suffix_batch(rows)
+        elif self.arena is not None:
+            row_logits = self._encdec_batch(rows)
         else:
             row_logits = self._full_batch(rows)
         self.made_progress = True          # tokens cached in all flavors
@@ -564,6 +622,89 @@ class PagedBackend:
             out[i] = row_logits[r]
         return out
 
+    def _install_arena(self, i: int, req: RequestHandle) -> int:
+        """Bind slot ``i`` to a cross-arena row: share the resident row
+        when the SAME feature array (by identity) is already encoded,
+        else claim a fresh one. The row is written by this admission's
+        prefill call (idempotently for shared rows — the encoder is
+        deterministic, so rewrites are bit-identical) and freed with the
+        slot in ``_clear_slot``."""
+        feats = req.encoder_features
+        a = self.arena.lookup(id(feats))
+        if a != paged_kv.NULL_ARENA:
+            self.arena.share(a)
+            self.arena_hits += 1
+        else:
+            a = self.arena.alloc(key=id(feats))
+        self.arena_ids[i] = a
+        self.enc_lengths[i] = feats.shape[0]
+        return a
+
+    def _encdec_batch(self, rows):
+        """Encoder-decoder admission: one right-padded batch call runs
+        the masked encoder forward, scatters each row's cross-KV into
+        its arena row and packs the ragged decoder prefill into the
+        block pool. Traces are cached per (prompt-bucket, frame-bucket,
+        batch-bucket) triple. Returns slot-indexed next-token logits."""
+        bs = self.cfg.block_size
+        _, req0, _, S0, ids0 = rows[0]
+        tok_w = self._bucket_key(S0) if self.ragged_prefill else S0
+        Fb = self._enc_bucket(req0.encoder_features.shape[0])
+        Nb = min(1 << max(len(rows) - 1, 0).bit_length(),
+                 self.cfg.num_slots)
+        fn = self._encdec_prefill(tok_w, Fb, Nb)
+        nbc = paged_kv.blocks_for(tok_w, bs)
+        d = self.model.cfg.d_model
+        toks = np.zeros((Nb, tok_w), np.int32)
+        lens = np.ones((Nb,), np.int32)    # batch fillers: harmless len 1
+        frames = np.zeros((Nb, Fb, d), np.float32)
+        enc_lens = np.zeros((Nb,), np.int32)   # fillers: fully masked
+        ids = np.full((Nb, nbc), paged_kv.NULL_BLOCK, np.int32)
+        aids = np.zeros((Nb,), np.int32)       # fillers: null arena row
+        for r, (i, req, cached, S, block_ids) in enumerate(rows):
+            toks[r, :S] = cached
+            lens[r] = S
+            F = req.encoder_features.shape[0]
+            frames[r, :F] = np.asarray(req.encoder_features,
+                                       np.float32)
+            enc_lens[r] = F
+            ids[r, :len(block_ids)] = block_ids
+            aids[r] = self.arena_ids[i]
+            self.lengths[i] = S
+            self.prefill_tokens += S
+        row_logits, self.pools = fn(
+            self.params, self.pools, jnp.asarray(toks),
+            jnp.asarray(frames), jnp.asarray(enc_lens),
+            jnp.asarray(lens), jnp.asarray(ids), jnp.asarray(aids))
+        self.prefill_calls += 1
+        self.prefill_reqs += len(rows)
+        row_logits = np.asarray(row_logits)    # (Nb, V)
+        out = np.zeros((self.cfg.num_slots,) + row_logits.shape[1:],
+                       row_logits.dtype)
+        for r, (i, *_rest) in enumerate(rows):
+            out[i] = row_logits[r]
+        return out
+
+    def _encdec_prefill(self, tok_w: int, Fb: int, Nb: int):
+        """Encoder-decoder prefill+pack, jit-cached per (prompt-bucket,
+        frame-bucket, batch-bucket) — shares ``_prefill_cache`` so the
+        compile-cap telemetry covers both axes."""
+        key = ("encdec", tok_w, Fb, Nb)
+        fn = self._prefill_cache.get(key)
+        if fn is None:
+            model, ctx = self.model, self.prefill_ctx
+
+            def prefill_fn(params, pools, tokens, frames, enc_lens,
+                           lengths, block_ids, arena_ids):
+                return model.prefill_paged_encdec(
+                    params, pools, tokens, frames, enc_lens, lengths,
+                    block_ids, arena_ids, ctx)
+
+            fn = shlib.jit_step(prefill_fn, self.shard, self._pool_sh,
+                                donate=(1,))
+            self._prefill_cache[key] = fn
+        return fn
+
     def _prefill(self, S: int, n: int):
         """Prefill+pack, jit-cached per (prompt-bucket, batch-bucket):
         prompts pad to the power-of-two BUCKET (ragged models) or stay
@@ -584,7 +725,8 @@ class PagedBackend:
         key = (Sb, Nb) if self.ragged_prefill else ("exact", S, Nb)
         fn = self._prefill_cache.get(key)
         if fn is None:
-            model, layout, ctx = self.model, self.layout, self.ctx
+            model, layout = self.model, self.layout
+            ctx = self.prefill_ctx
             ragged = self.ragged_prefill
 
             def prefill_fn(params, pools, tokens, block_ids, row_of_slot,
@@ -664,6 +806,13 @@ class PagedBackend:
         slot.shared = 0
         self.table[i, :] = paged_kv.NULL_BLOCK
         self.lengths[i] = 0
+        if self.arena is not None and self.arena_ids[i]:
+            # retirement, preemption and migration detach all land here:
+            # the arena row's refcount drops with the slot (resume
+            # re-encodes), so rows can never outlive their requests
+            self.arena.free(int(self.arena_ids[i]))
+            self.arena_ids[i] = paged_kv.NULL_ARENA
+            self.enc_lengths[i] = 0
         self.sampler.clear(i)
         self._post_clear(i)
 
@@ -714,6 +863,10 @@ class PagedBackend:
         self._ticket += 1
         self.table[i, :] = paged_kv.NULL_BLOCK
         self.table[i, :len(block_ids)] = block_ids
+        if self.arena is not None:
+            # the transport scatters the packet's cross row into this
+            # arena row right after installing the host view
+            self._install_arena(i, req)
         self.lengths[i] = length
         self.sampler.install(i, req.sampling, req._n_sampled)
         cached = (list(req.prompt) + req.token_ids)[:length]
@@ -744,6 +897,7 @@ class PagedBackend:
         self.prefix_lookups = self.prefix_hits = 0
         self.prefix_hit_tokens = 0
         self.cow_copies = self.prefix_evictions = 0
+        self.arena_hits = 0
 
     def stats(self) -> dict:
         """Cache/occupancy/scheduling telemetry for the run so far."""
@@ -770,5 +924,11 @@ class PagedBackend:
                 "evictions": self.prefix_evictions,
                 "lru_blocks": self.alloc.lru_count,
                 "suffix_compiles": len(self._suffix_cache),
+            },
+            "cross_arena": {
+                "enabled": self.arena is not None,
+                "rows_used": self.arena.used_count if self.arena else 0,
+                "rows_free": self.arena.free_count if self.arena else 0,
+                "shared_hits": self.arena_hits,
             },
         }

@@ -156,7 +156,7 @@ class DraftModelDrafter:
         # keeps a permanently unwritten position and proposal quality
         # silently erodes
         self._pending: dict[int, int] = {}
-        self.ragged = model.supports_ragged_prefill()
+        self.ragged = model.serving_caps().ragged_prefill
         self._prefill_cache = {}
 
         def dec(params, cache, tokens, pos):

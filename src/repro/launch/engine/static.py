@@ -47,7 +47,7 @@ class StaticBackend:
         self.params = params
         self.cfg = cfg
         self.ctx = ctx
-        self.ragged = model.supports_ragged_prefill()
+        self.ragged = model.serving_caps().ragged_prefill
         B = cfg.num_slots
         self.waiting: collections.deque[RequestHandle] = collections.deque()
         self.finished: list[RequestHandle] = []

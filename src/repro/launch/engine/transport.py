@@ -90,7 +90,8 @@ class MigrationPacket:
 
 
 def _pool_mask(backend):
-    """Cached block-pool/per-slot boolean tree for a backend's pools."""
+    """Cached kind-string tree ("pool" | "slot" | "cross") for a
+    backend's pools."""
     mask = getattr(backend, "_migration_mask", None)
     if mask is None:
         mask = backend.model.paged_pool_mask(backend.layout)
@@ -99,13 +100,17 @@ def _pool_mask(backend):
 
 
 def _gather_fn(backend):
-    """Cached jit: (pools, padded ids, slot) -> gathered packet state."""
+    """Cached jit: (pools, padded ids, slot, arena) -> gathered packet
+    state. The arena row index is a traced scalar like the slot (and
+    simply unused when the model has no "cross" leaves), so every
+    backend keeps the one-trace-per-direction property."""
     fn = getattr(backend, "_migration_gather", None)
     if fn is None:
         mask = _pool_mask(backend)
 
-        def gather(pools, ids, slot):
-            return paged_kv.extract_blocks(pools, mask, ids, slot)
+        def gather(pools, ids, slot, arena):
+            return paged_kv.extract_blocks(pools, mask, ids, slot,
+                                           arena=arena)
 
         fn = jax.jit(gather)
         backend._migration_gather = fn
@@ -113,15 +118,16 @@ def _gather_fn(backend):
 
 
 def _scatter_fn(backend):
-    """Cached jit: (pools, state, padded ids, slot) -> pools, with the
-    destination pools donated (same buffer-reuse pattern as the COW
-    copy) and pinned to their NamedShardings when sharded."""
+    """Cached jit: (pools, state, padded ids, slot, arena) -> pools,
+    with the destination pools donated (same buffer-reuse pattern as
+    the COW copy) and pinned to their NamedShardings when sharded."""
     fn = getattr(backend, "_migration_scatter", None)
     if fn is None:
         mask = _pool_mask(backend)
 
-        def scatter(pools, state, ids, slot):
-            return paged_kv.insert_blocks(pools, mask, state, ids, slot)
+        def scatter(pools, state, ids, slot, arena):
+            return paged_kv.insert_blocks(pools, mask, state, ids, slot,
+                                          arena=arena)
 
         if backend._pool_sh is None:
             fn = jax.jit(scatter, donate_argnums=(0,))
@@ -141,11 +147,12 @@ def _pad_ids(ids, width: int):
 
 def _payload_bytes(state, mask, n_blocks: int) -> int:
     """Useful packet bytes: real blocks of every pool leaf (padding to
-    the trace width excluded) plus the full per-slot state."""
+    the trace width excluded) plus the full per-slot and cross-arena
+    rows (each travels whole — size 1 along axis 1)."""
     total = 0
-    for leaf, pool in zip(jax.tree.leaves(state), jax.tree.leaves(mask)):
+    for leaf, kind in zip(jax.tree.leaves(state), jax.tree.leaves(mask)):
         nbytes = leaf.size * jnp.dtype(leaf.dtype).itemsize
-        if pool:
+        if kind == "pool":
             nbytes = nbytes // leaf.shape[1] * n_blocks
         total += nbytes
     return int(total)
@@ -162,8 +169,12 @@ def extract_slot(backend, i: int, *, src: int = 0) -> MigrationPacket:
     """
     req, blocks, length, last_token = backend.export_slot(i)
     width = backend.layout.max_blocks_per_seq
+    # snapshot the slot's arena binding before detach frees it (the
+    # scalar is unused in the trace for models with no "cross" leaves)
+    arena = int(backend.arena_ids[i])
     state = _gather_fn(backend)(
-        backend.pools, _pad_ids(blocks, width), jnp.int32(i))
+        backend.pools, _pad_ids(blocks, width), jnp.int32(i),
+        jnp.int32(arena))
     nbytes = _payload_bytes(state, _pool_mask(backend), len(blocks))
     backend.detach_slot(i)
     return MigrationPacket(req, length, last_token, len(blocks), state,
@@ -172,12 +183,19 @@ def extract_slot(backend, i: int, *, src: int = 0) -> MigrationPacket:
 
 def can_import(backend, packet: MigrationPacket) -> bool:
     """True when ``backend`` can land the packet now: a decode lane not
-    spoken for, and admission headroom for the chain plus this step's
+    spoken for, admission headroom for the chain plus this step's
     growth block (the watermark is waived for an idle backend — the
     same sole-request progress guarantee as ``_drain_bucket_run``, and
-    why an idle decode replica can ALWAYS take the queue head)."""
+    why an idle decode replica can ALWAYS take the queue head), and a
+    cross-arena row when the request carries encoder features and no
+    resident row already shares them."""
     if backend.num_active + len(backend.waiting) >= backend.cfg.num_slots:
         return False
+    if backend.arena is not None:
+        resident = backend.arena.lookup(id(packet.req.encoder_features))
+        if resident == paged_kv.NULL_ARENA \
+                and not backend.arena.can_admit(1):
+            return False
     need = paged_kv.blocks_for(packet.length + 1, backend.cfg.block_size)
     return backend.alloc.can_admit(need, strict=backend.num_active > 0)
 
@@ -197,6 +215,12 @@ def insert_packet(backend, packet: MigrationPacket) -> int:
     state = jax.tree.map(lambda d, p: jax.device_put(p, d.sharding),
                          backend.pools, packet.state)
     width = backend.layout.max_blocks_per_seq
+    # import_slot bound the slot to an arena row (fresh, or shared with
+    # a resident request); scattering the packet's cross row into a
+    # shared row rewrites identical content — the encoder is
+    # deterministic — so the overwrite is idempotent
+    arena = int(backend.arena_ids[i])
     backend.pools = _scatter_fn(backend)(
-        backend.pools, state, _pad_ids(ids, width), jnp.int32(i))
+        backend.pools, state, _pad_ids(ids, width), jnp.int32(i),
+        jnp.int32(arena))
     return i

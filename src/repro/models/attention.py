@@ -89,6 +89,72 @@ def attend_cross(params, cfg, x, kv_cache):
     return out @ params["wo"]
 
 
+def attend_masked(params, cfg, x, lengths):
+    """Bidirectional self-attention over a right-padded batch (the
+    encoder stack under bucketed serving admission).
+
+    x: (B, S, d) where only the first ``lengths[b]`` rows are real
+    (the rest is frame-bucket padding). Pad KEYS are masked to -inf so
+    they carry exact zero softmax mass; pad QUERY rows produce garbage
+    nobody reads (the caller consumes encoder output only at real
+    positions). Pure-jnp oracle math (kernels/ref.flash_attention with
+    a key-validity mask) — the serving paths run mode='ref' and the
+    engine/oracle identity tests rely on matching numerics.
+    """
+    B, S, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = _project_qkv(params, cfg, x, x)
+    group = hq // hkv
+    scale = float(1.0 / np.sqrt(hd))
+    kx = jnp.repeat(k.transpose(0, 2, 1, 3), group, axis=1)
+    vx = jnp.repeat(v.transpose(0, 2, 1, 3), group, axis=1)
+    logits = jnp.einsum("bqhd,bhkd->bhqk",
+                        q.astype(jnp.float32).reshape(B, S, hq, hd),
+                        kx.astype(jnp.float32)) * scale
+    valid = jnp.arange(S)[None, :] < lengths[:, None]     # (B, S) keys
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # Fully-masked rows (batch-filler lanes, lengths == 0) -> zeros.
+    probs = jnp.where(jnp.any(valid, -1)[:, None, None, None], probs, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vx.astype(jnp.float32))
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, hq * hd).astype(x.dtype)
+    return out @ params["wo"]
+
+
+def attend_cross_masked(params, cfg, x, kv_cache, enc_lengths):
+    """Cross-attention with per-row encoder-length masking.
+
+    x: (B, Sq, d); kv_cache: {"k","v"} of (B, Hkv, Senc, hd) where only
+    the first ``enc_lengths[b]`` encoder positions are real (the rest is
+    frame-bucket padding or cross-arena capacity). The -inf key masking
+    gives pads exact zero softmax mass, so real-row outputs match the
+    unpadded ``attend_cross`` at token level; fully-masked rows (empty
+    decode slots reading the null arena row) collapse to zeros instead
+    of NaN. Same oracle math as ``attend_masked``.
+    """
+    B, Sq, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ params["wq"]
+    if "bq" in params:
+        q = q + params["bq"]
+    q = q.reshape(B, Sq, hq, hd)
+    k, v = kv_cache["k"], kv_cache["v"]              # (B, Hkv, Senc, hd)
+    Senc = k.shape[2]
+    group = hq // hkv
+    scale = float(1.0 / np.sqrt(hd))
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bqhd,bhkd->bhqk", q.astype(jnp.float32),
+                        kx.astype(jnp.float32)) * scale
+    valid = jnp.arange(Senc)[None, :] < enc_lengths[:, None]    # (B, Senc)
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.any(valid, -1)[:, None, None, None], probs, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vx.astype(jnp.float32))
+    out = out.transpose(0, 2, 1, 3).reshape(B, Sq, hq * hd).astype(x.dtype)
+    return out @ params["wo"]
+
+
 def encode_cross_kv(params, cfg, enc_out):
     """Precompute cross-attention K/V from encoder output."""
     B, Senc, _ = enc_out.shape

@@ -58,17 +58,29 @@ def init_encdec(key, cfg: ModelConfig):
     }
 
 
-def encode(params, cfg: ModelConfig, frames, ctx: RunCtx):
-    """frames: (B, F, d) stub embeddings -> encoder output (B, F, d)."""
+def encode(params, cfg: ModelConfig, frames, ctx: RunCtx,
+           enc_lengths=None):
+    """frames: (B, F, d) stub embeddings -> encoder output (B, F, d).
+
+    ``enc_lengths`` ((B,) int32, optional) masks right-padding: the
+    serving engine buckets frame counts to powers of two, so pad keys
+    must carry zero attention mass for real positions to match the
+    unpadded oracle. ``None`` (training / exact-length prefill) keeps
+    the unmasked flash path.
+    """
     x = frames.astype(jnp.dtype(cfg.dtype))
     x = x + layers.sinusoidal_embed(jnp.arange(x.shape[1]), cfg.d_model,
                                     x.dtype)
 
     def body(xc, p):
         xn = layers.apply_norm(cfg.norm, p["ln1"], xc)
-        xc = xc + attn_lib.attend(p["attn"], cfg, xn,
+        if enc_lengths is None:
+            out = attn_lib.attend(p["attn"], cfg, xn,
                                   jnp.arange(xn.shape[1]), causal=False,
                                   kernel_mode=ctx.kernel_mode)
+        else:
+            out = attn_lib.attend_masked(p["attn"], cfg, xn, enc_lengths)
+        xc = xc + out
         xn = layers.apply_norm(cfg.norm, p["ln2"], xc)
         xc = xc + layers.apply_mlp(p["mlp"], xn, cfg.activation)
         return xc, None
@@ -191,3 +203,158 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, ctx: RunCtx):
     x = layers.apply_norm(cfg.norm, params["final_norm"], x)
     new_cache = {"self": new_self, "cross": cache["cross"]}
     return _logits(params, cfg, x)[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged serving (continuous batching): self-KV on the block pool,
+# cross-KV in the per-request arena
+# ---------------------------------------------------------------------------
+
+
+def init_paged_cache(cfg: ModelConfig, layout):
+    """Paged decode state for the encoder-decoder serving path.
+
+    ``{"self": {"k","v"}, "cross": {"k","v"}}`` — decoder self-attention
+    rides the standard block pool (``(L, NB, BS, Hkv, hd)``, flat
+    layer-stacked to match ``params["dec"]``); cross-attention reads the
+    per-request arena (``paged_kv.init_cross_arena``), written once at
+    admission and static thereafter. Block table and lengths live with
+    the scheduler, as in the decoder-only tree.
+    """
+    from repro.models import paged_kv
+
+    dtype = jnp.dtype(cfg.dtype)
+    shape = (cfg.n_layers, layout.num_blocks, layout.block_size,
+             cfg.n_kv_heads, cfg.head_dim)
+    return {"self": {"k": jnp.zeros(shape, dtype),
+                     "v": jnp.zeros(shape, dtype)},
+            "cross": paged_kv.init_cross_arena(cfg, layout, dtype)}
+
+
+def paged_pool_mask(cfg: ModelConfig, layout):
+    """Kind strings over ``init_paged_cache``: the decoder self-KV is
+    ``"pool"`` (block axis at axis 1), the cross arena is ``"cross"``
+    (arena-row axis at axis 1). Drives KV migration gather/scatter."""
+    return {"self": {"k": "pool", "v": "pool"},
+            "cross": {"k": "cross", "v": "cross"}}
+
+
+def paged_cache_specs(cfg: ModelConfig, layout, shard):
+    """PartitionSpecs for the encoder-decoder paged tree: self-KV pools
+    head-sharded over TP like every full-attention pool; the cross arena
+    head-sharded over TP too (arena rows stay replicated over the data
+    axes — row count is ``num_slots + 1``, which the null row keeps off
+    any pow-2 divisibility grid)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch import sharding as shlib
+
+    shapes = jax.eval_shape(lambda: init_paged_cache(cfg, layout))
+    pool = jax.tree.map(lambda t: shlib.paged_pool_spec(t, shard),
+                        shapes["self"])
+    hkv = cfg.n_kv_heads
+    tp = shard.tp_axis if hkv % shard.tp_size == 0 else None
+    cross_spec = P(None, None, tp, None, None)
+    return {"self": pool,
+            "cross": jax.tree.map(lambda t: cross_spec, shapes["cross"])}
+
+
+def prefill_paged(params, cfg: ModelConfig, pools, tokens, frames,
+                  enc_lengths, lengths, block_ids, arena_ids, ctx: RunCtx):
+    """Batched admission for encoder-decoder requests: encoder forward
+    (masked to each row's true frame count), cross-KV scattered into the
+    arena, ragged causal decoder prefill packed into the block pool.
+
+    tokens: (N, Sb) right-padded to the prompt bucket; frames:
+    (N, Fb, d) right-padded to the frame bucket; enc_lengths, lengths:
+    (N,) true frame/prompt counts; block_ids: (N, nbp) physical
+    destinations (pad tails at the null block); arena_ids: (N,)
+    destination arena rows (batch fillers at the null row). Right
+    padding is exact for the decoder — causal attention hides pad keys,
+    absolute sinusoidal positions don't shift, and pad-row K/V lands in
+    the null block — while the encoder and cross-attention mask pads
+    explicitly (bidirectional attention would otherwise see them).
+    Returns ``(row_logits (N, V) at each row's last real position,
+    new pools)``.
+    """
+    from repro.kernels import ops as kops
+    from repro.models import paged_kv
+
+    N, Sb = tokens.shape
+    bs = pools["self"]["k"].shape[2]
+    enc_out = encode(params, cfg, frames, ctx, enc_lengths=enc_lengths)
+    x = params["embed"][tokens]
+    x = x + layers.sinusoidal_embed(jnp.arange(Sb), cfg.d_model, x.dtype)
+
+    def body(xc, p):
+        cross_kv = attn_lib.encode_cross_kv(p["xattn"], cfg, enc_out)
+        xn = layers.apply_norm(cfg.norm, p["ln1"], xc)
+        q, k, v = attn_lib._project_qkv(p["attn"], cfg, xn, xn)
+        out = kops.flash_attention(q.transpose(0, 2, 1, 3),
+                                   k.transpose(0, 2, 1, 3),
+                                   v.transpose(0, 2, 1, 3), causal=True,
+                                   mode=ctx.kernel_mode)
+        out = out.transpose(0, 2, 1, 3).reshape(
+            N, Sb, cfg.n_heads * cfg.head_dim)
+        xc = xc + out @ p["attn"]["wo"]
+        xn = layers.apply_norm(cfg.norm, p["lnx"], xc)
+        xc = xc + attn_lib.attend_cross_masked(p["xattn"], cfg, xn,
+                                               cross_kv, enc_lengths)
+        xn = layers.apply_norm(cfg.norm, p["ln2"], xc)
+        xc = xc + layers.apply_mlp(p["mlp"], xn, cfg.activation)
+        return xc, {"kv": {"k": k, "v": v}, "cross": cross_kv}
+
+    x, caches = jax.lax.scan(body, x, params["dec"],
+                             unroll=True if ctx.scan_unroll else 1)
+    W = block_ids.shape[1] * bs            # cache width, block multiple
+    dense = jax.tree.map(
+        lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, W - Sb), (0, 0), (0, 0))),
+        caches["kv"])                      # (L, N, W, Hkv, hd)
+    new_self = paged_kv.pack_prefill_kv(pools["self"], dense, block_ids, bs)
+    new_cross = paged_kv.pack_cross_arena(pools["cross"], caches["cross"],
+                                          arena_ids)
+    x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = _logits(params, cfg, x)       # (N, Sb, V)
+    rows = jnp.take_along_axis(
+        logits, (lengths - 1)[:, None, None], axis=1)[:, 0]
+    return rows, {"self": new_self, "cross": new_cross}
+
+
+def decode_step_paged(params, cfg: ModelConfig, pools, block_table,
+                      lengths, tokens, arena_ids, enc_lengths,
+                      ctx: RunCtx):
+    """Shape-stable continuous-batching decode step (encoder-decoder).
+
+    tokens: (B, 1); lengths: (B,) tokens already cached per slot (the
+    new token's position, which also selects its absolute sinusoidal
+    embedding per row); arena_ids: (B,) each slot's cross-arena row
+    (empty slots at the null row 0, whose fully-masked cross read
+    collapses to zeros); enc_lengths: (B,) true encoder lengths.
+    Returns (logits (B, V), new pools) — the cross arena passes through
+    untouched (written only at admission).
+    """
+    x = params["embed"][tokens]
+    x = x + layers.sinusoidal_embed(lengths[:, None], cfg.d_model, x.dtype)
+
+    def body(xc, scanned):
+        p, self_pool, xk, xv = scanned
+        xn = layers.apply_norm(cfg.norm, p["ln1"], xc)
+        out, new_pool = attn_lib.decode_attend_paged(
+            p["attn"], cfg, xn, self_pool, block_table, lengths,
+            kernel_mode=ctx.kernel_mode)
+        xc = xc + out
+        xn = layers.apply_norm(cfg.norm, p["lnx"], xc)
+        kv = {"k": xk[arena_ids], "v": xv[arena_ids]}  # (B, Hkv, enc, hd)
+        xc = xc + attn_lib.attend_cross_masked(p["xattn"], cfg, xn, kv,
+                                               enc_lengths)
+        xn = layers.apply_norm(cfg.norm, p["ln2"], xc)
+        xc = xc + layers.apply_mlp(p["mlp"], xn, cfg.activation)
+        return xc, new_pool
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec"], pools["self"],
+                  pools["cross"]["k"], pools["cross"]["v"]),
+        unroll=True if ctx.scan_unroll else 1)
+    x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+    return _logits(params, cfg, x)[:, 0], {"self": new_self,
+                                           "cross": pools["cross"]}

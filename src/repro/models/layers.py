@@ -155,11 +155,21 @@ def sinusoidal_embed(positions, d: int, dtype=jnp.float32):
     """Whisper-style sinusoidal embeddings at (possibly traced) positions.
 
     positions: (...,) int -> (..., d).
+
+    Built as one ``where``-selected table rather than
+    ``concatenate([sin, cos])``: when a downstream matmul operand is
+    sharded on d, the SPMD partitioner miscompiles the
+    concat-on-the-sharded-axis pattern (device halves glued back in the
+    wrong order — sharded encoder outputs were off by |sin - cos|).
+    The two forms are bitwise identical; only the where form survives
+    partitioning.
     """
-    dim = jnp.arange(d // 2, dtype=jnp.float32)
-    inv = jnp.exp(-math.log(10000.0) * dim / max(d // 2 - 1, 1))
-    ang = positions[..., None].astype(jnp.float32) * inv
-    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+    half = d // 2
+    dim = jnp.arange(half, dtype=jnp.float32)
+    inv = jnp.exp(-math.log(10000.0) * dim / max(half - 1, 1))
+    idx = jnp.arange(d)
+    ang = positions[..., None].astype(jnp.float32) * inv[idx % half]
+    return jnp.where(idx < half, jnp.sin(ang), jnp.cos(ang)).astype(dtype)
 
 
 # ---------------------------------------------------------------------------

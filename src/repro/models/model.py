@@ -9,6 +9,7 @@ assignment.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any
 
 import jax
@@ -17,6 +18,43 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, ShapeCell
 from repro.models import encdec, transformer
 from repro.models.transformer import RunCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingCaps:
+    """Declared serving capabilities of one model configuration.
+
+    One surface the scheduler, speculative backend, prefix cache and
+    engine front-end all consult — replacing the ad-hoc ``supports_*``
+    predicates that each consumer used to probe separately.
+
+    Attributes
+    ----------
+    ragged_prefill : bool
+        Right-padded (bucketed) prefill is exact: causal attention
+        hides pad keys and per-row true lengths recover cache state at
+        the real boundary (encoder-decoder masks encoder pads
+        explicitly on top).
+    prefix_cache : bool
+        Block-granular KV prefix sharing is exact: every layer's decode
+        state lives IN the shared pool blocks and K/V content depends
+        only on prefix token ids + absolute positions (never true for
+        encoder-decoder — decoder K/V depends on the encoder output).
+    paged_decode : bool
+        The model has a block-paged continuous-batching decode path.
+    cross_attn : bool
+        Requests carry encoder features; decode reads the cross-KV
+        arena (encoder-decoder configs).
+    moe : bool
+        FFN layers route through experts; decode/verify may run
+        expert-sharded over the model axis under a mesh.
+    """
+
+    ragged_prefill: bool
+    prefix_cache: bool
+    paged_decode: bool
+    cross_attn: bool
+    moe: bool
 
 
 class Model:
@@ -55,26 +93,34 @@ class Model:
                                    mrope_positions=batch.get("mrope_positions"),
                                    length=length)
 
-    def supports_ragged_prefill(self) -> bool:
-        """Right-padded (bucketed) prefill is exact for this model."""
-        return (not self.cfg.enc_dec
-                and transformer.prefill_supports_ragged(self.cfg))
+    def serving_caps(self) -> ServingCaps:
+        """The declared ``ServingCaps`` for this configuration.
 
-    def supports_prefix_cache(self) -> bool:
-        """Block-granular KV prefix sharing is exact for this model:
-        every layer's decode state must live IN the shared pool blocks
-        (full attention, no sliding window), because ring buffers and
-        SSM carries are per-slot state a matched block chain cannot
-        reconstruct. K/V content then depends only on the prefix's
-        token ids and absolute positions, so blocks are content-
-        addressable by their token chunks."""
+        ``prefix_cache`` requires every layer's decode state to live IN
+        the shared pool blocks (full attention, no sliding window —
+        ring buffers and SSM carries are per-slot state a matched block
+        chain cannot reconstruct) with K/V content a pure function of
+        prefix token ids and absolute positions. ``paged_decode``
+        excludes mrope/visual-prefix frontends (qwen2-vl); absolute
+        position embeddings are served only through the encoder-decoder
+        path, whose decode threads per-row positions explicitly.
+        """
         cfg = self.cfg
-        return (not cfg.enc_dec
-                and set(cfg.block_pattern) == {"attn"}
-                and not cfg.sliding_window
-                and cfg.rope_style in ("rope", "none")
-                and cfg.pos_embed == "none"
-                and not cfg.visual_prefix)
+        return ServingCaps(
+            ragged_prefill=(cfg.enc_dec
+                            or transformer.prefill_supports_ragged(cfg)),
+            prefix_cache=(not cfg.enc_dec
+                          and set(cfg.block_pattern) == {"attn"}
+                          and not cfg.sliding_window
+                          and cfg.rope_style in ("rope", "none")
+                          and cfg.pos_embed == "none"
+                          and not cfg.visual_prefix),
+            paged_decode=(cfg.rope_style != "mrope"
+                          and not cfg.visual_prefix
+                          and (cfg.pos_embed == "none" or cfg.enc_dec)),
+            cross_attn=cfg.enc_dec,
+            moe=cfg.is_moe,
+        )
 
     def init_cache(self, batch: int, max_len: int):
         if self.cfg.enc_dec:
@@ -93,19 +139,25 @@ class Model:
 
     def init_paged_cache(self, layout):
         if self.cfg.enc_dec:
-            raise NotImplementedError("paged serving is decoder-only")
+            return encdec.init_paged_cache(self.cfg, layout)
         return transformer.init_paged_cache(self.cfg, layout)
 
     def paged_cache_specs(self, layout, shard):
         """PartitionSpecs for ``init_paged_cache`` under a mesh (block
-        pools head-sharded over TP; per-slot state on cache rules)."""
+        pools head-sharded over TP; per-slot state on cache rules; the
+        cross arena head-sharded over TP, rows replicated)."""
+        if self.cfg.enc_dec:
+            return encdec.paged_cache_specs(self.cfg, layout, shard)
         return transformer.paged_cache_specs(self.cfg, layout, shard)
 
     def paged_pool_mask(self, layout):
-        """Same-structure boolean tree over ``init_paged_cache``: True
-        on block-pool leaves, False on per-slot state — classified by
-        layer kind (see transformer.paged_pool_mask). Drives the KV
-        migration gather/scatter in launch/engine/transport.py."""
+        """Same-structure tree of kind strings over ``init_paged_cache``:
+        ``"pool"`` on block-pool leaves, ``"slot"`` on per-slot state,
+        ``"cross"`` on cross-arena leaves — classified by layer kind
+        (see transformer.paged_pool_mask). Drives the KV migration
+        gather/scatter in launch/engine/transport.py."""
+        if self.cfg.enc_dec:
+            return encdec.paged_pool_mask(self.cfg, layout)
         return transformer.paged_pool_mask(self.cfg, layout)
 
     def pack_prefill_into_paged(self, layout, pools, dense_caches,
@@ -116,8 +168,22 @@ class Model:
             self.cfg, layout, pools, dense_caches, row_of_slot, valid,
             block_ids)
 
+    def prefill_paged_encdec(self, params, pools, tokens, frames,
+                             enc_lengths, lengths, block_ids, arena_ids,
+                             ctx: RunCtx):
+        """Encoder-decoder admission: masked encoder forward, cross-KV
+        scattered into the arena rows, ragged decoder prefill packed
+        into the block pool. See encdec.prefill_paged."""
+        return encdec.prefill_paged(params, self.cfg, pools, tokens,
+                                    frames, enc_lengths, lengths,
+                                    block_ids, arena_ids, ctx)
+
     def decode_step_paged(self, params, pools, block_table, lengths, tokens,
-                          ctx: RunCtx):
+                          ctx: RunCtx, arena_ids=None, enc_lengths=None):
+        if self.cfg.enc_dec:
+            return encdec.decode_step_paged(params, self.cfg, pools,
+                                            block_table, lengths, tokens,
+                                            arena_ids, enc_lengths, ctx)
         return transformer.decode_step_paged(params, self.cfg, pools,
                                              block_table, lengths, tokens,
                                              ctx)
@@ -127,6 +193,8 @@ class Model:
         """Speculative verify: score a (B, K+1) token window in one
         pass; ``commit_fn(logits) -> (out_tokens, commit)`` is the
         accept rule traced inline. See transformer.decode_verify_paged."""
+        assert not self.cfg.enc_dec, \
+            "verify path is decoder-only (engine gates cross_attn)"
         return transformer.decode_verify_paged(
             params, self.cfg, pools, block_table, lengths, tokens,
             commit_fn, ctx)

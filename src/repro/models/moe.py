@@ -89,7 +89,23 @@ def _expert_ffn(xg, w1, w3, w2, activation="silu"):
     return jnp.einsum("ecf,efd->ecd", h, w2)
 
 
-def _moe_math(x2d, params_router, w1, w3, w2, cfg, e_lo: int, e_local: int):
+def _capacity(cfg, T: int, dropless: bool) -> int:
+    """Tokens each expert can take. ``dropless`` sizes the buffers so NO
+    assignment ever overflows (an expert holds at most T tokens — top-k
+    ids are distinct per token): per-token math then depends only on
+    that token's own hidden state, which is what the serving engine's
+    identity contract needs — outputs independent of right-padding,
+    co-batched traffic and batch width. Training keeps the
+    capacity-factor drop semantics (the Switch efficiency/auxiliary
+    story needs over-capacity tokens to actually drop)."""
+    if dropless:
+        return T
+    return max(1, int(math.ceil(T * cfg.moe_top_k / cfg.n_experts
+                                * cfg.moe_capacity_factor)))
+
+
+def _moe_math(x2d, params_router, w1, w3, w2, cfg, e_lo: int, e_local: int,
+              dropless: bool = False):
     """Shared dispatch->compute->combine on one device's experts.
 
     x2d: (T, d). Experts [e_lo, e_lo + e_local) live here. Returns the
@@ -97,7 +113,7 @@ def _moe_math(x2d, params_router, w1, w3, w2, cfg, e_lo: int, e_local: int):
     """
     T, d = x2d.shape
     E, k = cfg.n_experts, cfg.moe_top_k
-    C = max(1, int(math.ceil(T * k / E * cfg.moe_capacity_factor)))
+    C = _capacity(cfg, T, dropless)
     topi, topw, load, imp = route(x2d, params_router, k)
     se, st, order, pos = _dispatch_indices(topi, k, E, C)
     sw = topw.reshape(-1)[order]
@@ -116,12 +132,13 @@ def _moe_math(x2d, params_router, w1, w3, w2, cfg, e_lo: int, e_local: int):
     return out.astype(x2d.dtype), (load, imp)
 
 
-def apply_moe(params, cfg, x):
-    """Single-device MoE. x: (B, S, d) -> (out, aux)."""
+def apply_moe(params, cfg, x, dropless: bool = False):
+    """Single-device MoE. x: (B, S, d) -> (out, aux). ``dropless``
+    disables capacity dropping (serving paths — see ``_capacity``)."""
     B, S, d = x.shape
     out, (load, imp) = _moe_math(x.reshape(-1, d), params["router"],
                                  params["w1"], params["w3"], params["w2"],
-                                 cfg, 0, cfg.n_experts)
+                                 cfg, 0, cfg.n_experts, dropless=dropless)
     return out.reshape(B, S, d), aux_loss(load, imp)
 
 
@@ -133,7 +150,8 @@ def _dp_index(dp):
     return idx
 
 
-def apply_moe_sharded(params, cfg, x, shard, mode: str = "gather"):
+def apply_moe_sharded(params, cfg, x, shard, mode: str = "gather",
+                      dropless: bool = False):
     """EP MoE under shard_map. Two collective schedules:
 
     'gather'  (baseline, paper-faithful FSDP): expert weights are
@@ -161,7 +179,7 @@ def apply_moe_sharded(params, cfg, x, shard, mode: str = "gather"):
         w2 = jax.lax.all_gather(w2_l, dp, axis=2, tiled=True)
         e_lo = jax.lax.axis_index(tp) * e_local
         out, (load, imp) = _moe_math(x_l.reshape(-1, d), router, w1, w3, w2,
-                                     cfg, e_lo, e_local)
+                                     cfg, e_lo, e_local, dropless=dropless)
         out = jax.lax.psum(out, tp)
         load = jax.lax.pmean(load, dp)   # identical over tp already
         imp = jax.lax.pmean(imp, dp)
@@ -171,7 +189,7 @@ def apply_moe_sharded(params, cfg, x, shard, mode: str = "gather"):
         B_l, S_l, d = x_l.shape
         T = B_l * S_l
         E, k = cfg.n_experts, cfg.moe_top_k
-        C = max(1, int(math.ceil(T * k / E * cfg.moe_capacity_factor)))
+        C = _capacity(cfg, T, dropless)
         d_loc = w1_l.shape[1]
         x2 = x_l.reshape(T, d)
         topi, topw, load, imp = route(x2, router, k)

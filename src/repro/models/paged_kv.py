@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from repro.models import attention as attn_lib
 
 NULL_BLOCK = 0
+NULL_ARENA = 0
 
 
 def blocks_for(n_tokens: int, block_size: int) -> int:
@@ -334,6 +335,114 @@ class PrefixIndex:
             del kids[node.chunk]
 
 
+class CrossArena:
+    """Refcounting allocator over cross-KV arena rows 1..num_arenas.
+
+    Encoder-decoder requests carry STATIC per-request cross-attention
+    K/V (a pure function of the encoder features, written once at
+    admission by the encoder forward and read-only for the request's
+    whole decode life). That state lives in a fixed *arena*: one row of
+    ``(L, A+1, Hkv, enc_len, hd)`` per resident request, with row 0
+    reserved as the null row (retired slots point at it; its contents
+    are never read). This class is the host-side bookkeeping — the
+    cross-pool analogue of ``BlockAllocator``, with the same refcount
+    discipline so rows are SHAREABLE like prefix blocks: two live
+    requests built from the *same* encoder-feature array (``key`` is the
+    caller's identity key, e.g. ``id(features)``) share one row, because
+    the encoder is deterministic and the row is write-once.
+
+    States partition rows 1..A (asserted by ``check_invariant``):
+    **owned** (refcount >= 1, keyed) ⊎ **free** (FIFO). There is no LRU
+    tier — a row's content is recomputable from the request's features,
+    so an unreferenced row is returned immediately.
+    """
+
+    def __init__(self, num_arenas: int):
+        self.num_arenas = num_arenas
+        self._free = collections.deque(range(1, num_arenas + 1))
+        self._refs: dict[int, int] = {}      # row -> live reference count
+        self._key_of: dict[int, object] = {}  # row -> identity key
+        self._by_key: dict[object, int] = {}  # identity key -> row
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_count(self) -> int:
+        """Arena rows with at least one live reference."""
+        return len(self._refs)
+
+    def refcount(self, a: int) -> int:
+        return self._refs.get(a, 0)
+
+    def can_admit(self, n: int) -> bool:
+        """True when ``n`` fresh (non-shared) rows are allocatable."""
+        return n <= len(self._free)
+
+    def lookup(self, key) -> int:
+        """Row currently holding ``key``'s cross-KV, or ``NULL_ARENA``."""
+        return self._by_key.get(key, NULL_ARENA)
+
+    def alloc(self, key=None) -> int:
+        """Claim one exclusively-owned row (refcount 1), keyed for later
+        ``lookup`` sharing when ``key`` is given."""
+        if not self._free:
+            raise MemoryError("cross-KV arena exhausted")
+        a = self._free.popleft()
+        self._refs[a] = 1
+        if key is not None:
+            self._key_of[a] = key
+            self._by_key[key] = a
+        self.check_invariant()
+        return a
+
+    def share(self, a: int) -> int:
+        """Take one more reference on a live row (same-features request
+        admitted while the original is resident). Raises on free rows —
+        unlike pool blocks there is no LRU to revive from."""
+        if a not in self._refs:
+            raise ValueError(f"sharing unreferenced arena row {a}")
+        self._refs[a] += 1
+        return a
+
+    def free(self, a: int):
+        """Drop one reference; the LAST reference returns the row to the
+        FIFO free list and unlinks its identity key."""
+        if a == NULL_ARENA:
+            raise ValueError("freeing the reserved null arena row")
+        r = self._refs.get(a, 0)
+        if r <= 0:
+            raise ValueError(f"double-free of arena row {a}")
+        if r > 1:
+            self._refs[a] = r - 1
+        else:
+            del self._refs[a]
+            key = self._key_of.pop(a, None)
+            if key is not None:
+                self._by_key.pop(key, None)
+            self._free.append(a)
+        self.check_invariant()
+
+    def check_invariant(self):
+        """owned ⊎ free must partition rows 1..A; key maps must mirror
+        each other and only name owned rows."""
+        owned, free = set(self._refs), set(self._free)
+        if owned & free:
+            raise AssertionError(f"arena states overlap: {owned & free}")
+        universe = set(range(1, self.num_arenas + 1))
+        if (owned | free) != universe:
+            raise AssertionError(
+                f"arena lost rows: missing {universe - (owned | free)}, "
+                f"foreign {(owned | free) - universe}")
+        if not set(self._key_of) <= owned:
+            raise AssertionError("keys on non-owned arena rows")
+        if {self._by_key[k]: k for k in self._by_key} != self._key_of:
+            raise AssertionError("arena key maps out of sync")
+        if any(r < 1 for r in self._refs.values()):
+            raise AssertionError("non-positive arena refcount")
+
+
 def head_shard_ok(cfg, tp_size: int) -> bool:
     """True when the head-sharded pool layout is exact for this model:
     each device of the TP axis owns a whole kv-head shard of every block
@@ -361,6 +470,48 @@ def init_layer_pool(cfg, layout: PagedLayout, dtype, *, window=None):
     shape = (layout.num_blocks, layout.block_size, cfg.n_kv_heads,
              cfg.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_cross_arena(cfg, layout: PagedLayout, dtype):
+    """Cross-attention K/V arena for encoder-decoder serving.
+
+    One row per resident request plus the reserved null row 0:
+    ``{"k","v"}`` of ``(n_layers, num_slots + 1, Hkv, encoder_len, hd)``.
+    Rows are written ONCE at admission (the encoder forward runs inside
+    the prefill jit and scatters each layer's cross K/V, right-padded
+    from the frame bucket to ``encoder_len``) and read every decode step
+    by the cross-attention layers, masked to the request's true encoder
+    length. Host bookkeeping lives in ``CrossArena``.
+    """
+    shape = (cfg.n_layers, layout.num_slots + 1, cfg.n_kv_heads,
+             cfg.encoder_len, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def pack_cross_arena(arena, cross_kv, arena_ids):
+    """Scatter freshly encoded cross-KV rows into the arena.
+
+    arena: {"k","v"} of (L, A+1, Hkv, enc_len, hd); cross_kv: {"k","v"}
+    of (L, N, Hkv, Fb, hd) with the frame bucket Fb <= enc_len
+    (right-padded here with zeros — reads are masked to the true
+    length); arena_ids: (N,) int32 destination rows. Prefill-batch
+    filler rows point at the reserved null row 0, where their writes
+    collide harmlessly (the ``pack_prefill_kv`` argument); duplicate
+    REAL ids only occur for identity-shared features, whose rows are
+    bit-identical (deterministic encoder), so collision order there is
+    unobservable too."""
+    # .at[:, ids] indexes axis 1 with (N,) ids and expects the update
+    # shaped (L, N, Hkv, enc_len, hd) — cross_kv already matches.
+    def put(a, c):
+        pad = a.shape[3] - c.shape[3]
+        if pad:
+            widths = [(0, 0)] * c.ndim
+            widths[3] = (0, pad)
+            c = jnp.pad(c, widths)
+        return a.at[:, arena_ids].set(c)
+
+    return {"k": put(arena["k"], cross_kv["k"]),
+            "v": put(arena["v"], cross_kv["v"])}
 
 
 def init_slot_tables(layout: PagedLayout):
@@ -445,51 +596,60 @@ def pack_prefill_state(state, dense_state, row_of_slot, valid):
         state, dense_state)
 
 
-def extract_blocks(pools, is_pool, block_ids, slot):
+def extract_blocks(pools, kinds, block_ids, slot, arena=NULL_ARENA):
     """Gather ONE slot's migratable cache out of a paged tree.
 
-    ``is_pool`` is a same-structure tree of booleans (built by
-    ``transformer.paged_pool_mask`` — classified by LAYER KIND, never by
-    shape): pool leaves ``(L, NB, BS, Hkv, D)`` gather the ``block_ids``
-    rows along the block axis (axis 1, after the stacked layer-count
-    axis — the same convention ``pack_prefill_kv`` and the COW copy
-    write through); per-slot leaves (rings, SSM carries, conv tails —
-    slot axis also at axis 1) take the slot's own row, kept at size 1
-    so every leaf preserves its rank (and therefore its PartitionSpec)
+    ``kinds`` is a same-structure tree of kind strings (built by
+    ``transformer.paged_pool_mask`` / the encdec equivalent — classified
+    by LAYER KIND, never by shape): ``"pool"`` leaves
+    ``(L, NB, BS, Hkv, D)`` gather the ``block_ids`` rows along the
+    block axis (axis 1, after the stacked layer-count axis — the same
+    convention ``pack_prefill_kv`` and the COW copy write through);
+    ``"slot"`` leaves (rings, SSM carries, conv tails — slot axis also
+    at axis 1) take the slot's own row; ``"cross"`` leaves (the cross-KV
+    arena, arena-row axis at axis 1) take row ``arena`` instead — a
+    slot's arena row is an indirection through the scheduler's
+    ``arena_ids``, not the slot index. Single rows are kept at size 1 so
+    every leaf preserves its rank (and therefore its PartitionSpec)
     across the migration. ``block_ids`` is padded to a fixed width with
     the null block so the jit traces ONCE per engine; pad rows carry
     null-block content and land back in the destination's null block on
     insert. Pure function of its inputs — the source pool is never
     mutated, so the caller may free the source blocks in any order
     relative to this gather."""
-    def one(leaf, pool):
-        if pool:
+    def one(leaf, kind):
+        if kind == "pool":
             return jnp.take(leaf, block_ids, axis=1)
-        return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=1)
+        row = arena if kind == "cross" else slot
+        return jax.lax.dynamic_slice_in_dim(leaf, row, 1, axis=1)
 
-    return jax.tree.map(one, pools, is_pool)
+    return jax.tree.map(one, pools, kinds)
 
 
-def insert_blocks(pools, is_pool, packet, block_ids, slot):
+def insert_blocks(pools, kinds, packet, block_ids, slot, arena=NULL_ARENA):
     """Scatter an ``extract_blocks`` packet into a destination tree.
 
     The inverse of ``extract_blocks`` against a DIFFERENT pool: pool
     leaves scatter the packet's block rows into freshly allocated
     ``block_ids`` (pad entries point at the null block, where their
     null-content writes collide harmlessly — the ``pack_prefill_kv``
-    argument); per-slot leaves overwrite the destination slot's row.
-    Donatable: the caller's jit donates ``pools``."""
-    def one(leaf, pool, pk):
-        if pool:
+    argument); ``"slot"`` leaves overwrite the destination slot's row
+    and ``"cross"`` leaves the destination's freshly allocated ``arena``
+    row. Donatable: the caller's jit donates ``pools``."""
+    def one(leaf, kind, pk):
+        if kind == "pool":
             return leaf.at[:, block_ids].set(pk)
-        return jax.lax.dynamic_update_slice_in_dim(leaf, pk, slot, axis=1)
+        row = arena if kind == "cross" else slot
+        return jax.lax.dynamic_update_slice_in_dim(leaf, pk, row, axis=1)
 
-    return jax.tree.map(one, pools, is_pool, packet)
+    return jax.tree.map(one, pools, kinds, packet)
 
 
 __all__ = [
-    "NULL_BLOCK", "PagedLayout", "BlockAllocator", "PrefixIndex",
-    "blocks_for", "extract_blocks", "head_shard_ok", "init_layer_pool",
-    "init_slot_tables", "insert_blocks", "pack_prefill_kv",
-    "pack_prefill_ring", "pack_prefill_state", "rollback_tail",
+    "NULL_ARENA", "NULL_BLOCK", "CrossArena", "PagedLayout",
+    "BlockAllocator", "PrefixIndex", "blocks_for", "extract_blocks",
+    "head_shard_ok", "init_cross_arena", "init_layer_pool",
+    "init_slot_tables", "insert_blocks", "pack_cross_arena",
+    "pack_prefill_kv", "pack_prefill_ring", "pack_prefill_state",
+    "rollback_tail",
 ]

@@ -96,16 +96,25 @@ def _window_for(cfg, kind):
     return cfg.sliding_window
 
 
-def _ffn_part(p, cfg, x, ctx):
-    """Post-mixing FFN/MoE with pre-norm + residual. Returns (x, aux)."""
+def _ffn_part(p, cfg, x, ctx, dropless: bool = False):
+    """Post-mixing FFN/MoE with pre-norm + residual. Returns (x, aux).
+
+    ``dropless`` is set by every SERVING path (prefill-with-cache,
+    decode, verify): expert capacity is sized so no assignment ever
+    drops, making the MoE per-token — outputs independent of right-
+    padding, co-batched traffic and batch width, which the engine's
+    identity contract requires. Training keeps capacity-factor drops.
+    """
     aux = jnp.zeros((), jnp.float32)
     if "moe" in p:
         xn = layers.apply_norm(cfg.norm, p["ln2"], x)
         if ctx.moe_sharded and ctx.shard is not None:
             delta, aux = moe.apply_moe_sharded(p["moe"], cfg, xn, ctx.shard,
-                                               mode=ctx.moe_mode)
+                                               mode=ctx.moe_mode,
+                                               dropless=dropless)
         else:
-            delta, aux = moe.apply_moe(p["moe"], cfg, xn)
+            delta, aux = moe.apply_moe(p["moe"], cfg, xn,
+                                       dropless=dropless)
         x = x + delta
     elif "mlp" in p:
         xn = layers.apply_norm(cfg.norm, p["ln2"], x)
@@ -142,7 +151,7 @@ def apply_block(p, cfg: ModelConfig, kind: str, x, positions, ctx: RunCtx,
                                   mrope_positions=mrope_positions,
                                   kernel_mode=ctx.kernel_mode)
         x = _constrain_residual(x + out, ctx)
-        x, aux = _ffn_part(p, cfg, x, ctx)
+        x, aux = _ffn_part(p, cfg, x, ctx, dropless=with_cache)
         return x, aux, cache
     if kind == "rglru":
         if with_cache:
@@ -152,7 +161,7 @@ def apply_block(p, cfg: ModelConfig, kind: str, x, positions, ctx: RunCtx,
             out = ssm.apply_rglru_block(p["rec"], cfg, xn,
                                         kernel_mode=ctx.kernel_mode)
         x = _constrain_residual(x + out, ctx)
-        x, aux = _ffn_part(p, cfg, x, ctx)
+        x, aux = _ffn_part(p, cfg, x, ctx, dropless=with_cache)
         return x, aux, cache
     if kind == "mlstm":
         # NOTE: the mLSTM chunk scan stays a loop even in unrolled cost
@@ -306,12 +315,12 @@ def apply_block_decode(p, cfg: ModelConfig, kind: str, x, cache, pos,
                 p["attn"], cfg, xn, cache, pos, window=window,
                 mrope_positions=mrope_positions)
         x = x + out
-        x, _ = _ffn_part(p, cfg, x, ctx)
+        x, _ = _ffn_part(p, cfg, x, ctx, dropless=True)
         return x, cache
     if kind == "rglru":
         out, cache = ssm.apply_rglru_decode(p["rec"], cfg, xn, cache)
         x = x + out
-        x, _ = _ffn_part(p, cfg, x, ctx)
+        x, _ = _ffn_part(p, cfg, x, ctx, dropless=True)
         return x, cache
     if kind == "mlstm":
         out, cache = ssm.apply_mlstm_decode(p["mix"], cfg, xn, cache)
@@ -350,12 +359,12 @@ def apply_block_decode_paged(p, cfg: ModelConfig, kind: str, x, cache,
                 p["attn"], cfg, xn, cache, lengths, window=window,
                 mrope_positions=mrope_positions)
         x = x + out
-        x, _ = _ffn_part(p, cfg, x, ctx)
+        x, _ = _ffn_part(p, cfg, x, ctx, dropless=True)
         return x, cache
     if kind == "rglru":
         out, cache = ssm.apply_rglru_decode(p["rec"], cfg, xn, cache)
         x = x + out
-        x, _ = _ffn_part(p, cfg, x, ctx)
+        x, _ = _ffn_part(p, cfg, x, ctx, dropless=True)
         return x, cache
     if kind == "mlstm":
         out, cache = ssm.apply_mlstm_decode(p["mix"], cfg, xn, cache)
@@ -413,7 +422,7 @@ def apply_block_verify_paged(p, cfg: ModelConfig, kind: str, x, cache,
             kernel_mode=ctx.kernel_mode,
             shard=ctx.shard if ctx.decode_head_shard else None)
         x = x + out
-        x, _ = _ffn_part(p, cfg, x, ctx)
+        x, _ = _ffn_part(p, cfg, x, ctx, dropless=True)
         return x, pool
     return _decode_window_scan(p, cfg, kind, x, cache, block_table,
                                lengths, ctx)
@@ -450,22 +459,81 @@ def layer_groups(cfg: ModelConfig):
     return groups
 
 
+def layer_walk(cfg: ModelConfig):
+    """Yield ``(group_key, pattern, count)`` per scan group, in order.
+
+    THE shared walk over the stacked-group structure: every tree that
+    mirrors ``params["groups"]`` (decode caches, paged pools, masks,
+    sharding specs) is built or consumed through this generator (or
+    ``map_layer_tree`` / ``scan_groups`` on top of it), so the group/
+    pattern keying ``g{g}``/``p{pi}`` is defined in exactly one place.
+    """
+    for g, (pattern, count) in enumerate(layer_groups(cfg)):
+        yield f"g{g}", pattern, count
+
+
+def map_layer_tree(cfg: ModelConfig, fn):
+    """Build ``{gk: {pk: fn(gk, pk, kind, count)}}`` over ``layer_walk``.
+
+    The shared constructor for every same-structure side tree (caches,
+    pools, pool masks, partition specs): ``fn`` sees the group/pattern
+    keys plus the layer KIND and stack count and returns one subtree.
+    """
+    return {gk: {f"p{pi}": fn(gk, f"p{pi}", kind, count)
+                 for pi, kind in enumerate(pattern)}
+            for gk, pattern, count in layer_walk(cfg)}
+
+
+def scan_groups(params, cfg: ModelConfig, x, trees, block_fn, ctx: RunCtx):
+    """Scan ``x`` through every stacked group, threading a side tree.
+
+    The shared driver behind ``decode_step`` / ``decode_step_paged`` /
+    ``decode_verify_paged``: ``trees`` mirrors ``params["groups"]`` (a
+    decode cache or paged pool) and ``block_fn(kind, layer_params,
+    layer_tree, x) -> (x, new_layer_tree)`` is the per-layer cell.
+    Returns ``(x, new_trees)`` with ``new_trees`` same-structure.
+    """
+    new_trees = {}
+    for gk, pattern, count in layer_walk(cfg):
+        gp = params["groups"][gk]
+        gc = trees[gk]
+
+        def body(xc, scanned, pattern=pattern):
+            layer_params, layer_tree = scanned
+            new_lt = {}
+            for pi, kind in enumerate(pattern):
+                xc, nt = block_fn(kind, layer_params[f"p{pi}"],
+                                  layer_tree[f"p{pi}"], xc)
+                new_lt[f"p{pi}"] = nt
+            return xc, new_lt
+
+        x, new_gc = jax.lax.scan(body, x, (gp, gc),
+                                 unroll=True if ctx.scan_unroll else 1)
+        new_trees[gk] = new_gc
+    return x, new_trees
+
+
+def _is_pool_kind(cfg: ModelConfig, kind: str) -> bool:
+    """True for layer kinds whose decode state lives in the shared block
+    pool (full attention); windowed rings and SSM carries are per-slot."""
+    return kind in ("attn", "local") and _window_for(cfg, kind) is None
+
+
 def init_lm(key, cfg: ModelConfig):
     dtype = jnp.dtype(cfg.dtype)
     ks = jax.random.split(key, 4 + cfg.n_layers)
     params = {"embed": layers.truncated_normal_init(
         ks[0], (cfg.vocab_size, cfg.d_model), dtype, stddev=1.0)}
-    gi = 0
     ki = 1
     groups = {}
-    for g, (pattern, count) in enumerate(layer_groups(cfg)):
+    for gk, pattern, count in layer_walk(cfg):
         gp = {}
         for pi, kind in enumerate(pattern):
             stacked = [init_block(ks[ki + i], cfg, kind, dtype)
                        for i in range(count)]
             ki += count
             gp[f"p{pi}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *stacked)
-        groups[f"g{g}"] = gp
+        groups[gk] = gp
     params["groups"] = groups
     params["final_norm"] = layers.init_norm(cfg.norm, cfg.d_model, dtype)
     if not cfg.tie_embeddings:
@@ -499,8 +567,8 @@ def _apply_groups(params, cfg, x, positions, ctx, mrope_positions=None,
                   with_cache=False, cache_len=None, prefill_length=None):
     aux_total = jnp.zeros((), jnp.float32)
     caches = {}
-    for g, (pattern, count) in enumerate(layer_groups(cfg)):
-        gp = params["groups"][f"g{g}"]
+    for gk, pattern, count in layer_walk(cfg):
+        gp = params["groups"][gk]
         runs = _pattern_runs(pattern)
 
         def body(carry, layer_params, runs=runs):
@@ -546,7 +614,7 @@ def _apply_groups(params, cfg, x, positions, ctx, mrope_positions=None,
         (x, aux_total), group_caches = jax.lax.scan(
             body, (x, aux_total), gp, unroll=True if ctx.scan_unroll else 1)
         if with_cache:
-            caches[f"g{g}"] = group_caches
+            caches[gk] = group_caches
     return x, aux_total, caches if with_cache else None
 
 
@@ -630,15 +698,13 @@ def loss_fn(params, cfg: ModelConfig, batch, ctx: RunCtx):
 def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     """Stacked decode caches mirroring the group structure."""
     dtype = jnp.dtype(cfg.dtype)
-    caches = {}
-    for g, (pattern, count) in enumerate(layer_groups(cfg)):
-        gp = {}
-        for pi, kind in enumerate(pattern):
-            one = init_block_cache(cfg, kind, batch, max_len, dtype)
-            gp[f"p{pi}"] = jax.tree.map(
-                lambda t: jnp.broadcast_to(t[None], (count,) + t.shape), one)
-        caches[f"g{g}"] = gp
-    return caches
+
+    def one(gk, pk, kind, count):
+        c = init_block_cache(cfg, kind, batch, max_len, dtype)
+        return jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (count,) + t.shape), c)
+
+    return map_layer_tree(cfg, one)
 
 
 def init_paged_cache(cfg: ModelConfig, layout):
@@ -652,43 +718,38 @@ def init_paged_cache(cfg: ModelConfig, layout):
     from repro.models import paged_kv
 
     dtype = jnp.dtype(cfg.dtype)
-    pools = {}
-    for g, (pattern, count) in enumerate(layer_groups(cfg)):
-        gp = {}
-        for pi, kind in enumerate(pattern):
-            if kind in ("attn", "local"):
-                one = paged_kv.init_layer_pool(
-                    cfg, layout, dtype, window=_window_for(cfg, kind))
-            else:
-                one = init_block_cache(cfg, kind, layout.num_slots,
-                                       layout.max_len, dtype)
-            gp[f"p{pi}"] = jax.tree.map(
-                lambda t: jnp.broadcast_to(t[None], (count,) + t.shape), one)
-        pools[f"g{g}"] = gp
-    return pools
+
+    def one(gk, pk, kind, count):
+        if kind in ("attn", "local"):
+            c = paged_kv.init_layer_pool(
+                cfg, layout, dtype, window=_window_for(cfg, kind))
+        else:
+            c = init_block_cache(cfg, kind, layout.num_slots,
+                                 layout.max_len, dtype)
+        return jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (count,) + t.shape), c)
+
+    return map_layer_tree(cfg, one)
 
 
 def paged_pool_mask(cfg: ModelConfig, layout):
-    """Same-structure tree of booleans over ``init_paged_cache``: True
-    for full-attention BLOCK-POOL leaves (block axis at axis 1, after
-    the stacked layer-count axis), False for PER-SLOT state (windowed
-    rings, SSM carries, conv tails — slot axis also at axis 1). The
-    classification walks layer KINDS, exactly like ``paged_cache_specs``
-    — never shapes, so a ring buffer whose slot count happens to equal
-    the pool's block count cannot be misclassified. Consumed by
-    ``paged_kv.extract_blocks``/``insert_blocks`` (KV migration between
-    replicas)."""
+    """Same-structure tree of kind strings over ``init_paged_cache``:
+    ``"pool"`` for full-attention BLOCK-POOL leaves (block axis at
+    axis 1, after the stacked layer-count axis) and ``"slot"`` for
+    PER-SLOT state (windowed rings, SSM carries, conv tails — slot axis
+    also at axis 1). Encoder-decoder trees add ``"cross"`` for the
+    cross-KV arena (arena-row axis at axis 1). The classification walks
+    layer KINDS, exactly like ``paged_cache_specs`` — never shapes, so a
+    ring buffer whose slot count happens to equal the pool's block count
+    cannot be misclassified. Consumed by ``paged_kv.extract_blocks``/
+    ``insert_blocks`` (KV migration between replicas)."""
     shapes = jax.eval_shape(lambda: init_paged_cache(cfg, layout))
-    mask = {}
-    for g, (pattern, count) in enumerate(layer_groups(cfg)):
-        gp = {}
-        for pi, kind in enumerate(pattern):
-            flag = kind in ("attn", "local") \
-                and _window_for(cfg, kind) is None
-            gp[f"p{pi}"] = jax.tree.map(lambda t, f=flag: f,
-                                        shapes[f"g{g}"][f"p{pi}"])
-        mask[f"g{g}"] = gp
-    return mask
+
+    def one(gk, pk, kind, count):
+        tag = "pool" if _is_pool_kind(cfg, kind) else "slot"
+        return jax.tree.map(lambda t: tag, shapes[gk][pk])
+
+    return map_layer_tree(cfg, one)
 
 
 def paged_cache_specs(cfg: ModelConfig, layout, shard):
@@ -701,18 +762,15 @@ def paged_cache_specs(cfg: ModelConfig, layout, shard):
     from repro.launch import sharding as shlib
 
     shapes = jax.eval_shape(lambda: init_paged_cache(cfg, layout))
-    specs = {}
-    for g, (pattern, count) in enumerate(layer_groups(cfg)):
-        gp = {}
-        for pi, kind in enumerate(pattern):
-            sub = shapes[f"g{g}"][f"p{pi}"]
-            if kind in ("attn", "local") and _window_for(cfg, kind) is None:
-                gp[f"p{pi}"] = jax.tree.map(
-                    lambda t: shlib.paged_pool_spec(t, shard), sub)
-            else:
-                gp[f"p{pi}"] = shlib.batch_specs(sub, shard)
-        specs[f"g{g}"] = gp
-    return specs
+
+    def one(gk, pk, kind, count):
+        sub = shapes[gk][pk]
+        if _is_pool_kind(cfg, kind):
+            return jax.tree.map(
+                lambda t: shlib.paged_pool_spec(t, shard), sub)
+        return shlib.batch_specs(sub, shard)
+
+    return map_layer_tree(cfg, one)
 
 
 def pack_prefill_into_paged(cfg: ModelConfig, layout, pools, dense_caches,
@@ -729,27 +787,21 @@ def pack_prefill_into_paged(cfg: ModelConfig, layout, pools, dense_caches,
     """
     from repro.models import paged_kv
 
-    out = {}
-    for g, (pattern, count) in enumerate(layer_groups(cfg)):
-        gp = {}
-        for pi, kind in enumerate(pattern):
-            pool = pools[f"g{g}"][f"p{pi}"]
-            dense = dense_caches[f"g{g}"][f"p{pi}"]
-            if kind in ("attn", "local"):
-                if _window_for(cfg, kind) is None:
-                    gp[f"p{pi}"] = paged_kv.pack_prefill_kv(
-                        pool, dense, block_ids, layout.block_size)
-                else:
-                    gp[f"p{pi}"] = {
-                        "k": paged_kv.pack_prefill_ring(
-                            pool["k"], dense["k"], row_of_slot, valid),
-                        "v": paged_kv.pack_prefill_ring(
-                            pool["v"], dense["v"], row_of_slot, valid)}
-            else:
-                gp[f"p{pi}"] = paged_kv.pack_prefill_state(
-                    pool, dense, row_of_slot, valid)
-        out[f"g{g}"] = gp
-    return out
+    def one(gk, pk, kind, count):
+        pool = pools[gk][pk]
+        dense = dense_caches[gk][pk]
+        if kind in ("attn", "local"):
+            if _window_for(cfg, kind) is None:
+                return paged_kv.pack_prefill_kv(
+                    pool, dense, block_ids, layout.block_size)
+            return {
+                "k": paged_kv.pack_prefill_ring(
+                    pool["k"], dense["k"], row_of_slot, valid),
+                "v": paged_kv.pack_prefill_ring(
+                    pool["v"], dense["v"], row_of_slot, valid)}
+        return paged_kv.pack_prefill_state(pool, dense, row_of_slot, valid)
+
+    return map_layer_tree(cfg, one)
 
 
 def decode_step_paged(params, cfg: ModelConfig, pools, block_table, lengths,
@@ -766,24 +818,12 @@ def decode_step_paged(params, cfg: ModelConfig, pools, block_table, lengths,
         raise NotImplementedError(
             "paged decode supports decoder-only rope/none-pos models")
     x = _embed(params, cfg, tokens, shard=ctx.shard)
-    new_pools = {}
-    for g, (pattern, count) in enumerate(layer_groups(cfg)):
-        gp = params["groups"][f"g{g}"]
-        gc = pools[f"g{g}"]
 
-        def body(xc, scanned, pattern=pattern):
-            layer_params, layer_cache = scanned
-            new_lc = {}
-            for pi, kind in enumerate(pattern):
-                xc, nc = apply_block_decode_paged(
-                    layer_params[f"p{pi}"], cfg, kind, xc,
-                    layer_cache[f"p{pi}"], block_table, lengths, ctx)
-                new_lc[f"p{pi}"] = nc
-            return xc, new_lc
+    def block_fn(kind, lp, lc, xc):
+        return apply_block_decode_paged(lp, cfg, kind, xc, lc,
+                                        block_table, lengths, ctx)
 
-        x, new_gc = jax.lax.scan(body, x, (gp, gc),
-                                 unroll=True if ctx.scan_unroll else 1)
-        new_pools[f"g{g}"] = new_gc
+    x, new_pools = scan_groups(params, cfg, x, pools, block_fn, ctx)
     x = layers.apply_norm(cfg.norm, params["final_norm"], x)
     return _logits(params, cfg, x)[:, 0], new_pools
 
@@ -803,17 +843,13 @@ def select_verify_state(cfg: ModelConfig, cands, commit):
         ix = idx.reshape((1, -1, 1) + (1,) * (leaf.ndim - 3))
         return jnp.take_along_axis(leaf, ix, axis=2)[:, :, 0]
 
-    out = {}
-    for g, (pattern, count) in enumerate(layer_groups(cfg)):
-        gp = {}
-        for pi, kind in enumerate(pattern):
-            sub = cands[f"g{g}"][f"p{pi}"]
-            if kind in ("attn", "local") and _window_for(cfg, kind) is None:
-                gp[f"p{pi}"] = sub
-            else:
-                gp[f"p{pi}"] = jax.tree.map(sel, sub)
-        out[f"g{g}"] = gp
-    return out
+    def one(gk, pk, kind, count):
+        sub = cands[gk][pk]
+        if _is_pool_kind(cfg, kind):
+            return sub
+        return jax.tree.map(sel, sub)
+
+    return map_layer_tree(cfg, one)
 
 
 def decode_verify_paged(params, cfg: ModelConfig, pools, block_table,
@@ -836,24 +872,12 @@ def decode_verify_paged(params, cfg: ModelConfig, pools, block_table,
         raise NotImplementedError(
             "paged verify supports decoder-only rope/none-pos models")
     x = _embed(params, cfg, tokens, shard=ctx.shard)
-    cands = {}
-    for g, (pattern, count) in enumerate(layer_groups(cfg)):
-        gp = params["groups"][f"g{g}"]
-        gc = pools[f"g{g}"]
 
-        def body(xc, scanned, pattern=pattern):
-            layer_params, layer_cache = scanned
-            new_lc = {}
-            for pi, kind in enumerate(pattern):
-                xc, nc = apply_block_verify_paged(
-                    layer_params[f"p{pi}"], cfg, kind, xc,
-                    layer_cache[f"p{pi}"], block_table, lengths, ctx)
-                new_lc[f"p{pi}"] = nc
-            return xc, new_lc
+    def block_fn(kind, lp, lc, xc):
+        return apply_block_verify_paged(lp, cfg, kind, xc, lc,
+                                        block_table, lengths, ctx)
 
-        x, new_gc = jax.lax.scan(body, x, (gp, gc),
-                                 unroll=True if ctx.scan_unroll else 1)
-        cands[f"g{g}"] = new_gc
+    x, cands = scan_groups(params, cfg, x, pools, block_fn, ctx)
     x = layers.apply_norm(cfg.norm, params["final_norm"], x)
     logits = _logits(params, cfg, x)                  # (B, K1, V) f32
     out_tokens, commit = commit_fn(logits)
@@ -904,23 +928,11 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, ctx: RunCtx,
                 mrope_positions=None):
     """tokens: (B, 1) at position ``pos`` -> (logits (B, V), new cache)."""
     x = _embed(params, cfg, tokens, pos_offset=pos, shard=ctx.shard)
-    new_caches = {}
-    for g, (pattern, count) in enumerate(layer_groups(cfg)):
-        gp = params["groups"][f"g{g}"]
-        gc = cache[f"g{g}"]
 
-        def body(xc, scanned, pattern=pattern):
-            layer_params, layer_cache = scanned
-            new_lc = {}
-            for pi, kind in enumerate(pattern):
-                xc, nc = apply_block_decode(layer_params[f"p{pi}"], cfg, kind,
-                                            xc, layer_cache[f"p{pi}"], pos,
-                                            ctx, mrope_positions)
-                new_lc[f"p{pi}"] = nc
-            return xc, new_lc
+    def block_fn(kind, lp, lc, xc):
+        return apply_block_decode(lp, cfg, kind, xc, lc, pos, ctx,
+                                  mrope_positions)
 
-        x, new_gc = jax.lax.scan(body, x, (gp, gc),
-                                 unroll=True if ctx.scan_unroll else 1)
-        new_caches[f"g{g}"] = new_gc
+    x, new_caches = scan_groups(params, cfg, x, cache, block_fn, ctx)
     x = layers.apply_norm(cfg.norm, params["final_norm"], x)
     return _logits(params, cfg, x)[:, 0], new_caches

@@ -74,6 +74,33 @@ def test_replicaset_token_identical_to_single_engine(rng, backend):
         "least-loaded never spread across replicas"
 
 
+def test_replicaset_drafter_mix_token_identical(rng):
+    """Per-replica drafter choice (satellite): ``overrides=`` mixes a
+    speculative replica (spec_tokens=4) with a plain decode replica in
+    ONE ReplicaSet. Outputs stay bit-identical to a single plain
+    engine regardless of which replica serves a request — speculation
+    is an engine-local throughput choice, invisible in tokens (the
+    verify pass accepts exactly the plain stream)."""
+    cfg, model, params = _smoke()
+    prompts, sp = _ragged_work(cfg, rng)
+    base = dict(backend="paged", num_slots=3, block_size=4,
+                num_blocks=33, max_len=32)
+    want = Engine(model, params,
+                  EngineConfig(**base)).generate(prompts, sp)
+    rset = ReplicaSet(model, params, EngineConfig(**base), dp=2,
+                      overrides=[{"spec_tokens": 4}, {"spec_tokens": 0}])
+    assert rset.replicas[0].cfg.spec_tokens == 4
+    assert rset.replicas[1].cfg.spec_tokens == 0
+    got = rset.generate(prompts, sp)
+    assert got == want, (got, want)
+    st = rset.stats()
+    assert st["blocks_used"] == 0
+    assert all(d > 0 for d in st["dispatched"]), \
+        "mix never exercised both drafter choices"
+    assert rset.replicas[0].stats()["spec"]["proposed"] > 0, \
+        "the speculative replica never drafted"
+
+
 def test_replicaset_fcfs_fairness_under_saturation(rng):
     """Satellite invariant: with every replica saturated (1 slot each,
     12 queued requests), dispatch stays strictly FCFS — request i never

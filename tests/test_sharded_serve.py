@@ -304,3 +304,63 @@ def test_sharded_prefix_cache_token_identical():
     be.alloc.check_invariant()
     print("body ran")
     """)
+
+
+def test_sharded_moe_expert_parallel_token_identical():
+    """MoE serving under the mesh: qwen3-moe's 8 experts divide |tp|=2
+    and num_slots=4 divides |dp|=4, so the Engine flips
+    ``ctx.moe_sharded`` and decode/verify run the expert-sharded
+    shard_map FFN (prefill drops back to GSPMD — pow-2 buckets need not
+    divide dp). Same tokens as the single-device engine, greedy and
+    seeded, with dropless routing keeping expert outputs per-token on
+    both sides."""
+    _run("""
+    rng = np.random.default_rng(11)
+    cfg, model, params = setup("qwen3_moe_30b_a3b")
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, L)))
+               for L in (3, 7, 12, 5)]
+    sp = [SamplingParams(max_tokens=5),
+          SamplingParams(max_tokens=5, temperature=0.9, top_k=12, seed=3),
+          SamplingParams(max_tokens=5, temperature=1.0, top_p=0.85,
+                         seed=5),
+          SamplingParams(max_tokens=4)]
+    base = dict(num_slots=4, block_size=4, num_blocks=33, max_len=32)
+    want = Engine(model, params, EngineConfig(
+        backend="paged", **base)).generate(prompts, sp)
+    eng = Engine(model, params, EngineConfig(
+        backend="paged", mesh=MESH, **base))
+    assert eng.backend.ctx.moe_sharded
+    assert not eng.backend.prefill_ctx.moe_sharded
+    got = eng.generate(prompts, sp)
+    assert got == want, (got, want)
+    assert eng.stats()["blocks_used"] == 0
+    print("body ran")
+    """)
+
+
+def test_sharded_encdec_token_identical():
+    """Encoder-decoder serving under the mesh: the cross-KV arena is a
+    pool leaf like any other, so the whisper smoke serves token-identical
+    to the single-device engine, with the arena drained at exit."""
+    _run("""
+    rng = np.random.default_rng(12)
+    cfg, model, params = setup("whisper_base")
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, L)))
+               for L in (3, 7, 5)]
+    feats = [np.asarray(rng.normal(size=(F, cfg.d_model)), np.float32)
+             for F in (5, 16, 9)]
+    sp = [SamplingParams(max_tokens=5),
+          SamplingParams(max_tokens=5, temperature=8.0, seed=3),
+          SamplingParams(max_tokens=4, temperature=9.0, seed=5)]
+    base = dict(num_slots=3, block_size=4, num_blocks=33, max_len=32)
+    want = Engine(model, params, EngineConfig(
+        backend="paged", **base)).generate(prompts, sp,
+                                           encoder_features=feats)
+    eng = Engine(model, params, EngineConfig(
+        backend="paged", mesh=MESH, **base))
+    got = eng.generate(prompts, sp, encoder_features=feats)
+    assert got == want, (got, want)
+    assert eng.stats()["blocks_used"] == 0
+    assert eng.backend.arena.used_count == 0
+    print("body ran")
+    """)

@@ -1,0 +1,451 @@
+"""Three workload classes, one serving stack (tentpole coverage).
+
+MoE and encoder-decoder requests flow through the SAME ``Engine`` as
+dense decoder-only traffic and come out bit-identical to their dense
+``prefill`` + ``decode_step`` oracles:
+
+  * encoder-decoder (whisper smoke): requests carry encoder features
+    (``Request.encoder_features``); admission writes the cross-KV arena
+    once, decode reads it per slot; greedy AND seeded sampling match
+    the unbatched dense oracle; identical feature arrays share one
+    refcounted arena row; preemption frees rows (zero arena leaks) and
+    resume re-encodes, still bit-identical;
+  * MoE (qwen3-moe / kimi-k2 smokes): serving runs DROPLESS expert
+    capacity, so routed outputs are per-token — independent of right
+    padding, co-batched traffic and batch width — and the engine
+    matches the per-request oracle exactly, with and without
+    speculative decoding;
+  * validation: ``check_request`` rejects encoder features on
+    non-enc-dec configs and their absence on enc-dec configs with
+    errors naming the config family; static/speculative backends
+    reject cross-attention up front;
+  * compile caps: encoder frame lengths get their OWN pow-2 bucket
+    axis — prefill compiles stay O(log) per axis.
+
+Sharded variants (expert-sharded MoE decode, submesh identity) live in
+tests/test_sharded_serve.py.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.engine import (DisaggregatedEngine, Engine, EngineConfig,
+                                 ReplicaSet, SamplingParams)
+from repro.launch.engine.api import Request
+from repro.launch.engine.sampling import sample_tokens
+from repro.models import paged_kv
+from repro.models.model import Model
+from repro.models.transformer import RunCtx
+
+CTX = RunCtx(kernel_mode="ref")
+
+
+@pytest.fixture(scope="module")
+def whisper():
+    cfg = get_config("whisper_base").smoke()
+    model = Model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module", params=["qwen3_moe_30b_a3b",
+                                        "kimi_k2_1t_a32b"])
+def moe_smoke(request):
+    cfg = get_config(request.param).smoke()
+    model = Model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _frames(rng, cfg, n_frames):
+    return jnp.asarray(rng.normal(size=(n_frames, cfg.d_model)),
+                       jnp.float32)
+
+
+def _oracle(model, params, prompt, sp, frames=None, max_len=48):
+    """Unbatched dense reference: exact prefill + scalar decode loop,
+    greedy or seeded (the engine's own per-request sampler rule)."""
+    batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
+    if frames is not None:
+        batch["frames"] = frames[None]
+    logits, cache = model.prefill(params, batch, CTX, max_len=max_len)
+    row = logits[0, len(prompt) - 1]
+
+    def sample(row, step):
+        if sp.greedy:
+            return int(jnp.argmax(row))
+        return int(sample_tokens(
+            row[None].astype(jnp.float32),
+            jnp.asarray([sp.seed], jnp.int32),
+            jnp.asarray([step], jnp.int32),
+            jnp.asarray([sp.temperature], jnp.float32),
+            jnp.asarray([sp.top_k], jnp.int32),
+            jnp.asarray([sp.top_p], jnp.float32))[0])
+
+    out = [sample(row, 0)]
+    while len(out) < sp.max_tokens:
+        lg, cache = model.decode_step(
+            params, cache, jnp.asarray([[out[-1]]], jnp.int32),
+            jnp.int32(len(prompt) + len(out) - 1), CTX)
+        out.append(sample(lg[0], len(out)))
+    return out
+
+
+# -- cross-KV arena unit ------------------------------------------------
+
+
+def test_cross_arena_alloc_share_free():
+    a = paged_kv.CrossArena(3)
+    assert a.free_count == 3 and a.used_count == 0
+    r1 = a.alloc(key="feat-a")
+    r2 = a.alloc(key="feat-b")
+    assert r1 != r2 and paged_kv.NULL_ARENA not in (r1, r2)
+    assert a.lookup("feat-a") == r1
+    assert a.lookup("missing") == paged_kv.NULL_ARENA
+    a.share(r1)                            # second request, same features
+    assert a.refcount(r1) == 2 and a.used_count == 2
+    a.free(r1)
+    assert a.refcount(r1) == 1             # still resident
+    assert a.lookup("feat-a") == r1
+    a.free(r1)
+    assert a.lookup("feat-a") == paged_kv.NULL_ARENA
+    assert a.free_count == 2
+    a.check_invariant()
+
+
+def test_cross_arena_exhaustion_and_double_free():
+    a = paged_kv.CrossArena(2)
+    assert a.can_admit(2) and not a.can_admit(3)
+    r1, r2 = a.alloc(), a.alloc()
+    assert not a.can_admit(1)
+    with pytest.raises(MemoryError):
+        a.alloc()
+    a.free(r1)
+    with pytest.raises(ValueError, match="double-free"):
+        a.free(r1)
+    a.free(r2)
+    a.check_invariant()
+    assert a.free_count == 2
+
+
+# -- encoder-decoder through the Engine ---------------------------------
+
+
+def test_encdec_engine_matches_oracle_greedy_and_seeded(whisper, rng):
+    """whisper smoke through Engine.generate == dense oracle, token for
+    token, greedy and seeded (temperature high enough that the untrained
+    smoke model actually produces varied streams)."""
+    cfg, model, params = whisper
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, L)))
+               for L in (3, 7, 5, 9)]
+    feats = [_frames(rng, cfg, F) for F in (5, 16, 9, 12)]
+    sp = [SamplingParams(max_tokens=6),
+          SamplingParams(max_tokens=6, temperature=8.0, seed=3),
+          SamplingParams(max_tokens=5, temperature=10.0, top_k=32,
+                         seed=7),
+          SamplingParams(max_tokens=6)]
+    want = [_oracle(model, params, p, s, frames=f)
+            for p, s, f in zip(prompts, sp, feats)]
+    eng = Engine(model, params,
+                 EngineConfig(num_slots=3, block_size=4, num_blocks=33,
+                              max_len=32), CTX)
+    got = eng.generate(prompts, sp, encoder_features=feats)
+    assert got == want, (got, want)
+    be = eng.backend
+    assert be.alloc.free_count == be.layout.usable_blocks
+    assert be.arena.used_count == 0
+    be.arena.check_invariant()
+
+
+def test_encdec_paged_layer_parity(whisper, rng):
+    """Logit-level bar (stronger than token identity on a degenerate
+    smoke model): paged admission + paged decode reproduce the dense
+    path's logits at matched positions."""
+    cfg, model, params = whisper
+    prompt = [3, 1, 4, 1, 5]
+    S = len(prompt)
+    frames = _frames(rng, cfg, 11)
+    logits_d, cache = model.prefill(
+        params, {"tokens": jnp.asarray([prompt], jnp.int32),
+                 "frames": frames[None]}, CTX, max_len=16)
+    tok = int(jnp.argmax(logits_d[0, -1]))
+    dec_d, _ = model.decode_step(params, cache,
+                                 jnp.asarray([[tok]], jnp.int32),
+                                 jnp.int32(S), CTX)
+
+    layout = paged_kv.PagedLayout(num_slots=2, num_blocks=16,
+                                  block_size=4, max_len=16)
+    pools = model.init_paged_cache(layout)
+    Sb = 8                                 # right-padded prompt bucket
+    toks = np.zeros((2, Sb), np.int32)
+    toks[0, :S] = prompt
+    fr = np.zeros((2, 16, cfg.d_model), np.float32)
+    fr[0, :11] = np.asarray(frames)
+    rows, pools = model.prefill_paged_encdec(
+        params, pools, jnp.asarray(toks), jnp.asarray(fr),
+        jnp.asarray([11, 0], jnp.int32), jnp.asarray([S, 1], jnp.int32),
+        jnp.asarray([[1, 2], [0, 0]], jnp.int32),
+        jnp.asarray([1, 0], jnp.int32), CTX)
+    np.testing.assert_allclose(np.asarray(rows[0]),
+                               np.asarray(logits_d[0, S - 1]),
+                               rtol=1e-4, atol=1e-5)
+    table = np.full((2, layout.max_blocks_per_seq), paged_kv.NULL_BLOCK,
+                    np.int32)
+    table[0, :2] = [1, 2]
+    dec_p, _ = model.decode_step_paged(
+        params, pools, jnp.asarray(table),
+        jnp.asarray([S, 0], jnp.int32),
+        jnp.asarray([[tok], [0]], jnp.int32), CTX,
+        arena_ids=jnp.asarray([1, 0], jnp.int32),
+        enc_lengths=jnp.asarray([11, 0], jnp.int32))
+    np.testing.assert_allclose(np.asarray(dec_p[0]), np.asarray(dec_d[0]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_encdec_arena_sharing_by_identity(whisper, rng):
+    """Requests submitting the SAME feature array share one arena row
+    by refcount (best-of-n over one clip costs one encoder pass of
+    arena memory), and outputs stay per-request."""
+    cfg, model, params = whisper
+    clip = _frames(rng, cfg, 12)
+    prompts = [[1, 2, 3], [1, 2, 3], [4, 5]]
+    sp = [SamplingParams(max_tokens=5, temperature=9.0, seed=s)
+          for s in (1, 2, 3)]
+    want = [_oracle(model, params, p, s, frames=f)
+            for p, s, f in zip(prompts, sp, [clip, clip, clip])]
+    eng = Engine(model, params,
+                 EngineConfig(num_slots=3, block_size=4, num_blocks=33,
+                              max_len=32), CTX)
+    got = eng.generate(prompts, sp, encoder_features=[clip, clip, clip])
+    assert got == want, (got, want)
+    st = eng.stats()["cross_arena"]
+    assert st["shared_hits"] >= 1          # co-resident duplicates shared
+    assert st["rows_used"] == 0
+
+
+def test_encdec_preemption_zero_arena_leak(whisper, rng):
+    """Tight pool forces LIFO preemption; preempted slots free their
+    arena rows (resume re-encodes) and outputs stay bit-identical; at
+    drain both the block pool and the arena are empty."""
+    cfg, model, params = whisper
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, L)))
+               for L in (3, 7, 5, 9)]
+    feats = [_frames(rng, cfg, F) for F in (5, 16, 9, 12)]
+    sp = [SamplingParams(max_tokens=10, temperature=8.0, seed=s)
+          for s in (1, 2, 3, 4)]
+    want = [_oracle(model, params, p, s, frames=f)
+            for p, s, f in zip(prompts, sp, feats)]
+    eng = Engine(model, params,
+                 EngineConfig(num_slots=4, block_size=4, num_blocks=9,
+                              max_len=32), CTX)
+    got = eng.generate(prompts, sp, encoder_features=feats)
+    assert got == want, (got, want)
+    st = eng.stats()
+    assert st["preemptions"] > 0, "pool was not tight enough to preempt"
+    be = eng.backend
+    assert be.alloc.free_count == be.layout.usable_blocks
+    be.alloc.check_invariant()
+    assert be.arena.used_count == 0 and be.arena.free_count == 4
+    be.arena.check_invariant()
+
+
+def test_encdec_compile_cap_enc_bucket_axis(whisper, rng):
+    """Frame counts bucket on their own pow-2 axis: many distinct
+    (prompt, frame) length pairs compile O(log) x O(log) prefill
+    variants, not one per pair."""
+    cfg, model, params = whisper
+    eng = Engine(model, params,
+                 EngineConfig(num_slots=2, block_size=4, num_blocks=65,
+                              max_len=32), CTX)
+    lengths = [2, 3, 5, 7, 9, 11]
+    frame_counts = [3, 5, 7, 9, 11, 13]
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, L)))
+               for L in lengths]
+    feats = [_frames(rng, cfg, F) for F in frame_counts]
+    eng.generate(prompts, SamplingParams(max_tokens=2),
+                 encoder_features=feats)
+    # prompt buckets {4, 8, 16} x frame buckets {8, 16} x batch buckets
+    # — far below the 36 distinct (length, frames, co-batch) shapes
+    assert eng.stats()["prefill_compiles"] <= 8
+
+
+def test_encdec_through_replicaset_and_disagg(whisper, rng):
+    """Request objects travel the shared queue and migration packets
+    intact: dp=2 ReplicaSet and 1P+1D disaggregation both match the
+    single engine, and every pool/arena drains empty."""
+    cfg, model, params = whisper
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, L)))
+               for L in (3, 7, 5, 9)]
+    feats = [_frames(rng, cfg, F) for F in (5, 16, 9, 12)]
+    sp = [SamplingParams(max_tokens=6, temperature=8.0, seed=s)
+          for s in (1, 2, 3, 4)]
+    base = EngineConfig(num_slots=3, block_size=4, num_blocks=33,
+                        max_len=32)
+    want = Engine(model, params, base, CTX).generate(
+        prompts, sp, encoder_features=feats)
+    rset = ReplicaSet(model, params, base, dp=2, ctx=CTX)
+    got_r = rset.generate(prompts, sp, encoder_features=feats)
+    assert got_r == want, (got_r, want)
+    de = DisaggregatedEngine(model, params, base, dp=2, ctx=CTX)
+    got_d = de.generate(prompts, sp, encoder_features=feats)
+    assert got_d == want, (got_d, want)
+    assert de.stats()["disagg"]["imported"] >= len(prompts)
+    for front in (rset, de):
+        for eng in front.replicas:
+            be = eng.backend
+            assert be.alloc.free_count == be.layout.usable_blocks
+            be.alloc.check_invariant()
+            be.arena.check_invariant()
+            assert be.arena.used_count == 0
+
+
+# -- request validation (ServingCaps-aware) -----------------------------
+
+
+def test_check_request_rejects_features_on_decoder_only(rng):
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, EngineConfig(max_len=32), CTX)
+    feats = jnp.zeros((4, cfg.d_model), jnp.float32)
+    with pytest.raises(ValueError, match=r"dense/olmo-1b-smoke"):
+        eng.add_request([1, 2, 3], SamplingParams(max_tokens=2),
+                        encoder_features=feats)
+    with pytest.raises(ValueError, match="inside the Request"):
+        eng.add_request(Request([1, 2, 3]), SamplingParams(max_tokens=2))
+
+
+def test_check_request_requires_features_on_encdec(whisper):
+    cfg, model, params = whisper
+    eng = Engine(model, params, EngineConfig(max_len=32), CTX)
+    with pytest.raises(ValueError, match=r"audio/whisper-base-smoke"):
+        eng.add_request([1, 2, 3], SamplingParams(max_tokens=2))
+    bad_shape = jnp.zeros((4, cfg.d_model + 1), jnp.float32)
+    with pytest.raises(ValueError, match="d_model"):
+        eng.add_request([1, 2, 3], SamplingParams(max_tokens=2),
+                        encoder_features=bad_shape)
+    too_long = jnp.zeros((cfg.encoder_len + 1, cfg.d_model), jnp.float32)
+    with pytest.raises(ValueError, match="encoder_len"):
+        eng.add_request([1, 2, 3], SamplingParams(max_tokens=2),
+                        encoder_features=too_long)
+
+
+def test_encdec_rejected_by_static_and_speculative(whisper):
+    cfg, model, params = whisper
+    with pytest.raises(ValueError, match="paged backend"):
+        Engine(model, params, EngineConfig(backend="static", max_len=32),
+               CTX)
+    with pytest.raises(ValueError, match="decoder-only"):
+        Engine(model, params, EngineConfig(spec_tokens=2, max_len=32),
+               CTX)
+
+
+def test_paged_decode_gate_names_config():
+    cfg = get_config("qwen2_vl_2b").smoke()
+    model = Model(cfg)
+    assert not model.serving_caps().paged_decode
+    with pytest.raises(NotImplementedError, match="qwen2-vl-2b-smoke"):
+        Engine(model, None, EngineConfig(max_len=32), CTX)
+
+
+# -- MoE through the Engine ---------------------------------------------
+
+
+def test_moe_engine_matches_oracle_greedy_and_seeded(moe_smoke, rng):
+    """MoE serving is DROPLESS: expert capacity can never drop a token,
+    so routing is per-token and the batched, right-padded engine equals
+    the per-request dense oracle exactly — the capacity-factor C of the
+    training path would make outputs depend on co-batched traffic."""
+    cfg, model, params = moe_smoke
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, L)))
+               for L in (3, 7, 5, 12)]
+    sp = [SamplingParams(max_tokens=6),
+          SamplingParams(max_tokens=6, temperature=2.0, seed=3),
+          SamplingParams(max_tokens=5, temperature=1.0, top_k=24,
+                         seed=7),
+          SamplingParams(max_tokens=6)]
+    want = [_oracle(model, params, p, s) for p, s in zip(prompts, sp)]
+    eng = Engine(model, params,
+                 EngineConfig(num_slots=4, block_size=4, num_blocks=33,
+                              max_len=32), CTX)
+    got = eng.generate(prompts, sp)
+    assert got == want, (got, want)
+    be = eng.backend
+    assert be.alloc.free_count == be.layout.usable_blocks
+    assert be.arena is None                # no cross-KV arena for MoE
+
+
+def test_moe_decode_logit_parity_at_matched_positions(moe_smoke, rng):
+    """decode_step_paged == dense decode_step logits on an identical
+    history, at decode width > 1 (batch-width invariance of dropless
+    routing), for every co-resident row."""
+    cfg, model, params = moe_smoke
+    histories = [[5, 4, 3, 2], [9, 8, 7]]
+    layout = paged_kv.PagedLayout(num_slots=2, num_blocks=16,
+                                  block_size=4, max_len=16)
+    pools = model.init_paged_cache(layout)
+    table = np.full((2, layout.max_blocks_per_seq), paged_kv.NULL_BLOCK,
+                    np.int32)
+    dense_rows = []
+    for r, h in enumerate(histories):
+        _, cache = model.prefill(
+            params, {"tokens": jnp.asarray([h], jnp.int32)}, CTX,
+            max_len=8)
+        ids = [2 * r + 1, 2 * r + 2]
+        pools = model.pack_prefill_into_paged(
+            layout, pools, cache, jnp.asarray([0, 0], jnp.int32),
+            jnp.asarray([r == 0, r == 1]), jnp.asarray([ids], jnp.int32))
+        table[r, :2] = ids
+        lg, _ = model.decode_step(params, cache,
+                                  jnp.asarray([[1]], jnp.int32),
+                                  jnp.int32(len(h)), CTX)
+        dense_rows.append(np.asarray(lg[0]))
+    lg_p, _ = model.decode_step_paged(
+        params, pools, jnp.asarray(table),
+        jnp.asarray([len(h) for h in histories], jnp.int32),
+        jnp.asarray([[1], [1]], jnp.int32), CTX)
+    for r in range(2):
+        np.testing.assert_allclose(np.asarray(lg_p[r]), dense_rows[r],
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_moe_speculative_token_identical(rng):
+    """Expert routing through the verify window (decode_verify_paged)
+    stays dropless: speculative == plain, token for token."""
+    cfg = get_config("qwen3_moe_30b_a3b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, L)))
+               for L in (3, 7, 5)]
+    sp = [SamplingParams(max_tokens=6),
+          SamplingParams(max_tokens=6, temperature=2.0, seed=3),
+          SamplingParams(max_tokens=6)]
+    base = dict(num_slots=3, block_size=4, num_blocks=33, max_len=32)
+    want = Engine(model, params, EngineConfig(**base), CTX).generate(
+        prompts, sp)
+    got = Engine(model, params,
+                 EngineConfig(spec_tokens=3, **base), CTX).generate(
+        prompts, sp)
+    assert got == want, (got, want)
+
+
+def test_moe_dropless_is_pad_and_batch_invariant(rng):
+    """The layer-level property behind the identity tests: apply_moe
+    with dropless=True gives each token an output independent of
+    co-batched rows and right padding; the capacity path does not."""
+    from repro.models import moe
+
+    cfg = get_config("qwen3_moe_30b_a3b").smoke()
+    params = moe.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(1, 6, cfg.d_model)), jnp.float32)
+    alone, _ = moe.apply_moe(params, cfg, x, dropless=True)
+    xpad = jnp.concatenate(
+        [x, jnp.asarray(rng.normal(size=(1, 10, cfg.d_model)),
+                        jnp.float32)], axis=1)
+    padded, _ = moe.apply_moe(params, cfg, xpad, dropless=True)
+    np.testing.assert_allclose(np.asarray(alone[0]),
+                               np.asarray(padded[0, :6]),
+                               rtol=1e-5, atol=1e-6)

@@ -32,8 +32,8 @@ SECTION_RE = re.compile(
 # the public serving surface docs/serving.md defers to — these must
 # carry NumPy-style sections, not just any docstring
 NUMPY_STYLE_REQUIRED = {
-    "Engine", "SamplingParams", "RequestHandle", "RequestOutput",
-    "EngineConfig", "ReplicaSet", "SpecDecodeBackend",
+    "Engine", "Request", "SamplingParams", "RequestHandle",
+    "RequestOutput", "EngineConfig", "ReplicaSet", "SpecDecodeBackend",
     "DisaggregatedEngine",
 }
 
