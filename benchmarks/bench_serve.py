@@ -53,6 +53,13 @@ tok/s, the co-batching speedup, arena sharing/leak telemetry, and the
 bit-identity check (outputs_match) between the two replays — the
 workload-generalization contract tests/test_workload_serve.py pins.
 
+A ninth section, ``quantized``, prices the int8 paged KV pool
+(per-(token, kv-head) scales, dequant fused into the kernels —
+``EngineConfig(kv_dtype="int8")``) against the bf16 pool at equal cache
+BYTE budget on a head_dim=64 smoke variant: usable-block capacity
+ratio, tok/s for both, and the greedy token match rate vs the bf16 run
+(floor-gated by benchmarks/check_serve_regression.py).
+
 The comparison is at EQUAL CACHE MEMORY (--mem-tokens of KV capacity):
 the static engine must preallocate max_len per lane, so its batch is
 ``mem // max_len``; the paged engine spends the same tokens of pool on
@@ -659,6 +666,84 @@ def _replay_workloads(args) -> dict:
     return out
 
 
+def _pool_bytes_per_block(model, layout, spec) -> int:
+    """Bytes one physical block occupies across every full-attention
+    pool leaf (payload + scale leaves under a quantized ``spec``),
+    computed from abstract shapes — no allocation. Per-slot state
+    (rings, SSM carries) is excluded: it does not scale with the
+    block budget this section trades."""
+    shapes = jax.eval_shape(lambda: model.init_paged_cache(layout, spec))
+    mask = model.paged_pool_mask(layout, spec)
+    total = 0
+    for leaf, kind in zip(jax.tree.leaves(shapes), jax.tree.leaves(mask)):
+        if kind == "pool":
+            total += (leaf.size // leaf.shape[1]
+                      * np.dtype(leaf.dtype).itemsize)
+    return int(total)
+
+
+def _replay_quantized(args) -> dict:
+    """The ``"quantized"`` section: int8 paged KV (per-(token, kv-head)
+    scale leaves, dequant fused into the decode/verify kernels) against
+    the bf16 pool at EQUAL cache byte budget, on a head_dim=64 smoke
+    variant (the TPU lane-width-representative geometry; tiny smoke
+    head dims understate the payload ratio because the fixed 4-byte
+    scale amortizes over the head dim). The int8 engine converts the
+    byte budget into several-fold the usable blocks (3.75x vs the
+    f32-stored default pool) — the serving win is
+    CAPACITY: more concurrent tokens resident per byte. Reports the
+    usable-block capacity ratio, tok/s for both engines, the greedy
+    token-level match rate vs the bf16 run (the quality gate
+    benchmarks/check_serve_regression.py enforces a floor on), and
+    both leak counters."""
+    from repro.models import paged_kv
+
+    cfg = dataclasses.replace(get_config(args.arch).smoke(), head_dim=64)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    trace = make_trace(cfg, n_requests=args.requests, rate=args.rate,
+                       seed=args.seed + 7)
+    bs = args.block_size
+    nb_bf16 = args.mem_tokens // bs + 1
+    layout = paged_kv.PagedLayout(
+        num_slots=args.slots, num_blocks=nb_bf16, block_size=bs,
+        max_len=args.max_len)
+    spec = paged_kv.make_pool_spec(cfg, layout, kv_dtype="int8")
+    b_bf16 = _pool_bytes_per_block(model, layout, None)
+    b_int8 = _pool_bytes_per_block(model, layout, spec)
+    budget = (nb_bf16 - 1) * b_bf16        # null block excluded
+    nb_int8 = budget // b_int8 + 1
+    base = EngineConfig(
+        backend="paged", num_slots=args.slots, block_size=bs,
+        num_blocks=nb_bf16, max_len=args.max_len,
+        watermark_blocks=args.watermark)
+    eng = Engine(model, params, base)
+    h_fp: list = []
+    res_fp = _replay(eng, trace, h_fp)
+    del eng
+    qeng = Engine(model, params, dataclasses.replace(
+        base, num_blocks=int(nb_int8), kv_dtype="int8"))
+    h_q: list = []
+    res = _replay(qeng, trace, h_q)
+    matched = total = 0
+    for a, b in zip(h_fp, h_q):
+        total += max(len(a.token_ids), len(b.token_ids))
+        matched += sum(x == y for x, y in zip(a.token_ids, b.token_ids))
+    res["kv_dtype"] = "int8"
+    res["head_dim"] = cfg.head_dim
+    res["bf16_tok_s"] = res_fp["tok_s"]
+    res["bf16_blocks_leaked"] = res_fp["blocks_leaked"]
+    res["bf16_preemptions"] = res_fp["preemptions"]
+    res["bytes_per_block_bf16"] = b_bf16
+    res["bytes_per_block_int8"] = b_int8
+    res["cache_bytes_budget"] = int(budget)
+    res["usable_blocks_bf16"] = nb_bf16 - 1
+    res["usable_blocks_int8"] = int(nb_int8) - 1
+    res["capacity_ratio"] = round((nb_int8 - 1) / (nb_bf16 - 1), 4)
+    res["match_rate"] = round(matched / max(total, 1), 4)
+    return res
+
+
 def run_bench(args) -> dict:
     cfg = get_config(args.arch)
     if args.smoke:
@@ -691,6 +776,7 @@ def run_bench(args) -> dict:
     res_px = _replay_shared_prefix(model, params, args)
     res_dg = _replay_disagg(model, params, args)
     res_w = _replay_workloads(args)
+    res_q = _replay_quantized(args)
     return {
         "arch": cfg.name,
         "mem_tokens": args.mem_tokens,
@@ -702,6 +788,7 @@ def run_bench(args) -> dict:
         "shared_prefix": res_px,
         "disagg": res_dg,
         "workloads": res_w,
+        "quantized": res_q,
         "speedup": res_c["tok_s"] / max(res_s["tok_s"], 1e-9),
     }
 
@@ -731,6 +818,9 @@ def _write_json(result: dict, json_path: str):
             raise SystemExit(f"co-batching changed {cls} emitted tokens")
     if result["workloads"]["encdec"]["arena_rows_leaked"]:
         raise SystemExit("cross-KV arena leaked rows")
+    q = result["quantized"]
+    if q["blocks_leaked"] or q["bf16_blocks_leaked"]:
+        raise SystemExit("quantized section leaked blocks")
 
 
 def _emit(result: dict, json_path: str):
@@ -767,6 +857,10 @@ def _emit(result: dict, json_path: str):
                   ("serve_encdec", res_w["encdec"])):
         print(f"{nm},{r['tok_s']:.2f},{r['cache_util']:.3f},"
               f"{r['lane_eff']:.3f},{r['useful']},{r['wall_s']:.2f}")
+    res_q = result["quantized"]
+    print(f"serve_quantized,{res_q['tok_s']:.2f},"
+          f"{res_q['cache_util']:.3f},{res_q['lane_eff']:.3f},"
+          f"{res_q['useful']},{res_q['wall_s']:.2f}")
     print(f"# sharded mesh {res_m['mesh']['axes']}; "
           f"head_sharded={res_m['head_sharded']}; "
           f"per-device cache {res_m['per_device_cache']}")
@@ -819,6 +913,14 @@ def _emit(result: dict, json_path: str):
           f"{res_w['encdec']['arena_shared_hits']}, rows leaked "
           f"{res_w['encdec']['arena_rows_leaked']}, outputs_match "
           f"{res_w['encdec']['outputs_match']}")
+    print(f"# quantized kv ({res_q['kv_dtype']}, head_dim "
+          f"{res_q['head_dim']}): {res_q['usable_blocks_int8']} usable "
+          f"blocks vs {res_q['usable_blocks_bf16']} bf16 at the same "
+          f"{res_q['cache_bytes_budget']} cache bytes "
+          f"({res_q['capacity_ratio']:.2f}x capacity); "
+          f"{res_q['tok_s']:.1f} tok/s vs bf16 "
+          f"{res_q['bf16_tok_s']:.1f}; greedy match rate "
+          f"{res_q['match_rate']:.4f}")
     print(f"# equal cache budget {result['mem_tokens']} tokens; "
           f"continuous/static tokens/s: {result['speedup']:.2f}x; "
           f"mean active slots {res_c['mean_active']:.2f}; "
@@ -882,7 +984,8 @@ def run():
                     ("serve_shared_prefix", result["shared_prefix"]),
                     ("serve_disagg", result["disagg"]),
                     ("serve_moe", result["workloads"]["moe"]),
-                    ("serve_encdec", result["workloads"]["encdec"])):
+                    ("serve_encdec", result["workloads"]["encdec"]),
+                    ("serve_quantized", result["quantized"])):
         emit(name, 1e6 / max(r["tok_s"], 1e-9),
              f"tok_s={r['tok_s']:.2f} util={r['cache_util']:.3f} "
              f"preemptions={r['preemptions']} "

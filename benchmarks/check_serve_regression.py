@@ -32,6 +32,11 @@ bench) and fails on:
     the same config (bit-identity), a block or cross-KV-arena row
     leaked in either class, or an enc-dec run that shared no arena
     rows on the repeated-clip trace (identity sharing silently off).
+  * quantized-KV contract breaks: the int8 pool converting an equal
+    cache byte budget into fewer than 1.8x the bf16 usable blocks
+    (the capacity win silently gone), the greedy token match rate vs
+    the bf16 run dropping below 0.95, or a leak in either engine of
+    the section.
 
 Usage:
   python benchmarks/check_serve_regression.py \
@@ -49,7 +54,7 @@ def check(baseline: dict, fresh: dict, *, tolerance: float,
           absolute: bool) -> list[str]:
     errors = []
     for section in ("continuous", "sharded", "replicas", "speculative",
-                    "shared_prefix", "disagg"):
+                    "shared_prefix", "disagg", "quantized"):
         leaked = fresh.get(section, {}).get("blocks_leaked", 0)
         if leaked:
             errors.append(f"{section}: {leaked} blocks leaked")
@@ -200,6 +205,28 @@ def check(baseline: dict, fresh: dict, *, tolerance: float,
             errors.append("workloads/encdec: no arena rows shared on "
                           "the repeated-clip trace — feature-identity "
                           "sharing is silently off")
+    # quantized KV: the capacity claim and the quality floor are both
+    # in-process invariants (the bf16 comparison engine runs alongside),
+    # no baseline ratio needed. Skipped only when the fresh run
+    # predates the section.
+    if "quantized" in fresh:
+        q = fresh["quantized"]
+        print(f"quantized ({q['kv_dtype']}): capacity_ratio "
+              f"{q['capacity_ratio']:.3f}, match_rate "
+              f"{q['match_rate']:.4f}, tok_s {q['tok_s']:.1f} vs bf16 "
+              f"{q['bf16_tok_s']:.1f}")
+        if q["capacity_ratio"] < 1.8:
+            errors.append(
+                f"quantized: capacity ratio {q['capacity_ratio']:.3f} "
+                "< 1.8 at equal cache bytes — the int8 pool is not "
+                "converting the byte budget into blocks")
+        if q["match_rate"] < 0.95:
+            errors.append(
+                f"quantized: greedy token match rate "
+                f"{q['match_rate']:.4f} < 0.95 vs the bf16 engine — "
+                "quantization error is changing outputs beyond the gate")
+        if q["bf16_blocks_leaked"]:
+            errors.append("quantized: bf16 comparison run leaked blocks")
     return errors
 
 

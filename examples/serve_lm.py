@@ -62,6 +62,13 @@ def main():
                          "decode replicas import them — outputs stay "
                          "bit-identical, stats() grows a 'disagg' "
                          "section")
+    ap.add_argument("--kv-dtype", choices=("bf16", "int8", "fp8"),
+                    default="bf16",
+                    help="paged KV pool storage precision: int8/fp8 "
+                         "store quantized blocks with per-(token, head) "
+                         "scales, dequant fused into the kernels "
+                         "(several-fold cache capacity per byte; paged backend "
+                         "only)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace for CI")
     args = ap.parse_args()
@@ -88,7 +95,7 @@ def main():
     ecfg = EngineConfig(
         backend=args.backend, num_slots=args.slots, block_size=16,
         num_blocks=args.mem_tokens // 16 + 1, max_len=128,
-        spec_tokens=args.spec_tokens)
+        spec_tokens=args.spec_tokens, kv_dtype=args.kv_dtype)
     if args.roles is not None:
         roles = args.roles if args.roles == "auto" \
             else tuple(args.roles.split(","))

@@ -19,6 +19,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ref as _ref
 from .flash_attention import flash_attention_pallas
@@ -125,31 +126,104 @@ def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
     return out[:, :, :sq0]
 
 
+def paged_attention(q, pool, block_table, lengths, *, mode="decode",
+                    window=None, scale=None, kernel_mode="auto",
+                    sharding=None, tp_axis="model", kv_format=None,
+                    interpret=False):
+    """ONE entry point for paged attention over a pool dict.
+
+    Unifies what used to be four call sites (decode / verify, plain /
+    head-sharded) behind a single dispatcher, so quantized pools and
+    lane-padded layouts plug in without new entry points:
+
+    * ``mode="decode"`` — q: (B, Hq, D), one query row per slot at
+      position ``lengths[b] - 1``; ``mode="verify"`` — q: (B, K1, Hq, D)
+      speculative K+1 query rows, ``lengths`` counting tokens cached
+      BEFORE the window.
+    * ``pool`` — the per-layer pool dict ``{"k", "v"}``; a quantized
+      pool also carries ``k_scale``/``v_scale`` (NB, BS, Hkv) f32
+      leaves, detected here and fused into whichever backend runs.
+    * ``sharding`` — None for single-device, or an object with ``mesh``
+      / ``tp_axis`` attributes (e.g. ``ShardCtx``) for the head-sharded
+      shard_map path (scales shard over Hkv with the payload).
+    * ``kv_format`` — the pool's ``paged_kv.PoolSpec`` (or None). Used
+      for the lane-padding contract: when blocks are physically wider
+      than the model head dim (``padded_head_dim``), q is zero-padded to
+      the block width and the output sliced back; the softmax scale
+      ALWAYS derives from the logical head dim. The spec is advisory —
+      quantization is detected from the pool leaves — so bf16 callers
+      may pass None.
+    * ``kernel_mode`` — the usual backend switch ('auto' / 'pallas' /
+      'interpret' / 'ref'), oracle and Pallas paths taking identical
+      arguments.
+    """
+    if mode not in ("decode", "verify"):
+        raise ValueError(f"mode must be 'decode' or 'verify', got {mode!r}")
+    k_pool, v_pool = pool["k"], pool["v"]
+    k_scale, v_scale = pool.get("k_scale"), pool.get("v_scale")
+    D = q.shape[-1]
+    Dp = k_pool.shape[-1]
+    if scale is None:
+        scale = float(1.0 / np.sqrt(D))   # logical head dim, pre-padding
+    if Dp != D:
+        widths = [(0, 0)] * (q.ndim - 1) + [(0, Dp - D)]
+        q = jnp.pad(q, widths)
+    use, interp = _use_pallas(kernel_mode)
+    interp = interp or interpret
+    decode = mode == "decode"
+    if sharding is not None:
+        if not use and not interp:
+            attend = _ref.paged_decode_attention if decode \
+                else _ref.paged_verify_attention
+        else:
+            attend = functools.partial(
+                paged_decode_attention_pallas if decode
+                else paged_verify_attention_pallas, interpret=interp)
+        fn = _pa_headshard if decode else _pv_headshard
+        out = fn(q, k_pool, v_pool, block_table, lengths,
+                 mesh=sharding.mesh,
+                 tp_axis=getattr(sharding, "tp_axis", tp_axis),
+                 window=window, scale=scale, attend=attend,
+                 k_scale=k_scale, v_scale=v_scale)
+    elif not use and not interp:
+        fn = _ref.paged_decode_attention if decode \
+            else _ref.paged_verify_attention
+        out = fn(q, k_pool, v_pool, block_table, lengths, window=window,
+                 scale=scale, k_scale=k_scale, v_scale=v_scale)
+    else:
+        fn = paged_decode_attention_pallas if decode \
+            else paged_verify_attention_pallas
+        out = fn(q, k_pool, v_pool, block_table, lengths, window=window,
+                 scale=scale, k_scale=k_scale, v_scale=v_scale,
+                 interpret=interp)
+    return out[..., :D] if Dp != D else out
+
+
+# -- thin deprecated aliases (one-PR deprecation window) --------------------
+# The four historical entry points forward to ``paged_attention``; new
+# call sites should use the dispatcher directly.
+
+
 def paged_decode_attention(q, k_pool, v_pool, block_table, lengths, *,
                            window=None, scale=None, mode="auto",
                            interpret=False):
-    """Single-token decode attention over a block-paged KV pool.
+    """Deprecated alias: ``paged_attention(..., mode="decode")``.
 
     q: (B, Hq, D); k_pool/v_pool: (NB, BS, Hkv, D); block_table:
     (B, NBMAX) int32; lengths: (B,) int32 valid tokens per sequence
     (including the current token). No padding pass is needed: the pool is
     block-shaped by construction and raggedness is masked in-kernel.
     """
-    use, interp = _use_pallas(mode)
-    interp = interp or interpret
-    if not use and not interp:
-        return _ref.paged_decode_attention(q, k_pool, v_pool, block_table,
-                                           lengths, window=window,
-                                           scale=scale)
-    return paged_decode_attention_pallas(q, k_pool, v_pool, block_table,
-                                         lengths, window=window, scale=scale,
-                                         interpret=interp)
+    return paged_attention(q, {"k": k_pool, "v": v_pool}, block_table,
+                           lengths, mode="decode", window=window,
+                           scale=scale, kernel_mode=mode,
+                           interpret=interpret)
 
 
 def paged_verify_attention(q, k_pool, v_pool, block_table, lengths, *,
                            window=None, scale=None, mode="auto",
                            interpret=False):
-    """Multi-query-per-slot decode attention (speculative verify step).
+    """Deprecated alias: ``paged_attention(..., mode="verify")``.
 
     q: (B, K1, Hq, D) — K+1 query rows per sequence at positions
     ``lengths[b] + j``, whose K/V are already written to the pool;
@@ -158,54 +232,47 @@ def paged_verify_attention(q, k_pool, v_pool, block_table, lengths, *,
     window), so each row is equivalent to ``paged_decode_attention`` at
     its own length while every pool block is fetched once for all rows.
     """
-    use, interp = _use_pallas(mode)
-    interp = interp or interpret
-    if not use and not interp:
-        return _ref.paged_verify_attention(q, k_pool, v_pool, block_table,
-                                           lengths, window=window,
-                                           scale=scale)
-    return paged_verify_attention_pallas(q, k_pool, v_pool, block_table,
-                                         lengths, window=window,
-                                         scale=scale, interpret=interp)
+    return paged_attention(q, {"k": k_pool, "v": v_pool}, block_table,
+                           lengths, mode="verify", window=window,
+                           scale=scale, kernel_mode=mode,
+                           interpret=interpret)
+
+
+class _MeshSharding:
+    """Minimal ``sharding`` adapter for the deprecated headshard aliases
+    (the dispatcher wants an object with ``mesh``/``tp_axis``)."""
+
+    def __init__(self, mesh, tp_axis):
+        self.mesh = mesh
+        self.tp_axis = tp_axis
 
 
 def paged_decode_attention_headshard(q, k_pool, v_pool, block_table,
                                      lengths, *, mesh, tp_axis="model",
                                      window=None, scale=None, mode="auto",
                                      interpret=False):
-    """Head-sharded multi-device paged decode attention: each device of
-    ``tp_axis`` runs the stock per-shard op over its kv-head shard of
-    every block (see kernels/paged_attention.py). Same backend dispatch
-    as ``paged_decode_attention``, applied per shard."""
-    use, interp = _use_pallas(mode)
-    interp = interp or interpret
-    if not use and not interp:
-        attend = _ref.paged_decode_attention
-    else:
-        attend = functools.partial(paged_decode_attention_pallas,
-                                   interpret=interp)
-    return _pa_headshard(q, k_pool, v_pool, block_table, lengths,
-                         mesh=mesh, tp_axis=tp_axis, window=window,
-                         scale=scale, attend=attend)
+    """Deprecated alias: ``paged_attention(..., mode="decode",
+    sharding=...)`` — head-sharded multi-device paged decode attention
+    (see kernels/paged_attention.py for the layout argument)."""
+    return paged_attention(q, {"k": k_pool, "v": v_pool}, block_table,
+                           lengths, mode="decode", window=window,
+                           scale=scale, kernel_mode=mode,
+                           sharding=_MeshSharding(mesh, tp_axis),
+                           interpret=interpret)
 
 
 def paged_verify_attention_headshard(q, k_pool, v_pool, block_table,
                                      lengths, *, mesh, tp_axis="model",
                                      window=None, scale=None, mode="auto",
                                      interpret=False):
-    """Head-sharded multi-device multi-query verify attention — the
-    speculative window over the head-sharded pool, per-shard dispatch
-    mirroring ``paged_decode_attention_headshard``."""
-    use, interp = _use_pallas(mode)
-    interp = interp or interpret
-    if not use and not interp:
-        attend = _ref.paged_verify_attention
-    else:
-        attend = functools.partial(paged_verify_attention_pallas,
-                                   interpret=interp)
-    return _pv_headshard(q, k_pool, v_pool, block_table, lengths,
-                         mesh=mesh, tp_axis=tp_axis, window=window,
-                         scale=scale, attend=attend)
+    """Deprecated alias: ``paged_attention(..., mode="verify",
+    sharding=...)`` — head-sharded multi-device multi-query verify
+    attention over the speculative window."""
+    return paged_attention(q, {"k": k_pool, "v": v_pool}, block_table,
+                           lengths, mode="verify", window=window,
+                           scale=scale, kernel_mode=mode,
+                           sharding=_MeshSharding(mesh, tp_axis),
+                           interpret=interpret)
 
 
 def _finalize_expansion(lanes):

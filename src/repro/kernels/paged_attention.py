@@ -29,12 +29,36 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.compat import TPUCompilerParams
+
 from .flash_attention import MASK_VALUE
 
+# Megacore work split: the batch axis is embarrassingly parallel (each
+# sequence owns its own online-softmax scratch); the kv-block axis is
+# sequential by construction. Interpret mode ignores compiler params.
+_MEGACORE = TPUCompilerParams(
+    dimension_semantics=("parallel", "arbitrary"))
 
-def _pa_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-               m_ref, l_ref, acc_ref, *, scale, window, block_size,
-               hkv, group, nb):
+
+def _dequant(ref, scale_ref):
+    """Load one (BS, Hkv, D) block in f32, fusing the per-(token, head)
+    dequant multiply when the pool carries int8/fp8 payload + scales —
+    the fp copy of the block exists only in VMEM registers, never in
+    HBM."""
+    x = ref[0].astype(jnp.float32)
+    if scale_ref is not None:
+        x = x * scale_ref[0][..., None]                 # (BS, Hkv, 1)
+    return x
+
+
+def _pa_kernel(bt_ref, len_ref, *refs, scale, window, block_size,
+               hkv, group, nb, quantized):
+    if quantized:
+        (q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+         m_ref, l_ref, acc_ref) = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        ks_ref = vs_ref = None
     b = pl.program_id(0)
     i = pl.program_id(1)
 
@@ -55,8 +79,8 @@ def _pa_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     def _block():
         hq = hkv * group
         q = q_ref[0].astype(jnp.float32)                # (Hq, D)
-        k = k_ref[0].astype(jnp.float32)                # (BS, Hkv, D)
-        v = v_ref[0].astype(jnp.float32)
+        k = _dequant(k_ref, ks_ref)                     # (BS, Hkv, D)
+        v = _dequant(v_ref, vs_ref)
         d = q.shape[-1]
         qg = q.reshape(hkv, group, d)
         kt = k.transpose(1, 0, 2)                       # (Hkv, BS, D)
@@ -91,26 +115,39 @@ def _pa_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_decode_attention_pallas(q, k_pool, v_pool, block_table, lengths, *,
-                                  window=None, scale=None, interpret=False):
+                                  window=None, scale=None, k_scale=None,
+                                  v_scale=None, interpret=False):
     """q: (B, Hq, D); pools: (NB, BS, Hkv, D); block_table: (B, NBMAX);
-    lengths: (B,) valid tokens incl. the current one. -> (B, Hq, D)."""
+    lengths: (B,) valid tokens incl. the current one; ``k_scale`` /
+    ``v_scale``: (NB, BS, Hkv) f32 dequant scales for int8/fp8 pools
+    (None = fp pool), DMA'd per block through the same prefetched index
+    map as the payload and applied in VMEM. -> (B, Hq, D)."""
     B, Hq, D = q.shape
     _, BS, Hkv, _ = k_pool.shape
     group = Hq // Hkv
     nbmax = block_table.shape[1]
     scale = float(scale) if scale is not None else float(1.0 / np.sqrt(D))
+    quantized = k_scale is not None
 
     def kv_map(b, i, bt, lens):
         return (bt[b, i], 0, 0, 0)
 
+    def scale_map(b, i, bt, lens):
+        return (bt[b, i], 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, Hq, D), lambda b, i, bt, lens: (b, 0, 0)),
+        pl.BlockSpec((1, BS, Hkv, D), kv_map),
+        pl.BlockSpec((1, BS, Hkv, D), kv_map),
+    ]
+    operands = [q, k_pool, v_pool]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, BS, Hkv), scale_map)] * 2
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, nbmax),
-        in_specs=[
-            pl.BlockSpec((1, Hq, D), lambda b, i, bt, lens: (b, 0, 0)),
-            pl.BlockSpec((1, BS, Hkv, D), kv_map),
-            pl.BlockSpec((1, BS, Hkv, D), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, Hq, D), lambda b, i, bt, lens: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((Hq, 1), jnp.float32),    # running max
@@ -120,17 +157,24 @@ def paged_decode_attention_pallas(q, k_pool, v_pool, block_table, lengths, *,
     )
     return pl.pallas_call(
         functools.partial(_pa_kernel, scale=scale, window=window,
-                          block_size=BS, hkv=Hkv, group=group, nb=nbmax),
+                          block_size=BS, hkv=Hkv, group=group, nb=nbmax,
+                          quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+        compiler_params=_MEGACORE,
         interpret=interpret,
     )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
-      q, k_pool, v_pool)
+      *operands)
 
 
-def _pv_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-               m_ref, l_ref, acc_ref, *, scale, window, block_size,
-               hkv, group, nb, k1):
+def _pv_kernel(bt_ref, len_ref, *refs, scale, window, block_size,
+               hkv, group, nb, k1, quantized):
+    if quantized:
+        (q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+         m_ref, l_ref, acc_ref) = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        ks_ref = vs_ref = None
     b = pl.program_id(0)
     i = pl.program_id(1)
 
@@ -154,8 +198,8 @@ def _pv_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     def _block():
         hq = hkv * group
         q = q_ref[0].astype(jnp.float32)                # (K1, Hq, D)
-        k = k_ref[0].astype(jnp.float32)                # (BS, Hkv, D)
-        v = v_ref[0].astype(jnp.float32)
+        k = _dequant(k_ref, ks_ref)                     # (BS, Hkv, D)
+        v = _dequant(v_ref, vs_ref)
         d = q.shape[-1]
         # group the query rows under their kv heads: (Hkv, K1*group, D)
         qg = q.reshape(k1, hkv, group, d).transpose(1, 0, 2, 3) \
@@ -201,15 +245,17 @@ def _pv_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_verify_attention_pallas(q, k_pool, v_pool, block_table, lengths,
-                                  *, window=None, scale=None,
-                                  interpret=False):
+                                  *, window=None, scale=None, k_scale=None,
+                                  v_scale=None, interpret=False):
     """Multi-query-per-slot paged decode attention (speculative verify).
 
     q: (B, K1, Hq, D) — K+1 query rows per sequence for positions
     ``lengths[b] + j``; pools: (NB, BS, Hkv, D); block_table: (B, NBMAX);
     lengths: (B,) tokens cached BEFORE the window (the window's own K/V
     must already be written to the pool). Row j attends positions
-    < ``lengths[b] + 1 + j``. -> (B, K1, Hq, D).
+    < ``lengths[b] + 1 + j``. ``k_scale``/``v_scale``: (NB, BS, Hkv)
+    f32 dequant scales for int8/fp8 pools, fused in VMEM like the
+    decode kernel. -> (B, K1, Hq, D).
 
     Same grid walk as ``paged_decode_attention_pallas`` — one step per
     (sequence, logical block), kv innermost-sequential carrying the
@@ -223,18 +269,27 @@ def paged_verify_attention_pallas(q, k_pool, v_pool, block_table, lengths,
     group = Hq // Hkv
     nbmax = block_table.shape[1]
     scale = float(scale) if scale is not None else float(1.0 / np.sqrt(D))
+    quantized = k_scale is not None
 
     def kv_map(b, i, bt, lens):
         return (bt[b, i], 0, 0, 0)
 
+    def scale_map(b, i, bt, lens):
+        return (bt[b, i], 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, K1, Hq, D), lambda b, i, bt, lens: (b, 0, 0, 0)),
+        pl.BlockSpec((1, BS, Hkv, D), kv_map),
+        pl.BlockSpec((1, BS, Hkv, D), kv_map),
+    ]
+    operands = [q, k_pool, v_pool]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, BS, Hkv), scale_map)] * 2
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, nbmax),
-        in_specs=[
-            pl.BlockSpec((1, K1, Hq, D), lambda b, i, bt, lens: (b, 0, 0, 0)),
-            pl.BlockSpec((1, BS, Hkv, D), kv_map),
-            pl.BlockSpec((1, BS, Hkv, D), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, K1, Hq, D),
                                lambda b, i, bt, lens: (b, 0, 0, 0)),
         scratch_shapes=[
@@ -246,17 +301,19 @@ def paged_verify_attention_pallas(q, k_pool, v_pool, block_table, lengths,
     return pl.pallas_call(
         functools.partial(_pv_kernel, scale=scale, window=window,
                           block_size=BS, hkv=Hkv, group=group, nb=nbmax,
-                          k1=K1),
+                          k1=K1, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, K1, Hq, D), q.dtype),
+        compiler_params=_MEGACORE,
         interpret=interpret,
     )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
-      q, k_pool, v_pool)
+      *operands)
 
 
 def paged_verify_attention_headshard(q, k_pool, v_pool, block_table,
                                      lengths, *, mesh, tp_axis="model",
                                      window=None, scale=None, attend=None,
+                                     k_scale=None, v_scale=None,
                                      interpret=False):
     """Multi-device multi-query verify attention over a HEAD-sharded
     pool: the ``paged_decode_attention_headshard`` layout with a K+1
@@ -266,9 +323,10 @@ def paged_verify_attention_headshard(q, k_pool, v_pool, block_table,
     collective and no pool byte crosses the interconnect.
 
     q: (B, K1, Hq, D) sharded over Hq; pools: (NB, BS, Hkv, D) sharded
-    over Hkv; requires ``paged_kv.head_shard_ok`` (head counts divide
-    |tp|). ``attend`` is the per-shard op; defaults to the Pallas
-    kernel.
+    over Hkv; ``k_scale``/``v_scale``: (NB, BS, Hkv) f32 dequant scales
+    for quantized pools, sharded over Hkv alongside the payload;
+    requires ``paged_kv.head_shard_ok`` (head counts divide |tp|).
+    ``attend`` is the per-shard op; defaults to the Pallas kernel.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -278,22 +336,32 @@ def paged_verify_attention_headshard(q, k_pool, v_pool, block_table,
         attend = functools.partial(paged_verify_attention_pallas,
                                    interpret=interpret)
     tp = tp_axis
+    in_specs = (P(None, None, tp, None), P(None, None, tp, None),
+                P(None, None, tp, None), P(None, None), P(None))
+    operands = (q, k_pool, v_pool, block_table.astype(jnp.int32),
+                lengths.astype(jnp.int32))
 
-    def local(qv, kp, vp, bt, ln):
-        return attend(qv, kp, vp, bt, ln, window=window, scale=scale)
+    if k_scale is None:
+        def local(qv, kp, vp, bt, ln):
+            return attend(qv, kp, vp, bt, ln, window=window, scale=scale)
+    else:
+        in_specs += (P(None, None, tp), P(None, None, tp))
+        operands += (k_scale, v_scale)
+
+        def local(qv, kp, vp, bt, ln, ks, vs):
+            return attend(qv, kp, vp, bt, ln, window=window, scale=scale,
+                          k_scale=ks, v_scale=vs)
 
     return shard_map(
-        local, mesh=mesh,
-        in_specs=(P(None, None, tp, None), P(None, None, tp, None),
-                  P(None, None, tp, None), P(None, None), P(None)),
+        local, mesh=mesh, in_specs=in_specs,
         out_specs=P(None, None, tp, None),
-    )(q, k_pool, v_pool, block_table.astype(jnp.int32),
-      lengths.astype(jnp.int32))
+    )(*operands)
 
 
 def paged_decode_attention_headshard(q, k_pool, v_pool, block_table,
                                      lengths, *, mesh, tp_axis="model",
                                      window=None, scale=None, attend=None,
+                                     k_scale=None, v_scale=None,
                                      interpret=False):
     """Multi-device paged decode attention over a HEAD-sharded pool.
 
@@ -308,9 +376,11 @@ def paged_decode_attention_headshard(q, k_pool, v_pool, block_table,
     crosses the interconnect.
 
     q: (B, Hq, D) sharded over Hq; pools: (NB, BS, Hkv, D) sharded over
-    Hkv; requires Hq % |tp| == 0 and Hkv % |tp| == 0 (group alignment
-    then holds automatically — see ``paged_kv.head_shard_ok``).
-    ``attend`` is the per-shard op; defaults to the Pallas kernel.
+    Hkv; ``k_scale``/``v_scale``: (NB, BS, Hkv) f32 dequant scales for
+    quantized pools, sharded over Hkv alongside the payload; requires
+    Hq % |tp| == 0 and Hkv % |tp| == 0 (group alignment then holds
+    automatically — see ``paged_kv.head_shard_ok``). ``attend`` is the
+    per-shard op; defaults to the Pallas kernel.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -320,14 +390,23 @@ def paged_decode_attention_headshard(q, k_pool, v_pool, block_table,
         attend = functools.partial(paged_decode_attention_pallas,
                                    interpret=interpret)
     tp = tp_axis
+    in_specs = (P(None, tp, None), P(None, None, tp, None),
+                P(None, None, tp, None), P(None, None), P(None))
+    operands = (q, k_pool, v_pool, block_table.astype(jnp.int32),
+                lengths.astype(jnp.int32))
 
-    def local(qv, kp, vp, bt, ln):
-        return attend(qv, kp, vp, bt, ln, window=window, scale=scale)
+    if k_scale is None:
+        def local(qv, kp, vp, bt, ln):
+            return attend(qv, kp, vp, bt, ln, window=window, scale=scale)
+    else:
+        in_specs += (P(None, None, tp), P(None, None, tp))
+        operands += (k_scale, v_scale)
+
+        def local(qv, kp, vp, bt, ln, ks, vs):
+            return attend(qv, kp, vp, bt, ln, window=window, scale=scale,
+                          k_scale=ks, v_scale=vs)
 
     return shard_map(
-        local, mesh=mesh,
-        in_specs=(P(None, tp, None), P(None, None, tp, None),
-                  P(None, None, tp, None), P(None, None), P(None)),
+        local, mesh=mesh, in_specs=in_specs,
         out_specs=P(None, tp, None),
-    )(q, k_pool, v_pool, block_table.astype(jnp.int32),
-      lengths.astype(jnp.int32))
+    )(*operands)

@@ -111,8 +111,18 @@ def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
 # ---------------------------------------------------------------------------
 
 
+def _gather_dequant(pool, scale_pool, block_table, B, S, Hkv, D):
+    """Gather pool blocks into (B, S, Hkv, D) f32 sequences, applying the
+    per-(token, head) dequant scales when the pool is quantized."""
+    x = pool[block_table].reshape(B, S, Hkv, D).astype(jnp.float32)
+    if scale_pool is not None:
+        x = x * scale_pool[block_table].reshape(B, S, Hkv)[..., None]
+    return x
+
+
 def paged_decode_attention(q, k_pool, v_pool, block_table, lengths, *,
-                           window=None, scale=None):
+                           window=None, scale=None, k_scale=None,
+                           v_scale=None):
     """Oracle single-token decode attention over a block-paged KV cache.
 
     q: (B, Hq, D) — the query for the token at position ``lengths[b] - 1``.
@@ -122,6 +132,8 @@ def paged_decode_attention(q, k_pool, v_pool, block_table, lengths, *,
     lengths: (B,) int32 — valid tokens per sequence (including the current
     token, whose K/V must already be written to the pool).
     ``window`` restricts attention to the last ``window`` positions (SWA).
+    ``k_scale``/``v_scale``: (NB, BS, Hkv) f32 dequant scales when the
+    pool stores int8/fp8 payloads (None = fp pool, historical math).
     Returns (B, Hq, D) in q.dtype.
     """
     B, Hq, D = q.shape
@@ -129,8 +141,8 @@ def paged_decode_attention(q, k_pool, v_pool, block_table, lengths, *,
     group = Hq // Hkv
     scale = float(scale) if scale is not None else float(1.0 / np.sqrt(D))
     S = block_table.shape[1] * BS
-    k = k_pool[block_table].reshape(B, S, Hkv, D)      # gather sequences
-    v = v_pool[block_table].reshape(B, S, Hkv, D)
+    k = _gather_dequant(k_pool, k_scale, block_table, B, S, Hkv, D)
+    v = _gather_dequant(v_pool, v_scale, block_table, B, S, Hkv, D)
     kx = jnp.repeat(k.transpose(0, 2, 1, 3), group, axis=1)  # (B, Hq, S, D)
     vx = jnp.repeat(v.transpose(0, 2, 1, 3), group, axis=1)
     logits = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
@@ -147,7 +159,8 @@ def paged_decode_attention(q, k_pool, v_pool, block_table, lengths, *,
 
 
 def paged_verify_attention(q, k_pool, v_pool, block_table, lengths, *,
-                           window=None, scale=None):
+                           window=None, scale=None, k_scale=None,
+                           v_scale=None):
     """Oracle multi-query decode attention over a block-paged KV cache.
 
     The speculative-decode verify step: each sequence contributes a
@@ -159,15 +172,17 @@ def paged_verify_attention(q, k_pool, v_pool, block_table, lengths, *,
 
     q: (B, K1, Hq, D); pools: (NB, BS, Hkv, D); block_table: (B, NBMAX);
     lengths: (B,) int32 tokens cached BEFORE the verify window. ``window``
-    restricts each row to its last ``window`` positions. -> (B, K1, Hq, D).
+    restricts each row to its last ``window`` positions.
+    ``k_scale``/``v_scale``: (NB, BS, Hkv) f32 dequant scales when the
+    pool stores int8/fp8 payloads (None = fp pool). -> (B, K1, Hq, D).
     """
     B, K1, Hq, D = q.shape
     _, BS, Hkv, _ = k_pool.shape
     group = Hq // Hkv
     scale = float(scale) if scale is not None else float(1.0 / np.sqrt(D))
     S = block_table.shape[1] * BS
-    k = k_pool[block_table].reshape(B, S, Hkv, D)
-    v = v_pool[block_table].reshape(B, S, Hkv, D)
+    k = _gather_dequant(k_pool, k_scale, block_table, B, S, Hkv, D)
+    v = _gather_dequant(v_pool, v_scale, block_table, B, S, Hkv, D)
     kx = jnp.repeat(k.transpose(0, 2, 1, 3), group, axis=1)  # (B, Hq, S, D)
     vx = jnp.repeat(v.transpose(0, 2, 1, 3), group, axis=1)
     logits = jnp.einsum("bjhd,bhsd->bjhs", q.astype(jnp.float32),

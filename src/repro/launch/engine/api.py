@@ -294,6 +294,14 @@ class EngineConfig:
     draft_model, draft_params
         The draft ``Model`` (attention-only, same vocab) and params for
         ``drafter="draft_model"``.
+    kv_dtype : {"bf16", "int8", "fp8"}
+        Storage precision of the paged K/V block pool. ``"bf16"`` keeps
+        the historical full-precision pool (bit-identical outputs).
+        ``"int8"``/``"fp8"`` (float8_e4m3) store quantized payloads
+        with per-(token, kv-head) f32 scale leaves alongside in the
+        pool tree; dequant is fused into the decode/verify kernels, so
+        no full-precision copy of the pool is ever materialized.
+        Requires ``ServingCaps.quantized_kv`` and the paged backend.
     """
 
     backend: str = "paged"       # "paged" | "static"
@@ -338,6 +346,10 @@ class EngineConfig:
     ngram_max: int = 3           # longest suffix the ngram drafter keys on
     draft_model: Any = None      # Model (drafter="draft_model")
     draft_params: Any = None     # its params
+    # Paged KV pool storage precision: "bf16" (full precision,
+    # bit-identical), "int8" or "fp8" (float8_e4m3 payloads +
+    # per-(token, kv-head) scale leaves, dequant fused into the kernels).
+    kv_dtype: str = "bf16"       # "bf16" | "int8" | "fp8"
 
 
 class Engine:
@@ -421,6 +433,25 @@ class Engine:
                 "speculative decoding is decoder-only: the verify pass "
                 "has no cross-attention path; set spec_tokens=0 for "
                 f"{mc.family}/{mc.name}")
+        from repro.models.paged_kv import KV_DTYPES
+        if self.cfg.kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"unknown kv_dtype {self.cfg.kv_dtype!r}; expected one "
+                f"of {KV_DTYPES}")
+        if self.cfg.kv_dtype != "bf16":
+            if self.cfg.backend == "static":
+                raise ValueError(
+                    "quantized KV (kv_dtype="
+                    f"{self.cfg.kv_dtype!r}) requires the paged backend "
+                    "— the static baseline keeps dense full-precision "
+                    "caches; use backend='paged'")
+            if not self.caps.quantized_kv:
+                raise ValueError(
+                    f"config {mc.family}/{mc.name} does not support a "
+                    f"quantized paged KV pool (kv_dtype="
+                    f"{self.cfg.kv_dtype!r}): ServingCaps.quantized_kv "
+                    "is False — encoder-decoder cross-KV arenas and "
+                    "non-paged frontends stay bf16")
         ctx = ctx or RunCtx(kernel_mode="ref")
         if self.cfg.mesh is not None and ctx.shard is None:
             from repro.launch.sharding import make_shard_ctx

@@ -77,11 +77,19 @@ class PagedBackend:
         self.model = model
         self.params = params
         self.cfg = cfg
-        self.ctx = ctx
         self.layout = paged_kv.PagedLayout(
             num_slots=cfg.num_slots, num_blocks=cfg.num_blocks,
             block_size=cfg.block_size, max_len=cfg.max_len)
         self.caps = model.serving_caps()
+        # Quantized paged KV: a jit-static PoolSpec threaded through the
+        # RunCtx (write frontiers + fused-dequant kernels) and the pool
+        # constructors; None keeps the bf16 path bit-identical.
+        self.kv_spec = None
+        if getattr(cfg, "kv_dtype", "bf16") != "bf16":
+            self.kv_spec = paged_kv.make_pool_spec(
+                model.cfg, self.layout, kv_dtype=cfg.kv_dtype)
+            ctx = dataclasses.replace(ctx, kv_spec=self.kv_spec)
+        self.ctx = ctx
         # COW prefix caching: only when EVERY layer's decode state lives
         # in the shared pool blocks (rings/SSM carries are per-slot and
         # a matched block chain cannot reconstruct them)
@@ -99,7 +107,8 @@ class PagedBackend:
         self.arena_ids = np.zeros((cfg.num_slots,), np.int32)
         self.enc_lengths = np.zeros((cfg.num_slots,), np.int32)
         self.arena_hits = 0          # admissions sharing a resident row
-        self.pools = model.init_paged_cache(self.layout)
+        self.pools = model.init_paged_cache(self.layout,
+                                            spec=self.kv_spec)
         # Mesh-sharded serving: commit params and pools to their
         # NamedShardings once; shlib.jit_step pins every step's outputs
         # to the same shardings (stable placement, exact pool donation).
@@ -109,7 +118,8 @@ class PagedBackend:
             self.params = shlib.place_params(params, self.shard)
             self._pool_sh = shlib.named(
                 self.shard.mesh,
-                model.paged_cache_specs(self.layout, self.shard))
+                model.paged_cache_specs(self.layout, self.shard,
+                                        spec=self.kv_spec))
             self.pools = jax.device_put(self.pools, self._pool_sh)
         self.table = np.full(
             (cfg.num_slots, self.layout.max_blocks_per_seq),
@@ -728,6 +738,7 @@ class PagedBackend:
             model, layout = self.model, self.layout
             ctx = self.prefill_ctx
             ragged = self.ragged_prefill
+            kv_spec = self.kv_spec
 
             def prefill_fn(params, pools, tokens, block_ids, row_of_slot,
                            valid, length):
@@ -735,7 +746,8 @@ class PagedBackend:
                     params, {"tokens": tokens}, ctx, max_len=Sb,
                     length=length if ragged else None)
                 pools = model.pack_prefill_into_paged(
-                    layout, pools, dense, row_of_slot, valid, block_ids)
+                    layout, pools, dense, row_of_slot, valid, block_ids,
+                    spec=kv_spec)
                 # only each row's next-token logits leave the device:
                 # (Nb, V) instead of the full (Nb, tok_w, V) slab
                 rows = jnp.take_along_axis(

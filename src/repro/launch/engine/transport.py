@@ -78,6 +78,11 @@ class MigrationPacket:
         — what ``core.noc.p2p_time`` prices.
     src : int
         Exporting replica index (hop-count accounting).
+    kv_format : Any
+        The source pool's ``paged_kv.PoolSpec`` (None = bf16). Scale
+        leaves travel inside ``state`` like any pool leaf, so extract/
+        insert are bit-exact on the stored payload; ``insert_packet``
+        rejects a format mismatch by naming this gate.
     """
 
     req: RequestHandle
@@ -87,6 +92,7 @@ class MigrationPacket:
     state: Any
     payload_bytes: int
     src: int
+    kv_format: Any = None
 
 
 def _pool_mask(backend):
@@ -94,7 +100,8 @@ def _pool_mask(backend):
     backend's pools."""
     mask = getattr(backend, "_migration_mask", None)
     if mask is None:
-        mask = backend.model.paged_pool_mask(backend.layout)
+        mask = backend.model.paged_pool_mask(
+            backend.layout, spec=getattr(backend, "kv_spec", None))
         backend._migration_mask = mask
     return mask
 
@@ -178,7 +185,8 @@ def extract_slot(backend, i: int, *, src: int = 0) -> MigrationPacket:
     nbytes = _payload_bytes(state, _pool_mask(backend), len(blocks))
     backend.detach_slot(i)
     return MigrationPacket(req, length, last_token, len(blocks), state,
-                           nbytes, src)
+                           nbytes, src,
+                           kv_format=getattr(backend, "kv_spec", None))
 
 
 def can_import(backend, packet: MigrationPacket) -> bool:
@@ -209,6 +217,13 @@ def insert_packet(backend, packet: MigrationPacket) -> int:
     reclaim prefix-LRU blocks (the allocator unlinks them from the
     index via its eviction hook, exactly like admission).
     """
+    if packet.kv_format != getattr(backend, "kv_spec", None):
+        raise ValueError(
+            "KV-format mismatch on migration "
+            f"(MigrationPacket.kv_format={packet.kv_format!r} vs "
+            f"destination pool spec {getattr(backend, 'kv_spec', None)!r})"
+            ": source and destination replicas must share one "
+            "EngineConfig.kv_dtype")
     ids = backend.alloc.alloc(packet.n_blocks)
     i = backend.import_slot(packet.req, ids, packet.length,
                             packet.last_token)

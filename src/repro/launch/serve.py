@@ -58,6 +58,12 @@ def main():
                          "'prefill,decode') or 'auto'; requires dp >= 2 "
                          "and the paged backend (bit-identical outputs, "
                          "KV blocks migrate between pools)")
+    ap.add_argument("--kv-dtype", choices=("bf16", "int8", "fp8"),
+                    default="bf16",
+                    help="paged KV pool storage precision: int8/fp8 "
+                         "store quantized blocks + per-(token, head) "
+                         "scales with dequant fused into the kernels "
+                         "(paged backend only)")
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if args.smoke:
@@ -67,7 +73,8 @@ def main():
     rng = np.random.default_rng(0)
     mesh = replica_cli_mesh(args.dp, args.tp)
     ecfg = EngineConfig(backend=args.backend, num_slots=args.slots,
-                        max_len=128, spec_tokens=args.spec_tokens)
+                        max_len=128, spec_tokens=args.spec_tokens,
+                        kv_dtype=args.kv_dtype)
     if args.roles is not None:
         roles = args.roles if args.roles == "auto" \
             else tuple(args.roles.split(","))

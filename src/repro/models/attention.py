@@ -263,16 +263,24 @@ def ring_from_prefill(kv, size, length):
 
 def decode_attend_paged(params, cfg, x, pool, block_table, lengths, *,
                         window=None, mrope_positions=None,
-                        kernel_mode="auto"):
+                        kernel_mode="auto", shard=None, kv_spec=None):
     """Single-token decode against a block-paged KV pool.
 
-    x: (B, 1, d); pool: {"k","v"} of (NB, BS, Hkv, D); block_table:
+    x: (B, 1, d); pool: {"k","v"} of (NB, BS, Hkv, D) (plus
+    ``k_scale``/``v_scale`` leaves when ``kv_spec`` is a quantized
+    ``paged_kv.PoolSpec`` — the new row is quantized at this write
+    frontier and dequant fuses into the kernel); block_table:
     (B, NBMAX) int32; lengths: (B,) tokens already cached per slot — the
     new token lands at position ``lengths[b]``, whose destination block
     ``block_table[b, lengths[b] // BS]`` the scheduler must have allocated
     (retired slots point at the reserved null block 0, making their writes
-    harmless). Returns (out, new_pool).
+    harmless). With ``shard`` (a ShardCtx; requires
+    ``paged_kv.head_shard_ok``) attention runs through the
+    collective-free head-sharded shard_map over the TP-sharded pool.
+    Returns (out, new_pool).
     """
+    from repro.models.paged_kv import write_kv_rows
+
     B = x.shape[0]
     hq, hd = cfg.n_heads, cfg.head_dim
     bs = pool["k"].shape[1]
@@ -289,18 +297,18 @@ def decode_attend_paged(params, cfg, x, pool, block_table, lengths, *,
     logical = jnp.clip(lengths // bs, 0, block_table.shape[1] - 1)
     phys = block_table[bidx, logical]
     off = lengths % bs
-    kp = pool["k"].at[phys, off].set(k[:, 0])
-    vp = pool["v"].at[phys, off].set(v[:, 0])
+    pool = write_kv_rows(pool, phys, off, k[:, 0], v[:, 0], kv_spec)
 
-    out = kops.paged_decode_attention(
-        q.reshape(B, hq, hd), kp, vp, block_table, lengths + 1,
-        window=window, mode=kernel_mode)
+    out = kops.paged_attention(
+        q.reshape(B, hq, hd), pool, block_table, lengths + 1,
+        mode="decode", window=window, kernel_mode=kernel_mode,
+        sharding=shard, kv_format=kv_spec)
     out = out.reshape(B, 1, hq * hd).astype(x.dtype)
-    return out @ params["wo"], {"k": kp, "v": vp}
+    return out @ params["wo"], pool
 
 
 def verify_attend_paged(params, cfg, x, pool, block_table, lengths, *,
-                        kernel_mode="auto", shard=None):
+                        kernel_mode="auto", shard=None, kv_spec=None):
     """Multi-token decode (speculative verify) against a paged KV pool.
 
     x: (B, K1, d) — the last accepted token plus K draft tokens per
@@ -314,9 +322,13 @@ def verify_attend_paged(params, cfg, x, pool, block_table, lengths, *,
     With ``shard`` (a ShardCtx; requires ``paged_kv.head_shard_ok``)
     the attention runs through the collective-free head-sharded
     shard_map over the TP-sharded pool, exactly like the single-token
-    ``decode_attend_paged_headshard``. Returns (out (B, K1, d'),
+    ``decode_attend_paged_headshard``. When ``kv_spec`` is a quantized
+    ``paged_kv.PoolSpec`` all K+1 rows quantize at the write frontier
+    and dequant fuses into the verify kernel. Returns (out (B, K1, d'),
     new_pool).
     """
+    from repro.models.paged_kv import write_kv_rows
+
     B, K1, _ = x.shape
     hq, hd = cfg.n_heads, cfg.head_dim
     bs = pool["k"].shape[1]
@@ -338,54 +350,35 @@ def verify_attend_paged(params, cfg, x, pool, block_table, lengths, *,
                             axis=1),
         0)
     off = pos % bs
-    kp = pool["k"].at[phys, off].set(k)
-    vp = pool["v"].at[phys, off].set(v)
+    pool = write_kv_rows(pool, phys, off, k, v, kv_spec)
 
-    if shard is not None:
-        out = kops.paged_verify_attention_headshard(
-            q, kp, vp, block_table, lengths, mesh=shard.mesh,
-            tp_axis=shard.tp_axis, mode=kernel_mode)
-    else:
-        out = kops.paged_verify_attention(q, kp, vp, block_table,
-                                          lengths, mode=kernel_mode)
+    out = kops.paged_attention(
+        q, pool, block_table, lengths, mode="verify",
+        kernel_mode=kernel_mode, sharding=shard, kv_format=kv_spec)
     out = out.reshape(B, K1, hq * hd).astype(x.dtype)
-    return out @ params["wo"], {"k": kp, "v": vp}
+    return out @ params["wo"], pool
 
 
 def decode_attend_paged_headshard(params, cfg, x, pool, block_table,
-                                  lengths, shard, *, kernel_mode="auto"):
+                                  lengths, shard, *, kernel_mode="auto",
+                                  kv_spec=None):
     """Tensor-parallel ``decode_attend_paged`` over a HEAD-sharded pool.
 
     Projections stay under GSPMD (wq/wk/wv are column-parallel, wo is
     row-parallel per launch/sharding.py), the new token's K/V write is a
     head-aligned scatter into the sharded pool, and the block gather +
     online softmax run under shard_map with every device holding its
-    kv-head shard of every block (kops.paged_decode_attention_headshard)
-    — so the pool, by far the largest serving tensor, never crosses the
-    interconnect and GSPMD can never fall back to all-gathering it.
-    Requires ``paged_kv.head_shard_ok`` (head counts divide |tp|).
+    kv-head shard of every block — so the pool, by far the largest
+    serving tensor, never crosses the interconnect and GSPMD can never
+    fall back to all-gathering it. Quantized pools shard their
+    per-(token, head) scale leaves on the same head axis, so dequant
+    stays shard-local too. Thin wrapper over ``decode_attend_paged``
+    with ``shard`` set; requires ``paged_kv.head_shard_ok`` (head
+    counts divide |tp|).
     """
-    B = x.shape[0]
-    hq, hd = cfg.n_heads, cfg.head_dim
-    bs = pool["k"].shape[1]
-    q, k, v = _project_qkv(params, cfg, x, x)
-    posb = lengths[:, None].astype(jnp.int32)
-    if cfg.rope_style == "rope":
-        q = layers.apply_rope(q, posb, cfg.rope_theta)
-        k = layers.apply_rope(k, posb, cfg.rope_theta)
-
-    bidx = jnp.arange(B)
-    logical = jnp.clip(lengths // bs, 0, block_table.shape[1] - 1)
-    phys = block_table[bidx, logical]
-    off = lengths % bs
-    kp = pool["k"].at[phys, off].set(k[:, 0])
-    vp = pool["v"].at[phys, off].set(v[:, 0])
-
-    out = kops.paged_decode_attention_headshard(
-        q.reshape(B, hq, hd), kp, vp, block_table, lengths + 1,
-        mesh=shard.mesh, tp_axis=shard.tp_axis, mode=kernel_mode)
-    out = out.reshape(B, 1, hq * hd).astype(x.dtype)
-    return out @ params["wo"], {"k": kp, "v": vp}
+    return decode_attend_paged(params, cfg, x, pool, block_table, lengths,
+                               kernel_mode=kernel_mode, shard=shard,
+                               kv_spec=kv_spec)
 
 
 def decode_attend_seqshard(params, cfg, x, cache, pos, shard,

@@ -48,6 +48,11 @@ class ServingCaps:
     moe : bool
         FFN layers route through experts; decode/verify may run
         expert-sharded over the model axis under a mesh.
+    quantized_kv : bool
+        The paged pool may store int8/fp8 K/V payloads with
+        per-(token, head) scale leaves (``EngineConfig.kv_dtype``).
+        Requires the paged decode path; excluded for encoder-decoder —
+        the cross-KV arena and its self pools stay full-precision.
     """
 
     ragged_prefill: bool
@@ -55,6 +60,7 @@ class ServingCaps:
     paged_decode: bool
     cross_attn: bool
     moe: bool
+    quantized_kv: bool
 
 
 class Model:
@@ -106,6 +112,9 @@ class Model:
         path, whose decode threads per-row positions explicitly.
         """
         cfg = self.cfg
+        paged = (cfg.rope_style != "mrope"
+                 and not cfg.visual_prefix
+                 and (cfg.pos_embed == "none" or cfg.enc_dec))
         return ServingCaps(
             ragged_prefill=(cfg.enc_dec
                             or transformer.prefill_supports_ragged(cfg)),
@@ -115,11 +124,10 @@ class Model:
                           and cfg.rope_style in ("rope", "none")
                           and cfg.pos_embed == "none"
                           and not cfg.visual_prefix),
-            paged_decode=(cfg.rope_style != "mrope"
-                          and not cfg.visual_prefix
-                          and (cfg.pos_embed == "none" or cfg.enc_dec)),
+            paged_decode=paged,
             cross_attn=cfg.enc_dec,
             moe=cfg.is_moe,
+            quantized_kv=paged and not cfg.enc_dec,
         )
 
     def init_cache(self, batch: int, max_len: int):
@@ -137,20 +145,23 @@ class Model:
 
     # -- paged serving (continuous batching) ----------------------------
 
-    def init_paged_cache(self, layout):
+    def init_paged_cache(self, layout, spec=None):
         if self.cfg.enc_dec:
+            assert spec is None or not spec.quantized, \
+                "quantized KV is decoder-only (ServingCaps.quantized_kv)"
             return encdec.init_paged_cache(self.cfg, layout)
-        return transformer.init_paged_cache(self.cfg, layout)
+        return transformer.init_paged_cache(self.cfg, layout, spec)
 
-    def paged_cache_specs(self, layout, shard):
+    def paged_cache_specs(self, layout, shard, spec=None):
         """PartitionSpecs for ``init_paged_cache`` under a mesh (block
         pools head-sharded over TP; per-slot state on cache rules; the
-        cross arena head-sharded over TP, rows replicated)."""
+        cross arena head-sharded over TP, rows replicated). Quantized
+        scale leaves (``spec``) shard their kv-head axis over TP too."""
         if self.cfg.enc_dec:
             return encdec.paged_cache_specs(self.cfg, layout, shard)
-        return transformer.paged_cache_specs(self.cfg, layout, shard)
+        return transformer.paged_cache_specs(self.cfg, layout, shard, spec)
 
-    def paged_pool_mask(self, layout):
+    def paged_pool_mask(self, layout, spec=None):
         """Same-structure tree of kind strings over ``init_paged_cache``:
         ``"pool"`` on block-pool leaves, ``"slot"`` on per-slot state,
         ``"cross"`` on cross-arena leaves — classified by layer kind
@@ -158,15 +169,16 @@ class Model:
         gather/scatter in launch/engine/transport.py."""
         if self.cfg.enc_dec:
             return encdec.paged_pool_mask(self.cfg, layout)
-        return transformer.paged_pool_mask(self.cfg, layout)
+        return transformer.paged_pool_mask(self.cfg, layout, spec)
 
     def pack_prefill_into_paged(self, layout, pools, dense_caches,
-                                row_of_slot, valid, block_ids):
+                                row_of_slot, valid, block_ids, spec=None):
         """Batched install: block_ids (N, nbp) per prefill row;
-        row_of_slot/valid the inverse slot<-row map for per-slot state."""
+        row_of_slot/valid the inverse slot<-row map for per-slot state.
+        ``spec`` quantizes the pool writes (scales land alongside)."""
         return transformer.pack_prefill_into_paged(
             self.cfg, layout, pools, dense_caches, row_of_slot, valid,
-            block_ids)
+            block_ids, spec)
 
     def prefill_paged_encdec(self, params, pools, tokens, frames,
                              enc_lengths, lengths, block_ids, arena_ids,

@@ -455,21 +455,170 @@ def head_shard_ok(cfg, tp_size: int) -> bool:
 
 
 # ---------------------------------------------------------------------------
+# Pool format: PoolSpec + KV quantization
+# ---------------------------------------------------------------------------
+
+KV_DTYPES = ("bf16", "int8", "fp8")
+
+# fp8 e4m3 saturates at +-448; values past it cast to NaN, not inf, so
+# the quantizer must clip BEFORE the dtype cast.
+_FP8_MAX = 448.0
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSpec:
+    """Static description of one paged pool's physical block format.
+
+    The single source of truth for how K/V blocks are stored: the
+    payload dtype (``bf16`` keeps the model compute dtype; ``int8`` /
+    ``fp8`` store a low-precision payload plus per-(token-row, kv-head)
+    f32 scales as extra ``k_scale``/``v_scale`` pool leaves), the block
+    geometry, the physical head dim (``padded_head_dim`` pads blocks to
+    the TPU lane width so real-hardware tiling is honest — 0 means
+    unpadded), and whether the pool is head-sharded over TP. Frozen and
+    hashable, so it rides through jit as a static argument and through
+    ``transport.MigrationPacket`` as the format tag both ends must
+    agree on. ``kv_dtype="bf16"`` with no padding reproduces today's
+    pool tree byte-for-byte (no scale leaves, same shapes) — the
+    bit-identity contract for the fp path.
+    """
+
+    kv_dtype: str = "bf16"                # "bf16" | "int8" | "fp8"
+    scale_layout: str = "token_head"      # scales per (token row, kv head)
+    block_size: int = 16
+    n_kv_heads: int = 1
+    head_dim: int = 64
+    padded_head_dim: int = 0              # 0 = no lane padding
+    head_sharded: bool = False
+
+    def __post_init__(self):
+        if self.kv_dtype not in KV_DTYPES:
+            raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, "
+                             f"got {self.kv_dtype!r}")
+        if self.padded_head_dim and self.padded_head_dim < self.head_dim:
+            raise ValueError("padded_head_dim < head_dim")
+
+    @property
+    def quantized(self) -> bool:
+        return self.kv_dtype != "bf16"
+
+    @property
+    def store_dtype(self):
+        """Payload dtype blocks are stored in (None = the cache dtype)."""
+        if self.kv_dtype == "int8":
+            return jnp.int8
+        if self.kv_dtype == "fp8":
+            return jnp.float8_e4m3fn
+        return None
+
+    @property
+    def qmax(self) -> float:
+        """Largest representable payload magnitude (scale denominator)."""
+        return 127.0 if self.kv_dtype == "int8" else _FP8_MAX
+
+    @property
+    def pool_head_dim(self) -> int:
+        """Physical last-axis width of pool blocks (lane-padded or not)."""
+        return self.padded_head_dim or self.head_dim
+
+
+def make_pool_spec(cfg, layout: PagedLayout, *, kv_dtype: str = "bf16",
+                   padded_head_dim: int = 0,
+                   head_sharded: bool = False) -> PoolSpec:
+    """Build the ``PoolSpec`` for a model config + paged layout."""
+    return PoolSpec(kv_dtype=kv_dtype, block_size=layout.block_size,
+                    n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                    padded_head_dim=padded_head_dim,
+                    head_sharded=head_sharded)
+
+
+def quantize_kv(x, spec: PoolSpec):
+    """Quantize K or V rows to the spec's payload dtype + scales.
+
+    x: (..., Hkv, D) fp rows. Returns ``(payload, scale)`` with payload
+    shaped like x in ``spec.store_dtype`` and scale ``(..., Hkv)`` f32 —
+    one absmax scale per (token row, kv head), so a one-token decode
+    append is self-contained and never requantizes its block. Zero rows
+    keep scale 0 with a divide guard (payload 0, dequant exact). int8
+    rounds to nearest; fp8 clips to +-448 before the cast (overflow
+    would produce NaN, not saturation)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / spec.qmax
+    q = xf / jnp.where(scale > 0, scale, 1.0)[..., None]
+    q = jnp.clip(q, -spec.qmax, spec.qmax)
+    if spec.kv_dtype == "int8":
+        q = jnp.round(q)
+    return q.astype(spec.store_dtype), scale
+
+
+def dequantize_kv(payload, scale):
+    """Inverse of ``quantize_kv``: f32 rows from payload + scales."""
+    return payload.astype(jnp.float32) * scale[..., None]
+
+
+def _pad_head_dim(x, hd_pool: int):
+    """Zero-pad the last axis of K/V rows to the pool's physical width."""
+    pad = hd_pool - x.shape[-1]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, widths)
+
+
+def write_kv_rows(pool, phys, off, k, v, spec: PoolSpec = None):
+    """Scatter new K/V rows at the decode/verify append frontier.
+
+    pool: a pool dict ({"k","v"} plus ``k_scale``/``v_scale`` when
+    quantized); phys/off: integer index arrays selecting (block, slot-
+    in-block) per row; k/v: (..., Hkv, D) new rows, index arrays
+    broadcasting over the leading dims. With a quantized spec the rows
+    are quantized per (row, head) and the scales land at the same
+    (phys, off) coordinates; with ``spec=None`` / bf16 this is exactly
+    the historical two-scatter update."""
+    if spec is not None:
+        k = _pad_head_dim(k, spec.pool_head_dim)
+        v = _pad_head_dim(v, spec.pool_head_dim)
+    if spec is None or not spec.quantized:
+        return dict(pool, k=pool["k"].at[phys, off].set(
+                        k.astype(pool["k"].dtype)),
+                    v=pool["v"].at[phys, off].set(
+                        v.astype(pool["v"].dtype)))
+    kq, ks = quantize_kv(k, spec)
+    vq, vs = quantize_kv(v, spec)
+    return dict(pool,
+                k=pool["k"].at[phys, off].set(kq),
+                v=pool["v"].at[phys, off].set(vq),
+                k_scale=pool["k_scale"].at[phys, off].set(ks),
+                v_scale=pool["v_scale"].at[phys, off].set(vs))
+
+
+# ---------------------------------------------------------------------------
 # Device-side pytree init / prefill packing
 # ---------------------------------------------------------------------------
 
 
-def init_layer_pool(cfg, layout: PagedLayout, dtype, *, window=None):
+def init_layer_pool(cfg, layout: PagedLayout, dtype, *, window=None,
+                    spec: PoolSpec = None):
     """Per-layer cache for the paged engine. Full-attention layers get a
     block pool; windowed layers keep a per-slot ring buffer (their state
     is bounded at ``window`` tokens — paging buys nothing); callers route
-    SSM kinds to their existing per-slot state inits."""
+    SSM kinds to their existing per-slot state inits. ``spec`` selects
+    the pool block format: a quantized ``PoolSpec`` stores low-precision
+    payloads plus per-(row, head) f32 ``k_scale``/``v_scale`` leaves
+    ``(NB, BS, Hkv)``; ``None`` (or a bf16 spec without padding) yields
+    the identical tree to before the spec existed."""
     if window:
         return attn_lib.init_kv_cache(cfg, layout.num_slots, layout.max_len,
                                       dtype, window=window)
-    shape = (layout.num_blocks, layout.block_size, cfg.n_kv_heads,
-             cfg.head_dim)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    hd = spec.pool_head_dim if spec is not None else cfg.head_dim
+    shape = (layout.num_blocks, layout.block_size, cfg.n_kv_heads, hd)
+    if spec is None or not spec.quantized:
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    sshape = shape[:-1]
+    return {"k": jnp.zeros(shape, spec.store_dtype),
+            "v": jnp.zeros(shape, spec.store_dtype),
+            "k_scale": jnp.zeros(sshape, jnp.float32),
+            "v_scale": jnp.zeros(sshape, jnp.float32)}
 
 
 def init_cross_arena(cfg, layout: PagedLayout, dtype):
@@ -522,14 +671,18 @@ def init_slot_tables(layout: PagedLayout):
     return table, lengths
 
 
-def pack_prefill_kv(pool, dense_kv, block_ids, block_size):
+def pack_prefill_kv(pool, dense_kv, block_ids, block_size,
+                    spec: PoolSpec = None):
     """Scatter a batch of prefilled dense caches into pool blocks.
 
     pool: {"k","v"} of (..., NB, BS, Hkv, D); dense_kv: {"k","v"} of
     (..., N, S, Hkv, D) with S == block_ids.shape[1] * BS (kernels/ops
     pads prefill caches with zeros past each row's true length);
     block_ids: (N, nbp) int32 physical destinations, one row per
-    prefilled sequence. Leading dims (stacked layers) broadcast.
+    prefilled sequence. Leading dims (stacked layers) broadcast. With a
+    quantized ``spec`` the dense rows are quantized per (token, head)
+    and the scales scatter into the pool's ``k_scale``/``v_scale``
+    leaves through the same flat block indices.
 
     Rows' REAL blocks are disjoint (the allocator hands each sequence its
     own); pad-tail and batch-filler entries all point at the reserved
@@ -545,10 +698,26 @@ def pack_prefill_kv(pool, dense_kv, block_ids, block_size):
         lead = p.shape[:-4]
         hkv, hd = p.shape[-2:]
         d = d.reshape(lead + (n * nbp, block_size, hkv, hd))
-        return p.at[..., flat, :, :, :].set(d)
+        return p.at[..., flat, :, :, :].set(d.astype(p.dtype))
 
-    return {"k": put(pool["k"], dense_kv["k"]),
-            "v": put(pool["v"], dense_kv["v"])}
+    if spec is not None and spec.pool_head_dim != dense_kv["k"].shape[-1]:
+        dense_kv = {"k": _pad_head_dim(dense_kv["k"], spec.pool_head_dim),
+                    "v": _pad_head_dim(dense_kv["v"], spec.pool_head_dim)}
+    if spec is None or not spec.quantized:
+        return dict(pool, k=put(pool["k"], dense_kv["k"]),
+                    v=put(pool["v"], dense_kv["v"]))
+
+    def put_scale(p, s):
+        lead = p.shape[:-3]
+        hkv = p.shape[-1]
+        s = s.reshape(lead + (n * nbp, block_size, hkv))
+        return p.at[..., flat, :, :].set(s)
+
+    kq, ks = quantize_kv(dense_kv["k"], spec)
+    vq, vs = quantize_kv(dense_kv["v"], spec)
+    return dict(pool, k=put(pool["k"], kq), v=put(pool["v"], vq),
+                k_scale=put_scale(pool["k_scale"], ks),
+                v_scale=put_scale(pool["v_scale"], vs))
 
 
 def _select_slots(state, dense, row_of_slot, valid, batch_axis):
@@ -646,10 +815,11 @@ def insert_blocks(pools, kinds, packet, block_ids, slot, arena=NULL_ARENA):
 
 
 __all__ = [
-    "NULL_ARENA", "NULL_BLOCK", "CrossArena", "PagedLayout",
-    "BlockAllocator", "PrefixIndex", "blocks_for", "extract_blocks",
-    "head_shard_ok", "init_cross_arena", "init_layer_pool",
-    "init_slot_tables", "insert_blocks", "pack_cross_arena",
+    "KV_DTYPES", "NULL_ARENA", "NULL_BLOCK", "CrossArena", "PagedLayout",
+    "BlockAllocator", "PoolSpec", "PrefixIndex", "blocks_for",
+    "dequantize_kv", "extract_blocks", "head_shard_ok",
+    "init_cross_arena", "init_layer_pool", "init_slot_tables",
+    "insert_blocks", "make_pool_spec", "pack_cross_arena",
     "pack_prefill_kv", "pack_prefill_ring", "pack_prefill_state",
-    "rollback_tail",
+    "quantize_kv", "rollback_tail", "write_kv_rows",
 ]

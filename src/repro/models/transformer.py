@@ -47,6 +47,10 @@ class RunCtx:
     # head-sharded pool shard_map (each device owns its kv-head shard of
     # every block). Set by the Engine when paged_kv.head_shard_ok holds.
     decode_head_shard: bool = False
+    # Quantized paged KV: a paged_kv.PoolSpec (hashable, jit-static) when
+    # the pool stores int8/fp8 payloads with per-(token, head) scale
+    # leaves; None keeps the historical bf16 path bit-identical.
+    kv_spec: Any = None
     # Residual-stream constraint after every block:
     #   'none'  — GSPMD chooses; observed: it DELAYS the row-parallel
     #             reduction into the next norm's f32 upcast, so the
@@ -345,15 +349,12 @@ def apply_block_decode_paged(p, cfg: ModelConfig, kind: str, x, cache,
     if kind in ("attn", "local"):
         window = _window_for(cfg, kind)
         if window is None:
-            if ctx.decode_head_shard and ctx.shard is not None:
-                out, cache = attn_lib.decode_attend_paged_headshard(
-                    p["attn"], cfg, xn, cache, block_table, lengths,
-                    ctx.shard, kernel_mode=ctx.kernel_mode)
-            else:
-                out, cache = attn_lib.decode_attend_paged(
-                    p["attn"], cfg, xn, cache, block_table, lengths,
-                    mrope_positions=mrope_positions,
-                    kernel_mode=ctx.kernel_mode)
+            out, cache = attn_lib.decode_attend_paged(
+                p["attn"], cfg, xn, cache, block_table, lengths,
+                mrope_positions=mrope_positions,
+                kernel_mode=ctx.kernel_mode,
+                shard=ctx.shard if ctx.decode_head_shard else None,
+                kv_spec=ctx.kv_spec)
         else:
             out, cache = attn_lib.decode_attend_batched(
                 p["attn"], cfg, xn, cache, lengths, window=window,
@@ -420,7 +421,8 @@ def apply_block_verify_paged(p, cfg: ModelConfig, kind: str, x, cache,
         out, pool = attn_lib.verify_attend_paged(
             p["attn"], cfg, xn, cache, block_table, lengths,
             kernel_mode=ctx.kernel_mode,
-            shard=ctx.shard if ctx.decode_head_shard else None)
+            shard=ctx.shard if ctx.decode_head_shard else None,
+            kv_spec=ctx.kv_spec)
         x = x + out
         x, _ = _ffn_part(p, cfg, x, ctx, dropless=True)
         return x, pool
@@ -707,13 +709,16 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     return map_layer_tree(cfg, one)
 
 
-def init_paged_cache(cfg: ModelConfig, layout):
+def init_paged_cache(cfg: ModelConfig, layout, spec=None):
     """Stacked per-layer caches for the paged serving engine.
 
     Full-attention layers share a block pool (paged_kv.init_layer_pool);
     windowed and SSM layers keep per-slot bounded state exactly as in
-    ``init_cache``. The block table and lengths live with the scheduler,
-    not in this tree — all layers of a sequence share one table.
+    ``init_cache``. ``spec`` (a quantized ``paged_kv.PoolSpec``) switches
+    the full-attention pools to int8/fp8 payloads with per-(token, head)
+    scale leaves; windowed rings and SSM state stay full-precision. The
+    block table and lengths live with the scheduler, not in this tree —
+    all layers of a sequence share one table.
     """
     from repro.models import paged_kv
 
@@ -722,7 +727,8 @@ def init_paged_cache(cfg: ModelConfig, layout):
     def one(gk, pk, kind, count):
         if kind in ("attn", "local"):
             c = paged_kv.init_layer_pool(
-                cfg, layout, dtype, window=_window_for(cfg, kind))
+                cfg, layout, dtype, window=_window_for(cfg, kind),
+                spec=spec)
         else:
             c = init_block_cache(cfg, kind, layout.num_slots,
                                  layout.max_len, dtype)
@@ -732,7 +738,7 @@ def init_paged_cache(cfg: ModelConfig, layout):
     return map_layer_tree(cfg, one)
 
 
-def paged_pool_mask(cfg: ModelConfig, layout):
+def paged_pool_mask(cfg: ModelConfig, layout, spec=None):
     """Same-structure tree of kind strings over ``init_paged_cache``:
     ``"pool"`` for full-attention BLOCK-POOL leaves (block axis at
     axis 1, after the stacked layer-count axis) and ``"slot"`` for
@@ -743,7 +749,7 @@ def paged_pool_mask(cfg: ModelConfig, layout):
     ring buffer whose slot count happens to equal the pool's block count
     cannot be misclassified. Consumed by ``paged_kv.extract_blocks``/
     ``insert_blocks`` (KV migration between replicas)."""
-    shapes = jax.eval_shape(lambda: init_paged_cache(cfg, layout))
+    shapes = jax.eval_shape(lambda: init_paged_cache(cfg, layout, spec))
 
     def one(gk, pk, kind, count):
         tag = "pool" if _is_pool_kind(cfg, kind) else "slot"
@@ -752,16 +758,17 @@ def paged_pool_mask(cfg: ModelConfig, layout):
     return map_layer_tree(cfg, one)
 
 
-def paged_cache_specs(cfg: ModelConfig, layout, shard):
+def paged_cache_specs(cfg: ModelConfig, layout, shard, spec=None):
     """PartitionSpecs for the ``init_paged_cache`` tree under a mesh:
     block pools head-sharded over TP (every device owns its kv-head
     shard of every block, replicated over data axes), ring buffers and
     SSM state on the standard per-slot cache rules. Pool leaves are
     identified by LAYER KIND (the same walk as ``init_paged_cache``),
-    not by shape."""
+    not by shape. Quantized pools (``spec``) add 4-D scale leaves, whose
+    kv-head axis lands on the same TP axis via the truncating spec fit."""
     from repro.launch import sharding as shlib
 
-    shapes = jax.eval_shape(lambda: init_paged_cache(cfg, layout))
+    shapes = jax.eval_shape(lambda: init_paged_cache(cfg, layout, spec))
 
     def one(gk, pk, kind, count):
         sub = shapes[gk][pk]
@@ -774,7 +781,7 @@ def paged_cache_specs(cfg: ModelConfig, layout, shard):
 
 
 def pack_prefill_into_paged(cfg: ModelConfig, layout, pools, dense_caches,
-                            row_of_slot, valid, block_ids):
+                            row_of_slot, valid, block_ids, spec=None):
     """Install a BATCH of prefilled dense caches (from ``prefill`` with
     ``max_len == block_ids.shape[1] * block_size``) into the paged tree.
 
@@ -793,7 +800,7 @@ def pack_prefill_into_paged(cfg: ModelConfig, layout, pools, dense_caches,
         if kind in ("attn", "local"):
             if _window_for(cfg, kind) is None:
                 return paged_kv.pack_prefill_kv(
-                    pool, dense, block_ids, layout.block_size)
+                    pool, dense, block_ids, layout.block_size, spec=spec)
             return {
                 "k": paged_kv.pack_prefill_ring(
                     pool["k"], dense["k"], row_of_slot, valid),

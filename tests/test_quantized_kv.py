@@ -1,0 +1,495 @@
+"""Quantized paged KV cache (int8/fp8) + the unified kernel dispatcher.
+
+Contract chain, weakest to strongest:
+  1. quantize/dequantize round-trip error is bounded; fp8 saturates
+     (never NaN) on overflow-scale rows; PoolSpec validates and stays
+     hashable (it rides in the jit-static RunCtx);
+  2. fused-dequant kernels: interpret-mode Pallas == quantized jnp
+     oracle (decode AND verify), quantized oracle ~= fp oracle within
+     quantization tolerance; lane-padded pools (padded_head_dim) are
+     BIT-equal to unpadded — padding is exact, not approximate;
+  3. the one ``ops.paged_attention`` dispatcher: bf16 pools are
+     bit-identical through it vs the deprecated aliases, bad modes
+     raise;
+  4. engine level: int8/fp8 engines emit greedy tokens matching the
+     bf16 engine at a high rate on real smoke models (olmo dense,
+     recurrentgemma windowed-hybrid — its rings stay full-precision),
+     with zero block leaks; the bf16 pool tree gains NO scale leaves
+     (structure regression for donation/sharding);
+  5. subsystems compose: COW prefix caching shares quantized blocks
+     unchanged (cache on == cache off, bit-identical), migration
+     packets carry scales and land bit-exact (round-trip finishes with
+     the unmigrated tokens), and a kv-format mismatch at import is
+     rejected naming the gate;
+  6. the gates themselves: static backend + quantized, encoder-decoder
+     + quantized (ServingCaps.quantized_kv), unknown kv_dtype, and the
+     serve CLI rejecting an unknown --kv-dtype.
+
+Head-sharded (mesh) quantized coverage re-execs under 8 fake CPU
+devices like tests/test_sharded_serve.py.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import ops, ref
+from repro.launch.engine import Engine, EngineConfig, SamplingParams
+from repro.launch.engine import transport
+from repro.models import paged_kv
+from repro.models.model import Model
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_BASE = dict(backend="paged", num_slots=3, block_size=4, num_blocks=33,
+             max_len=48)
+
+
+def _spec(kv_dtype="int8", bs=4, hkv=2, hd=16, padded=0):
+    return paged_kv.PoolSpec(kv_dtype=kv_dtype, block_size=bs,
+                             n_kv_heads=hkv, head_dim=hd,
+                             padded_head_dim=padded)
+
+
+def _quant_pool_case(rng, B, hq, hkv, hd, bs, nbmax, lengths, kv_dtype):
+    """An fp pool plus its quantized counterpart over a scrambled block
+    table (same construction as test_paged_serve)."""
+    nb = B * nbmax + 1
+    q = jnp.asarray(rng.normal(size=(B, hq, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(nb, bs, hkv, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(nb, bs, hkv, hd)), jnp.float32)
+    perm = rng.permutation(nb - 1) + 1
+    bt = jnp.asarray(perm[:B * nbmax].reshape(B, nbmax), jnp.int32)
+    spec = _spec(kv_dtype, bs=bs, hkv=hkv, hd=hd)
+    kq, ks = paged_kv.quantize_kv(kp, spec)
+    vq, vs = paged_kv.quantize_kv(vp, spec)
+    qpool = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    return q, {"k": kp, "v": vp}, qpool, bt, \
+        jnp.asarray(lengths, jnp.int32), spec
+
+
+# -- 1. quantization math ----------------------------------------------
+
+
+def test_quantize_roundtrip_bounded(rng):
+    spec = _spec("int8")
+    x = jnp.asarray(rng.normal(size=(9, 4, 2, 16)), jnp.float32)
+    payload, scale = paged_kv.quantize_kv(x, spec)
+    assert payload.dtype == jnp.int8 and scale.dtype == jnp.float32
+    assert scale.shape == x.shape[:-1]
+    back = paged_kv.dequantize_kv(payload, scale)
+    err = float(jnp.max(jnp.abs(back - x)))
+    # per-(row, head) amax / 127 bounds the grid step
+    assert err <= float(jnp.max(jnp.abs(x))) / 127.0 + 1e-6
+
+
+def test_quantize_zero_rows_and_fp8_overflow(rng):
+    spec8 = _spec("int8")
+    z = jnp.zeros((2, 4, 2, 16), jnp.float32)
+    payload, scale = paged_kv.quantize_kv(z, spec8)
+    assert float(jnp.max(jnp.abs(paged_kv.dequantize_kv(payload,
+                                                        scale)))) == 0.0
+    if not hasattr(jnp, "float8_e4m3fn"):
+        pytest.skip("no fp8 dtype in this jax build")
+    spec = _spec("fp8")
+    big = jnp.asarray(rng.normal(size=(2, 4, 2, 16)) * 1e6, jnp.float32)
+    payload, scale = paged_kv.quantize_kv(big, spec)
+    back = paged_kv.dequantize_kv(payload, scale)
+    assert bool(jnp.all(jnp.isfinite(back)))  # clipped, never NaN
+
+
+def test_pool_spec_validates_and_hashes():
+    with pytest.raises(ValueError, match="kv_dtype"):
+        paged_kv.PoolSpec(kv_dtype="int4")
+    with pytest.raises(ValueError, match="padded_head_dim"):
+        paged_kv.PoolSpec(kv_dtype="int8", head_dim=64,
+                          padded_head_dim=32)
+    a = _spec("int8")
+    assert hash(a) == hash(_spec("int8"))  # jit-static in RunCtx
+    assert a.quantized and not _spec("bf16").quantized
+    assert _spec("bf16", padded=128).pool_head_dim == 128
+
+
+# -- 2. fused-dequant kernels vs oracles --------------------------------
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+@pytest.mark.parametrize("window", [None, 5])
+def test_quantized_decode_kernel_matches_oracle(rng, kv_dtype, window):
+    if kv_dtype == "fp8" and not hasattr(jnp, "float8_e4m3fn"):
+        pytest.skip("no fp8 dtype in this jax build")
+    q, _, qpool, bt, ln, spec = _quant_pool_case(
+        rng, 4, 4, 2, 16, 4, 4, [7, 8, 1, 16], kv_dtype)
+    got = ops.paged_attention(q, qpool, bt, ln, mode="decode",
+                              window=window, kernel_mode="interpret",
+                              kv_format=spec)
+    want = ref.paged_decode_attention(
+        q, qpool["k"], qpool["v"], bt, ln, window=window,
+        k_scale=qpool["k_scale"], v_scale=qpool["v_scale"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("window", [None, 6])
+def test_quantized_verify_kernel_matches_oracle(rng, window):
+    B, K1, hq, hkv, hd, bs, nbmax = 4, 3, 4, 2, 16, 4, 4
+    _, _, qpool, bt, ln, spec = _quant_pool_case(
+        rng, B, hq, hkv, hd, bs, nbmax, [2, 7, 0, 12], "int8")
+    q = jnp.asarray(rng.normal(size=(B, K1, hq, hd)), jnp.float32)
+    got = ops.paged_attention(q, qpool, bt, ln, mode="verify",
+                              window=window, kernel_mode="interpret",
+                              kv_format=spec)
+    want = ref.paged_verify_attention(
+        q, qpool["k"], qpool["v"], bt, ln, window=window,
+        k_scale=qpool["k_scale"], v_scale=qpool["v_scale"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_quantized_oracle_close_to_fp_oracle(rng):
+    """The quantized pool approximates the fp attention output within
+    quantization tolerance — the kernel-level half of the quality gate
+    (the engine-level half is the greedy match rate below)."""
+    q, pool, qpool, bt, ln, _ = _quant_pool_case(
+        rng, 4, 4, 2, 16, 4, 4, [7, 8, 1, 16], "int8")
+    fp = ref.paged_decode_attention(q, pool["k"], pool["v"], bt, ln)
+    qt = ref.paged_decode_attention(
+        q, qpool["k"], qpool["v"], bt, ln,
+        k_scale=qpool["k_scale"], v_scale=qpool["v_scale"])
+    np.testing.assert_allclose(np.asarray(qt), np.asarray(fp), atol=0.05)
+
+
+def test_padded_head_dim_is_exact(rng):
+    """Lane-width tiling: a pool whose blocks are physically padded to
+    head dim 128 produces BIT-equal output to the unpadded pool — the
+    zero k-tail contributes nothing to logits (q is zero-padded too),
+    v-tail columns are sliced off, and the per-row amax (hence every
+    scale and payload value) is unchanged by zero padding."""
+    B, hq, hkv, hd, bs, nbmax = 4, 4, 2, 16, 4, 4
+    q, _, qpool, bt, ln, _ = _quant_pool_case(
+        rng, B, hq, hkv, hd, bs, nbmax, [7, 8, 1, 16], "int8")
+    spec_u = _spec("int8", bs=bs, hkv=hkv, hd=hd)
+    spec_p = _spec("int8", bs=bs, hkv=hkv, hd=hd, padded=128)
+    pad = [(0, 0)] * 3 + [(0, 128 - hd)]
+    kq, ks = paged_kv.quantize_kv(
+        jnp.pad(paged_kv.dequantize_kv(qpool["k"], qpool["k_scale"]),
+                pad), spec_p)
+    vq, vs = paged_kv.quantize_kv(
+        jnp.pad(paged_kv.dequantize_kv(qpool["v"], qpool["v_scale"]),
+                pad), spec_p)
+    ppool = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    out_u = ops.paged_attention(q, qpool, bt, ln, mode="decode",
+                                kernel_mode="ref", kv_format=spec_u)
+    out_p = ops.paged_attention(q, ppool, bt, ln, mode="decode",
+                                kernel_mode="ref", kv_format=spec_p)
+    assert out_p.shape == out_u.shape  # sliced back to logical D
+    np.testing.assert_array_equal(np.asarray(out_p), np.asarray(out_u))
+    # scales are invariant under zero padding of the head dim
+    np.testing.assert_array_equal(np.asarray(ks),
+                                  np.asarray(qpool["k_scale"]))
+
+
+# -- 3. the unified dispatcher -----------------------------------------
+
+
+def test_dispatcher_bf16_bit_identical_to_aliases(rng):
+    q, pool, _, bt, ln, _ = _quant_pool_case(
+        rng, 4, 4, 2, 16, 4, 4, [7, 8, 1, 16], "int8")
+    new = ops.paged_attention(q, pool, bt, ln, mode="decode",
+                              kernel_mode="ref")
+    old = ops.paged_decode_attention(q, pool["k"], pool["v"], bt, ln,
+                                     mode="ref")
+    np.testing.assert_array_equal(np.asarray(new), np.asarray(old))
+    K1 = 3
+    qv = jnp.asarray(rng.normal(size=(4, K1, 4, 16)), jnp.float32)
+    newv = ops.paged_attention(qv, pool, bt, ln, mode="verify",
+                               kernel_mode="ref")
+    oldv = ops.paged_verify_attention(qv, pool["k"], pool["v"], bt, ln,
+                                      mode="ref")
+    np.testing.assert_array_equal(np.asarray(newv), np.asarray(oldv))
+
+
+def test_dispatcher_rejects_unknown_mode(rng):
+    q, pool, _, bt, ln, _ = _quant_pool_case(
+        rng, 2, 4, 2, 16, 4, 2, [3, 5], "int8")
+    with pytest.raises(ValueError, match="decode"):
+        ops.paged_attention(q, pool, bt, ln, mode="prefill")
+
+
+# -- 4. engine-level greedy match + structure regression ----------------
+
+
+def _greedy_outputs(model, params, prompts, kv_dtype, n_new=8, **over):
+    cfg = EngineConfig(**dict(_BASE, kv_dtype=kv_dtype, **over))
+    eng = Engine(model, params, cfg)
+    sp = SamplingParams(max_tokens=n_new)
+    out = eng.generate(prompts, sp)
+    be = eng.backend
+    assert be.alloc.free_count == be.layout.usable_blocks  # zero leaks
+    return out
+
+
+def _match_rate(a, b):
+    tot = sum(max(len(x), len(y)) for x, y in zip(a, b))
+    hit = sum(sum(u == v for u, v in zip(x, y)) for x, y in zip(a, b))
+    return hit / max(tot, 1)
+
+
+@pytest.mark.parametrize("arch", ["olmo_1b", "recurrentgemma_2b"])
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+def test_engine_greedy_match_vs_bf16(rng, arch, kv_dtype):
+    """The acceptance gate at engine level: a quantized engine serves
+    real smoke models with greedy outputs matching the bf16 engine at a
+    high token rate, leak-free. recurrentgemma mixes windowed rings
+    (full-precision, untouched) with quantized full-attention pools."""
+    if kv_dtype == "fp8" and not hasattr(jnp, "float8_e4m3fn"):
+        pytest.skip("no fp8 dtype in this jax build")
+    cfg = get_config(arch).smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, L)))
+               for L in (3, 9, 14)]
+    want = _greedy_outputs(model, params, prompts, "bf16")
+    got = _greedy_outputs(model, params, prompts, kv_dtype)
+    rate = _match_rate(want, got)
+    assert rate >= 0.9, (arch, kv_dtype, rate, want, got)
+
+
+def test_bf16_pool_tree_unchanged():
+    """Structure regression: kv_dtype='bf16' must build EXACTLY the
+    historical pool tree — no scale leaves — so donation, sharding
+    specs and migration traces stay bit-for-bit what they were."""
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, EngineConfig(**_BASE))
+    leaves = jax.tree_util.tree_flatten_with_path(eng.backend.pools)[0]
+    keys = {str(k[-1]) for k, _ in leaves}
+    assert not any("scale" in k for k in keys), keys
+    assert eng.backend.kv_spec is None
+    q = Engine(model, params, EngineConfig(**_BASE, kv_dtype="int8"))
+    qkeys = {str(k[-1]) for k, _ in
+             jax.tree_util.tree_flatten_with_path(q.backend.pools)[0]}
+    assert any("k_scale" in k for k in qkeys), qkeys
+    # the payload leaves themselves store int8
+    kinds = {str(l.dtype) for l in jax.tree.leaves(q.backend.pools)}
+    assert "int8" in kinds, kinds
+
+
+def test_speculative_quantized_matches_nonspec(rng):
+    """Verify-path quantization: the speculative engine over an int8
+    pool emits exactly the non-speculative int8 engine's tokens (the
+    accept rule compares target vs target — quantization shifts both
+    sides identically)."""
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = [(list(map(int, rng.integers(0, cfg.vocab_size, 4))) * 4)
+               [:9 + i] for i in range(3)]
+    want = _greedy_outputs(model, params, prompts, "int8", n_new=10)
+    got = _greedy_outputs(model, params, prompts, "int8", n_new=10,
+                          spec_tokens=3)
+    assert got == want
+
+
+# -- 5. subsystem composition: COW, migration ---------------------------
+
+
+def test_prefix_cache_shares_quantized_blocks(rng):
+    """COW prefix caching over an int8 pool: cached == uncached,
+    bit-identical — shared quantized blocks (payload + scales) are
+    reused as stored, and the COW block copy duplicates scale leaves
+    through the same block-axis treemap."""
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prefix = list(map(int, rng.integers(0, cfg.vocab_size, 12)))
+    prompts = [prefix + list(map(int, rng.integers(0, cfg.vocab_size, t)))
+               for t in (2, 3, 5)]
+    off = _greedy_outputs(model, params, prompts, "int8",
+                          prefix_cache=False)
+    on_eng = Engine(model, params, EngineConfig(
+        **_BASE, kv_dtype="int8", prefix_cache=True))
+    on = on_eng.generate(prompts, SamplingParams(max_tokens=8))
+    assert on == off
+    st = on_eng.stats()["prefix_cache"]
+    assert st["hits"] > 0  # sharing actually happened
+
+
+def test_migration_roundtrip_quantized(rng):
+    """Extract/insert with an int8 pool: the packet carries the scale
+    leaves inside ``state`` and stamps ``kv_format``; a round-trip
+    through the SAME backend finishes with the unmigrated tokens."""
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, L)))
+               for L in (5, 9)]
+    sp = [SamplingParams(max_tokens=8)] * 2
+    ecfg = EngineConfig(**_BASE, kv_dtype="int8")
+    want = Engine(model, params, ecfg).generate(prompts, sp)
+    eng = Engine(model, params, ecfg)
+    handles = [eng.add_request(p, s) for p, s in zip(prompts, sp)]
+    eng.step()
+    be = eng.backend
+    i = next(j for j, s in enumerate(be.slots) if s.req is handles[0])
+    pkt = transport.extract_slot(be, i, src=0)
+    assert pkt.kv_format == be.kv_spec and pkt.kv_format.quantized
+    # scale leaves travel in the packet state
+    skeys = {str(k[-1]) for k, _ in
+             jax.tree_util.tree_flatten_with_path(pkt.state)[0]}
+    assert any("k_scale" in k for k in skeys), skeys
+    assert transport.can_import(be, pkt)
+    transport.insert_packet(be, pkt)
+    eng.drain()
+    assert [h.token_ids for h in handles] == want
+    assert be.alloc.free_count == be.layout.usable_blocks
+
+
+def test_migration_kv_format_mismatch_rejected(rng):
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, 6)))]
+    src = Engine(model, params, EngineConfig(**_BASE, kv_dtype="int8"))
+    src.add_request(prompts[0], SamplingParams(max_tokens=8))
+    src.step()
+    be = src.backend
+    i = next(j for j, s in enumerate(be.slots) if s.req is not None)
+    pkt = transport.extract_slot(be, i)
+    dst = Engine(model, params, EngineConfig(**_BASE))  # bf16 pool
+    with pytest.raises(ValueError, match="kv_format"):
+        transport.insert_packet(dst.backend, pkt)
+
+
+# -- 6. the gates -------------------------------------------------------
+
+
+def test_static_backend_rejects_quantized():
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="paged backend"):
+        Engine(model, params,
+               EngineConfig(backend="static", kv_dtype="int8"))
+
+
+def test_encdec_rejects_quantized_naming_cap():
+    cfg = get_config("whisper_base").smoke()
+    model = Model(cfg)
+    assert not model.serving_caps().quantized_kv
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="quantized_kv"):
+        Engine(model, params, EngineConfig(**dict(_BASE,
+                                                  kv_dtype="int8")))
+
+
+def test_unknown_kv_dtype_rejected():
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="kv_dtype"):
+        Engine(model, params, EngineConfig(**dict(_BASE,
+                                                  kv_dtype="int4")))
+
+
+def test_serve_cli_rejects_unknown_kv_dtype():
+    """Both CLIs advertise --kv-dtype with a closed choice set; an
+    unknown value dies in argparse with the standard rejection message
+    (before any device work)."""
+    proc = subprocess.run(
+        [sys.executable, os.path.join(_ROOT, "examples", "serve_lm.py"),
+         "--smoke", "--kv-dtype", "int4"],
+        env=dict(os.environ, PYTHONPATH=os.path.join(_ROOT, "src")),
+        capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 2
+    assert "invalid choice: 'int4'" in proc.stderr
+
+
+# -- 7. head-sharded quantized (8 fake devices, subprocess) -------------
+
+
+def test_headshard_quantized_matches_oracle_and_engine():
+    """Mesh coverage: (a) the head-sharded quantized kernel (scale
+    leaves sharded over Hkv with the payload) equals the single-device
+    quantized oracle; (b) a mesh-sharded int8 engine emits tokens
+    identical to the single-device int8 engine."""
+    code = textwrap.dedent("""
+    import jax, numpy as np
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.kernels import ops, ref
+    from repro.launch.engine import Engine, EngineConfig, SamplingParams
+    from repro.launch.mesh import make_mesh
+    from repro.models import paged_kv
+    from repro.models.model import Model
+
+    assert len(jax.devices()) == 8
+    MESH = make_mesh((4, 2), ("data", "model"))
+    rng = np.random.default_rng(7)
+    B, hq, hkv, hd, bs, nbmax = 4, 8, 2, 16, 4, 4
+    nb = B * nbmax + 1
+    spec = paged_kv.PoolSpec(kv_dtype="int8", block_size=bs,
+                             n_kv_heads=hkv, head_dim=hd)
+    kp = jnp.asarray(rng.normal(size=(nb, bs, hkv, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(nb, bs, hkv, hd)), jnp.float32)
+    kq, ks = paged_kv.quantize_kv(kp, spec)
+    vq, vs = paged_kv.quantize_kv(vp, spec)
+    pool = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    q = jnp.asarray(rng.normal(size=(B, hq, hd)), jnp.float32)
+    perm = rng.permutation(nb - 1) + 1
+    bt = jnp.asarray(perm[:B * nbmax].reshape(B, nbmax), jnp.int32)
+    ln = jnp.asarray([7, 8, 1, 16], jnp.int32)
+
+    class Sh:
+        mesh, tp_axis = MESH, "model"
+
+    got = ops.paged_attention(q, pool, bt, ln, mode="decode",
+                              kernel_mode="ref", sharding=Sh,
+                              kv_format=spec)
+    want = ref.paged_decode_attention(q, kq, vq, bt, ln, k_scale=ks,
+                                      v_scale=vs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    qv = jnp.asarray(rng.normal(size=(B, 3, hq, hd)), jnp.float32)
+    gotv = ops.paged_attention(qv, pool, bt, ln, mode="verify",
+                               kernel_mode="ref", sharding=Sh,
+                               kv_format=spec)
+    wantv = ref.paged_verify_attention(qv, kq, vq, bt, ln, k_scale=ks,
+                                       v_scale=vs)
+    np.testing.assert_allclose(np.asarray(gotv), np.asarray(wantv),
+                               rtol=1e-5, atol=1e-5)
+
+    cfg = get_config("olmo_1b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, L)))
+               for L in (3, 9, 14)]
+    sp = SamplingParams(max_tokens=6)
+    base = dict(backend="paged", num_slots=3, block_size=4,
+                num_blocks=33, max_len=48, kv_dtype="int8")
+    want = Engine(model, params, EngineConfig(**base)).generate(
+        prompts, sp)
+    sharded = Engine(model, params, EngineConfig(mesh=MESH, **base))
+    got = sharded.generate(prompts, sp)
+    assert got == want, (got, want)
+    be = sharded.backend
+    assert be.alloc.free_count == be.layout.usable_blocks
+    print("body ran")
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(_ROOT, "src"),
+               JAX_PLATFORMS="cpu")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, \
+        f"STDOUT:\n{proc.stdout}\nERR:\n{proc.stderr}"
+    assert "body ran" in proc.stdout
