@@ -60,6 +60,19 @@ BYTE budget on a head_dim=64 smoke variant: usable-block capacity
 ratio, tok/s for both, and the greedy token match rate vs the bf16 run
 (floor-gated by benchmarks/check_serve_regression.py).
 
+A tenth section, ``open_loop``, replays a deterministic open-loop
+arrival trace (benchmarks/traffic.py — seeded Poisson arrivals,
+decode-heavy output lengths, per-request TTFT/TPOT budgets) through
+the paged backend with ``EngineConfig(overlap=)`` OFF and ON at equal
+config: the overlap run dispatches step N+1's fused device call before
+fetching step N's sampled tokens. Reports TTFT/TPOT p50/p95/p99,
+goodput-under-SLO (token throughput of budget-meeting requests, with
+budgets calibrated from the measured baseline so CI machine speed
+cannot zero it), the overlap speedup, the p99-TTFT ratio, and the
+bit-identity check (outputs_match — raw-asserted at JSON write: the
+RNG-stream contract says overlap may change WHEN tokens are fetched
+but never WHICH tokens come out).
+
 The comparison is at EQUAL CACHE MEMORY (--mem-tokens of KV capacity):
 the static engine must preallocate max_len per lane, so its batch is
 ``mem // max_len``; the paged engine spends the same tokens of pool on
@@ -95,6 +108,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.launch.engine import Engine, EngineConfig, SamplingParams
+from repro.launch.engine.api import latency_stats
 from repro.models.model import Model
 
 
@@ -276,14 +290,9 @@ def _result_row(engine, handles, dt) -> dict:
     st = engine.stats()
     slots = getattr(engine, "total_slots", engine.cfg.num_slots)
     lane_eff = useful / max(st["steps"] * slots, 1)
-    lat = [h.t_first_token - h.t_submit for h in handles
-           if h.t_first_token is not None]
-    ttft = {"mean_s": float(np.mean(lat)),
-            "p50_s": float(np.percentile(lat, 50)),
-            "p95_s": float(np.percentile(lat, 95))} if lat else \
-        {"mean_s": 0.0, "p50_s": 0.0, "p95_s": 0.0}
+    lat = latency_stats(handles)
     return {"tok_s": useful / dt, "useful": useful, "wall_s": dt,
-            "ttft": ttft,
+            "ttft": lat["ttft"], "tpot": lat["tpot"],
             "lane_eff": lane_eff,
             "cache_util": st["cache_utilization"],
             "mean_active": st["mean_active_slots"],
@@ -744,6 +753,70 @@ def _replay_quantized(args) -> dict:
     return res
 
 
+def _replay_open_loop(model, params, args) -> dict:
+    """The ``"open_loop"`` section: one deterministic Poisson arrival
+    trace (benchmarks/traffic.py; decode-heavy output lengths, since
+    TPOT and the overlap toggle both live in the decode loop) through
+    the paged backend with ``overlap=`` OFF then ON at equal config.
+
+    SLO budgets are calibrated from the MEASURED baseline replay
+    (generous multiples of its median TTFT/TPOT, longer prompts earning
+    proportionally more TTFT headroom) so goodput-under-SLO is a
+    scheduling metric, not a CPU-speed lottery; the same budgets then
+    score both runs, and ``ttft_p99_ratio`` (overlap p99 over baseline
+    p99) is machine-normalized by construction. Outputs must be
+    bit-identical across the toggle — the RNG-stream contract — and
+    ``_write_json`` raw-asserts it."""
+    try:                          # package import (python -m benchmarks.run)
+        from benchmarks import traffic
+    except ImportError:           # script import (python benchmarks/bench_serve.py)
+        import traffic
+
+    trace = traffic.make_open_loop_trace(
+        model.cfg, kind="poisson", n_requests=2 * args.requests,
+        rate=args.rate, seed=args.seed + 8)
+    base_cfg = EngineConfig(
+        backend="paged", num_slots=args.slots,
+        block_size=args.block_size,
+        num_blocks=args.mem_tokens // args.block_size + 1,
+        max_len=args.max_len, watermark_blocks=args.watermark)
+    off = Engine(model, params, base_cfg)
+    h_off: list = []
+    res_off = _replay(off, trace, h_off)
+    del off
+    # budgets from the measured baseline: 4x its median TTFT, 3x its
+    # median TPOT (floored so an all-zero-latency degenerate run can't
+    # produce zero budgets) — applied identically to both runs
+    lat = latency_stats(h_off)
+    budget = traffic.SLO(ttft_s=max(4.0 * lat["ttft"]["p50_s"], 1e-3),
+                         tpot_s=max(3.0 * lat["tpot"]["p50_s"], 1e-4))
+    traffic.annotate_slos(trace, ttft_s=budget.ttft_s,
+                          tpot_s=budget.tpot_s)
+    slo_off = traffic.slo_report(h_off, trace, res_off["wall_s"])
+    on = Engine(model, params,
+                dataclasses.replace(base_cfg, overlap=True))
+    h_on: list = []
+    res = _replay(on, trace, h_on)
+    slo_on = traffic.slo_report(h_on, trace, res["wall_s"])
+    res["kind"] = "poisson"
+    res["rate"] = args.rate
+    res["requests"] = len(trace)
+    res["overlap"] = True
+    res["slo_budget"] = dataclasses.asdict(budget)
+    res["slo"] = slo_on
+    res["base_slo"] = slo_off
+    res["base_tok_s"] = res_off["tok_s"]
+    res["base_blocks_leaked"] = res_off["blocks_leaked"]
+    res["overlap_speedup"] = res["tok_s"] / max(res_off["tok_s"], 1e-9)
+    res["ttft_p99_ratio"] = (slo_on["ttft"]["p99_s"]
+                             / max(slo_off["ttft"]["p99_s"], 1e-9))
+    res["goodput_tok_s"] = slo_on["goodput_tok_s"]
+    res["goodput_frac"] = slo_on["goodput_frac"]
+    res["outputs_match"] = ([h.token_ids for h in h_on]
+                            == [h.token_ids for h in h_off])
+    return res
+
+
 def run_bench(args) -> dict:
     cfg = get_config(args.arch)
     if args.smoke:
@@ -777,6 +850,7 @@ def run_bench(args) -> dict:
     res_dg = _replay_disagg(model, params, args)
     res_w = _replay_workloads(args)
     res_q = _replay_quantized(args)
+    res_ol = _replay_open_loop(model, params, args)
     return {
         "arch": cfg.name,
         "mem_tokens": args.mem_tokens,
@@ -789,6 +863,7 @@ def run_bench(args) -> dict:
         "disagg": res_dg,
         "workloads": res_w,
         "quantized": res_q,
+        "open_loop": res_ol,
         "speedup": res_c["tok_s"] / max(res_s["tok_s"], 1e-9),
     }
 
@@ -821,6 +896,11 @@ def _write_json(result: dict, json_path: str):
     q = result["quantized"]
     if q["blocks_leaked"] or q["bf16_blocks_leaked"]:
         raise SystemExit("quantized section leaked blocks")
+    ol = result["open_loop"]
+    if ol["blocks_leaked"] or ol["base_blocks_leaked"]:
+        raise SystemExit("open_loop section leaked blocks")
+    if not ol["outputs_match"]:
+        raise SystemExit("overlap changed emitted tokens")
 
 
 def _emit(result: dict, json_path: str):
@@ -861,6 +941,10 @@ def _emit(result: dict, json_path: str):
     print(f"serve_quantized,{res_q['tok_s']:.2f},"
           f"{res_q['cache_util']:.3f},{res_q['lane_eff']:.3f},"
           f"{res_q['useful']},{res_q['wall_s']:.2f}")
+    res_o = result["open_loop"]
+    print(f"serve_open_loop,{res_o['tok_s']:.2f},"
+          f"{res_o['cache_util']:.3f},{res_o['lane_eff']:.3f},"
+          f"{res_o['useful']},{res_o['wall_s']:.2f}")
     print(f"# sharded mesh {res_m['mesh']['axes']}; "
           f"head_sharded={res_m['head_sharded']}; "
           f"per-device cache {res_m['per_device_cache']}")
@@ -921,6 +1005,19 @@ def _emit(result: dict, json_path: str):
           f"{res_q['tok_s']:.1f} tok/s vs bf16 "
           f"{res_q['bf16_tok_s']:.1f}; greedy match rate "
           f"{res_q['match_rate']:.4f}")
+    print(f"# open loop ({res_o['kind']}, {res_o['rate']:.0f} req/s, "
+          f"{res_o['requests']} reqs): overlap {res_o['tok_s']:.1f} "
+          f"tok/s = {res_o['overlap_speedup']:.2f}x no-overlap "
+          f"({res_o['base_tok_s']:.1f}); ttft p50/p99 "
+          f"{res_o['slo']['ttft']['p50_s'] * 1e3:.1f}/"
+          f"{res_o['slo']['ttft']['p99_s'] * 1e3:.1f} ms "
+          f"(p99 ratio {res_o['ttft_p99_ratio']:.2f}); tpot p50/p99 "
+          f"{res_o['slo']['tpot']['p50_s'] * 1e3:.2f}/"
+          f"{res_o['slo']['tpot']['p99_s'] * 1e3:.2f} ms; goodput "
+          f"{res_o['goodput_tok_s']:.1f} tok/s "
+          f"({res_o['goodput_frac']:.2f} of emitted, "
+          f"{res_o['slo']['slo_frac']:.2f} of requests in SLO); "
+          f"outputs_match {res_o['outputs_match']}")
     print(f"# equal cache budget {result['mem_tokens']} tokens; "
           f"continuous/static tokens/s: {result['speedup']:.2f}x; "
           f"mean active slots {res_c['mean_active']:.2f}; "
@@ -985,7 +1082,8 @@ def run():
                     ("serve_disagg", result["disagg"]),
                     ("serve_moe", result["workloads"]["moe"]),
                     ("serve_encdec", result["workloads"]["encdec"]),
-                    ("serve_quantized", result["quantized"])):
+                    ("serve_quantized", result["quantized"]),
+                    ("serve_open_loop", result["open_loop"])):
         emit(name, 1e6 / max(r["tok_s"], 1e-9),
              f"tok_s={r['tok_s']:.2f} util={r['cache_util']:.3f} "
              f"preemptions={r['preemptions']} "

@@ -37,6 +37,17 @@ bench) and fails on:
     (the capacity win silently gone), the greedy token match rate vs
     the bf16 run dropping below 0.95, or a leak in either engine of
     the section.
+  * open-loop contract breaks: overlap outputs differing from the
+    no-overlap run (bit-identity — the RNG-stream contract), zero
+    goodput-under-SLO (budgets are calibrated from the same run's
+    baseline, so zero means the scheduler starved every request past
+    generous budgets), unordered TTFT/TPOT percentiles, a leak in
+    either engine, or — against baseline, with the same noise-robust
+    clamps as the disagg section — the overlap speedup dropping below
+    ``min((1 - tol) * base, 0.95)``, the goodput fraction below
+    ``min((1 - tol) * base, 0.5)``, or the p99-TTFT ratio above
+    ``max((1 + tol) * base, 1.25)`` (all three machine-normalized by
+    construction: both engines run in the same process).
 
 Usage:
   python benchmarks/check_serve_regression.py \
@@ -54,12 +65,15 @@ def check(baseline: dict, fresh: dict, *, tolerance: float,
           absolute: bool) -> list[str]:
     errors = []
     for section in ("continuous", "sharded", "replicas", "speculative",
-                    "shared_prefix", "disagg", "quantized"):
+                    "shared_prefix", "disagg", "quantized",
+                    "open_loop"):
         leaked = fresh.get(section, {}).get("blocks_leaked", 0)
         if leaked:
             errors.append(f"{section}: {leaked} blocks leaked")
     if fresh.get("disagg", {}).get("sym_blocks_leaked", 0):
         errors.append("disagg: symmetric baseline run leaked blocks")
+    if fresh.get("open_loop", {}).get("base_blocks_leaked", 0):
+        errors.append("open_loop: no-overlap baseline run leaked blocks")
     if absolute:
         base_v = baseline["continuous"]["tok_s"]
         fresh_v = fresh["continuous"]["tok_s"]
@@ -227,6 +241,65 @@ def check(baseline: dict, fresh: dict, *, tolerance: float,
                 "quantization error is changing outputs beyond the gate")
         if q["bf16_blocks_leaked"]:
             errors.append("quantized: bf16 comparison run leaked blocks")
+    # open loop: bit-identity across the overlap toggle, live goodput,
+    # ordered percentiles (raw invariants, both engines run in this
+    # process), and three baseline-relative ratios with the same
+    # noise-robustness discipline as the disagg clamps: a strong
+    # committed baseline must never make the gate flaky, so the floors
+    # and ceiling saturate at fixed "outright broken" thresholds.
+    if "open_loop" in fresh:
+        ol = fresh["open_loop"]
+        print(f"open_loop ({ol['kind']}): overlap tok_s "
+              f"{ol['tok_s']:.1f} vs base {ol['base_tok_s']:.1f} "
+              f"(x{ol['overlap_speedup']:.3f}), goodput "
+              f"{ol['goodput_tok_s']:.1f} tok/s "
+              f"(frac {ol['goodput_frac']:.3f}), ttft_p99_ratio "
+              f"{ol['ttft_p99_ratio']:.3f}, outputs_match "
+              f"{ol['outputs_match']}")
+        if not ol["outputs_match"]:
+            errors.append("open_loop: overlap outputs differ from the "
+                          "no-overlap run (bit-identity broken)")
+        if ol["goodput_tok_s"] <= 0:
+            errors.append("open_loop: zero goodput under SLO — every "
+                          "request blew a budget calibrated from this "
+                          "run's own baseline")
+        for metric in ("ttft", "tpot"):
+            p = ol["slo"][metric]
+            if not (p["p50_s"] <= p["p95_s"] <= p["p99_s"]):
+                errors.append(f"open_loop: {metric} percentiles are "
+                              f"unordered ({p['p50_s']:.6f} / "
+                              f"{p['p95_s']:.6f} / {p['p99_s']:.6f})")
+        if "open_loop" in baseline:
+            base_v = baseline["open_loop"]["overlap_speedup"]
+            floor_v = min((1.0 - tolerance) * base_v, 0.95)
+            print(f"open_loop overlap_speedup: baseline {base_v:.3f}, "
+                  f"fresh {ol['overlap_speedup']:.3f}, "
+                  f"floor {floor_v:.3f}")
+            if ol["overlap_speedup"] < floor_v:
+                errors.append(
+                    f"open_loop overlap speedup regressed "
+                    f">{tolerance:.0%}: {ol['overlap_speedup']:.3f} < "
+                    f"{floor_v:.3f} (baseline {base_v:.3f})")
+            base_g = baseline["open_loop"]["goodput_frac"]
+            floor_g = min((1.0 - tolerance) * base_g, 0.5)
+            print(f"open_loop goodput_frac: baseline {base_g:.3f}, "
+                  f"fresh {ol['goodput_frac']:.3f}, "
+                  f"floor {floor_g:.3f}")
+            if ol["goodput_frac"] < floor_g:
+                errors.append(
+                    f"open_loop goodput fraction regressed "
+                    f">{tolerance:.0%}: {ol['goodput_frac']:.3f} < "
+                    f"{floor_g:.3f} (baseline {base_g:.3f})")
+            base_t = baseline["open_loop"]["ttft_p99_ratio"]
+            ceil_t = max((1.0 + tolerance) * base_t, 1.25)
+            print(f"open_loop ttft_p99_ratio: baseline {base_t:.3f}, "
+                  f"fresh {ol['ttft_p99_ratio']:.3f}, "
+                  f"ceiling {ceil_t:.3f}")
+            if ol["ttft_p99_ratio"] > ceil_t:
+                errors.append(
+                    f"open_loop p99 TTFT vs no-overlap worsened "
+                    f">{tolerance:.0%}: {ol['ttft_p99_ratio']:.3f} > "
+                    f"{ceil_t:.3f} (baseline {base_t:.3f})")
     return errors
 
 

@@ -1,0 +1,214 @@
+"""Deterministic open-loop traffic generation with per-request SLOs.
+
+Every trace in bench_serve.py before this module was CLOSED-loop in
+spirit: requests exist up front and the replay clock only gates when
+they become visible. Production serving is OPEN-loop — arrivals do not
+wait for completions — and the serving literature's headline metrics
+(Orca/vLLM continuous batching, Sarathi chunked prefill) are TTFT/TPOT
+percentiles and *goodput under SLO*: the token throughput attributable
+to requests that met their latency budgets, not raw tok/s. This module
+generates those arrival processes and scores those metrics.
+
+Determinism contract: a trace is a pure function of its seed — the
+generators never read a wall clock, so the same (seed, kind, rate, n)
+produces the same arrivals, prompts, output lengths, and SLO
+annotations on every machine. The REPLAY measures real time; the TRACE
+never does. That is what lets the bench replay one identical trace
+through two engine configs (``overlap=`` off/on) and raw-assert
+bit-identical outputs, and what lets the chaos tests in
+tests/test_open_loop.py re-inject a failing trace from nothing but its
+seed.
+
+Arrival kinds (all share the same long-run mean rate, so sections are
+comparable across kinds):
+
+* ``poisson`` — memoryless exponential gaps; the steady-traffic
+  baseline.
+* ``bursty``  — back-to-back arrival bursts separated by exponential
+  quiet gaps (mean gap = burst/rate). Bursts are the adversarial case
+  for admission control: a burst wider than the free-block pool lands
+  entirely inside one watermark window.
+* ``ramp``    — instantaneous rate ramps linearly from below to above
+  the mean across the trace; exercises the transition from an idle
+  engine (arrival-gated) to a saturated one (capacity-gated).
+
+SLO model: each request carries its own ``SLO(ttft_s, tpot_s)`` budget
+pair — time-to-first-token and time-per-output-token. ``slo_report``
+scores a replay: a request *meets* its SLO when TTFT <= ttft_s and
+(once it has >= 2 tokens, so TPOT is defined) its mean inter-token
+gap <= tpot_s. Goodput is the emitted-token throughput of the meeting
+subset over the same replay wall time — tokens from SLO-violating
+requests are produced but worthless, which is exactly how this metric
+punishes a scheduler that optimizes raw tok/s by starving the tail.
+
+Budgets are machine-relative by construction: an absolute budget would
+make goodput a CPU-speed lottery in CI, so ``annotate_slos`` derives
+per-request budgets from a measured baseline (bench_serve calibrates
+on the overlap=False replay) with generous multipliers, and
+longer-prompt requests get proportionally more TTFT headroom (their
+prefill is genuinely bigger).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.launch.engine.api import latency_stats
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """Per-request latency budget: TTFT and TPOT in seconds."""
+
+    ttft_s: float
+    tpot_s: float
+
+
+@dataclasses.dataclass
+class OpenLoopItem:
+    """One open-loop request: arrival offset (seconds since trace
+    start), prompt token ids, output budget, and its SLO annotation.
+    Field-compatible with bench_serve's ``TraceItem`` (arrival /
+    prompt / max_new), so ``_replay`` and ``_warm`` take it as-is."""
+
+    arrival: float
+    prompt: list[int]
+    max_new: int
+    slo: SLO
+
+
+def poisson_arrivals(n: int, rate: float, rng) -> np.ndarray:
+    """Memoryless arrivals: exponential gaps at ``rate`` req/s."""
+    return np.cumsum(rng.exponential(1.0 / rate, n))
+
+
+def bursty_arrivals(n: int, rate: float, rng, *, burst: int = 8,
+                    spread: float = 1e-4) -> np.ndarray:
+    """Bursts of ``burst`` near-simultaneous arrivals (``spread``
+    seconds apart, preserving a strict arrival order) separated by
+    exponential quiet gaps with mean ``burst/rate`` — the same long-run
+    rate as the Poisson kind, concentrated into admission spikes."""
+    t, out = 0.0, []
+    while len(out) < n:
+        t += float(rng.exponential(burst / rate))
+        for i in range(min(burst, n - len(out))):
+            out.append(t + i * spread)
+    return np.asarray(out)
+
+
+def ramp_arrivals(n: int, rate: float, rng, *,
+                  ramp_from: float = 0.25) -> np.ndarray:
+    """Linearly ramping load: the instantaneous rate of request i runs
+    from ``ramp_from * rate`` up to ``(2 - ramp_from) * rate`` across
+    the trace (mean ``rate``), crossing the engine's capacity somewhere
+    in the middle — the under-to-overload transition."""
+    rates = np.linspace(ramp_from * rate, (2.0 - ramp_from) * rate, n)
+    return np.cumsum(rng.exponential(1.0 / rates))
+
+
+_KINDS = {"poisson": poisson_arrivals, "bursty": bursty_arrivals,
+          "ramp": ramp_arrivals}
+
+
+def make_open_loop_trace(cfg, *, kind: str, n_requests: int, rate: float,
+                         seed: int, prompt_lens=(8, 12, 16),
+                         max_new_choices=(16, 32, 64),
+                         max_new_p=(0.35, 0.40, 0.25),
+                         slo: SLO = SLO(10.0, 1.0),
+                         **kind_kwargs) -> list[OpenLoopItem]:
+    """Seeded open-loop trace of ``n_requests`` with ``kind`` arrivals.
+
+    Output lengths lean LONG relative to the closed-loop serve trace
+    (16/32/64 vs mostly 4–8): TPOT is undefined below two tokens and
+    noisy below ten, and the decode loop is where the overlap toggle
+    this trace prices actually lives. ``slo`` is a placeholder budget
+    replaced by ``annotate_slos`` once a baseline has been measured.
+
+    Parameters
+    ----------
+    cfg
+        Model config (vocab_size bounds the random prompts).
+    kind : {"poisson", "bursty", "ramp"}
+        Arrival process; extra ``kind_kwargs`` (e.g. ``burst=``) are
+        forwarded to the generator.
+    n_requests, rate, seed
+        Trace size, long-run mean arrival rate (req/s), RNG seed —
+        the trace is a pure function of these (plus the shape kwargs).
+
+    Returns
+    -------
+    list of OpenLoopItem
+        Arrival-sorted; deterministic for fixed arguments.
+    """
+    if kind not in _KINDS:
+        raise ValueError(f"unknown arrival kind {kind!r}; "
+                         f"expected one of {sorted(_KINDS)}")
+    rng = np.random.default_rng(seed)
+    arrivals = _KINDS[kind](n_requests, rate, rng, **kind_kwargs)
+    items = []
+    for t in arrivals:
+        plen = int(rng.choice(prompt_lens))
+        prompt = list(rng.integers(0, cfg.vocab_size, plen))
+        max_new = int(rng.choice(max_new_choices, p=max_new_p))
+        items.append(OpenLoopItem(float(t), prompt, max_new, slo))
+    return items
+
+
+def annotate_slos(trace: list[OpenLoopItem], *, ttft_s: float,
+                  tpot_s: float):
+    """Stamp per-request budgets onto ``trace`` in place: every request
+    gets ``tpot_s``, and a TTFT budget scaled by its prompt length
+    relative to the trace max (a 2x-longer prompt has genuinely more
+    prefill to wait for, so it earns up to 2x the base budget — still
+    deterministic, since prompt lengths are part of the trace)."""
+    max_plen = max(len(it.prompt) for it in trace)
+    for it in trace:
+        scale = 1.0 + len(it.prompt) / max_plen
+        it.slo = SLO(ttft_s=ttft_s * scale, tpot_s=tpot_s)
+
+
+def slo_report(handles, trace: list[OpenLoopItem],
+               wall_s: float) -> dict:
+    """Score a finished open-loop replay against its SLO annotations.
+
+    Parameters
+    ----------
+    handles
+        Finished ``RequestHandle``s, index-aligned with ``trace`` (the
+        order ``_replay`` collected them in — trace order).
+    trace
+        The items replayed, carrying the per-request budgets.
+    wall_s
+        Replay wall time; the goodput denominator.
+
+    Returns
+    -------
+    dict
+        ``ttft`` / ``tpot`` percentile summaries (p50/p95/p99 via
+        ``api.latency_stats``), ``slo_met`` / ``slo_frac`` (requests
+        meeting BOTH budgets), ``goodput_tok_s`` (tokens from meeting
+        requests / wall) and ``goodput_frac`` (share of emitted tokens
+        that were goodput).
+    """
+    good_tokens = total_tokens = met = 0
+    for h, it in zip(handles, trace):
+        total_tokens += len(h.token_ids)
+        if h.t_first_token is None:
+            continue
+        ok = (h.t_first_token - h.t_submit) <= it.slo.ttft_s
+        if len(h.t_tokens) >= 2:
+            tpot = ((h.t_tokens[-1] - h.t_tokens[0])
+                    / (len(h.t_tokens) - 1))
+            ok = ok and tpot <= it.slo.tpot_s
+        if ok:
+            met += 1
+            good_tokens += len(h.token_ids)
+    out = latency_stats(handles)
+    out["slo_met"] = met
+    out["count"] = len(handles)
+    out["slo_frac"] = met / max(len(handles), 1)
+    out["goodput_tok_s"] = good_tokens / max(wall_s, 1e-9)
+    out["goodput_frac"] = good_tokens / max(total_tokens, 1)
+    return out

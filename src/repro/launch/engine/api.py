@@ -147,9 +147,15 @@ class RequestHandle:
         the per-request source of truth behind
         ``Engine.stats()["spec"]``.
     t_submit, t_first_token : float or None
-        Wall-clock (``time.monotonic``) stamps at handle creation and at
-        the first sampled token; their difference is the request's TTFT,
-        aggregated into p50/p95 by ``ReplicaSet.stats()["ttft"]``.
+        Monotonic-clock stamps at handle creation and at the first
+        sampled token; their difference is the request's TTFT,
+        aggregated into p50/p95/p99 by ``latency_stats`` (surfaced via
+        ``Engine.stats()["latency"]`` and ``ReplicaSet.stats()``).
+    t_tokens : list of float
+        Monotonic stamp per *sampled* token (stripped stop tokens
+        included — the stream advanced even though nothing was
+        emitted). Mean inter-token gap is the request's TPOT;
+        aggregated by ``latency_stats``.
     encoder_features : array or None
         The submitted ``Request.encoder_features``, carried with the
         handle through replica queues and migration packets (the
@@ -168,9 +174,11 @@ class RequestHandle:
     # request (the bench's accepted-tokens-per-step source of truth)
     num_draft_proposed: int = 0
     num_draft_accepted: int = 0
-    # TTFT telemetry: stamped at submission / first sampled token
+    # latency telemetry: stamped at submission / first sampled token /
+    # every sampled token (monotonic clock throughout)
     t_submit: float = dataclasses.field(default_factory=time.monotonic)
     t_first_token: Optional[float] = None
+    t_tokens: list[float] = dataclasses.field(default_factory=list)
     # internal: RNG stream position (== tokens sampled; differs from
     # len(token_ids) only after a stripped stop token)
     _n_sampled: int = 0
@@ -220,9 +228,11 @@ def register_sample(req: RequestHandle, tok: int, eos_id: int,
     backend cleanup (free blocks / park the lane) after the handle's
     finished/finish_reason flags are set — keeping both backends on
     byte-identical emission semantics."""
+    now = time.monotonic()
     req._n_sampled += 1
+    req.t_tokens.append(now)
     if req._n_sampled == 1:
-        req.t_first_token = time.monotonic()
+        req.t_first_token = now
     stop = (eos_id >= 0 and tok == eos_id) \
         or tok in req.sampling.stop_token_ids
     if not stop:
@@ -236,6 +246,52 @@ def register_sample(req: RequestHandle, tok: int, eos_id: int,
     on_finish()
     return RequestOutput(req.uid, () if stop else (tok,),
                          len(req.token_ids), True, reason)
+
+
+def _pctl(sorted_vals: list[float], q: float) -> float:
+    """Nearest-rank percentile over an already-sorted sample (no
+    interpolation — p99 of 3 samples is the max, not an extrapolation)."""
+    if not sorted_vals:
+        return 0.0
+    i = min(len(sorted_vals) - 1, max(0, int(round(q * (len(sorted_vals) - 1)))))
+    return float(sorted_vals[i])
+
+
+def latency_stats(handles) -> dict:
+    """Aggregate per-request latency stamps into TTFT/TPOT percentiles.
+
+    TTFT is ``t_first_token - t_submit`` per request; TPOT is the mean
+    inter-token gap ``(t_tokens[-1] - t_tokens[0]) / (n - 1)`` over
+    requests with at least two sampled tokens. Both are summarized with
+    nearest-rank percentiles. This is the one aggregation behind
+    ``Engine.stats()["latency"]``, ``ReplicaSet.stats()`` and the bench
+    ``open_loop`` section, so every surface reports the same numbers.
+
+    Parameters
+    ----------
+    handles : iterable of RequestHandle
+        Finished and/or in-flight handles; requests with no sampled
+        token yet contribute to neither distribution.
+
+    Returns
+    -------
+    dict
+        ``{"ttft": {count, mean_s, p50_s, p95_s, p99_s},
+        "tpot": {...}}`` — zeros when a distribution is empty.
+    """
+    ttft = sorted(h.t_first_token - h.t_submit for h in handles
+                  if h.t_first_token is not None)
+    tpot = sorted((h.t_tokens[-1] - h.t_tokens[0]) / (len(h.t_tokens) - 1)
+                  for h in handles if len(h.t_tokens) >= 2)
+
+    def summarize(vals):
+        return {"count": len(vals),
+                "mean_s": float(sum(vals) / len(vals)) if vals else 0.0,
+                "p50_s": _pctl(vals, 0.50),
+                "p95_s": _pctl(vals, 0.95),
+                "p99_s": _pctl(vals, 0.99)}
+
+    return {"ttft": summarize(ttft), "tpot": summarize(tpot)}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -302,6 +358,15 @@ class EngineConfig:
         pool tree; dequant is fused into the decode/verify kernels, so
         no full-precision copy of the pool is ever materialized.
         Requires ``ServingCaps.quantized_kv`` and the paged backend.
+    overlap : bool
+        Async host/device overlap on the paged backend: ``step()``
+        dispatches the NEXT decode (feeding the in-flight sampled
+        tokens device-to-device) *before* blocking on the previous
+        step's token fetch, so host-side scheduling/admission work
+        hides under device compute. Outputs are bit-identical with it
+        on or off (the RNG-stream contract — the overlapped dispatch
+        changes when work runs, never what is computed). Requires the
+        paged backend and ``spec_tokens == 0``.
     """
 
     backend: str = "paged"       # "paged" | "static"
@@ -350,6 +415,11 @@ class EngineConfig:
     # bit-identical), "int8" or "fp8" (float8_e4m3 payloads +
     # per-(token, kv-head) scale leaves, dequant fused into the kernels).
     kv_dtype: str = "bf16"       # "bf16" | "int8" | "fp8"
+    # Async host/device overlap (paged backend): dispatch decode N+1
+    # before fetching decode N's sampled tokens (double-buffered token
+    # fetch; admission prefills are ordered after the in-flight decode
+    # by the functional pool data dependency). Bit-identical outputs.
+    overlap: bool = False
 
 
 class Engine:
@@ -471,6 +541,18 @@ class Engine:
                 and mc.n_experts % ctx.shard.tp_size == 0
                 and self.cfg.num_slots % ctx.shard.dp_size == 0):
             ctx = dataclasses.replace(ctx, moe_sharded=True)
+        if self.cfg.overlap:
+            if self.cfg.backend != "paged":
+                raise ValueError(
+                    "overlap=True requires the paged backend — the "
+                    "static baseline fetches lockstep; use "
+                    "backend='paged'")
+            if self.cfg.spec_tokens > 0:
+                raise ValueError(
+                    "overlap=True is incompatible with speculative "
+                    "decoding: the verify step consumes the sampled "
+                    "tokens on the host before the next dispatch; set "
+                    "spec_tokens=0")
         if self.cfg.backend == "paged":
             if self.cfg.spec_tokens > 0:
                 from repro.launch.engine.speculative import SpecDecodeBackend
@@ -575,9 +657,17 @@ class Engine:
         """Backend telemetry: occupancy, cache utilization, preemption
         and prefill-compile counters — plus a ``"spec"`` section
         (aggregate and per-request draft counters) when speculative
-        decoding is on. docs/benchmarks.md documents the derived bench
-        fields."""
-        return self.backend.stats()
+        decoding is on, and a ``"latency"`` section (TTFT/TPOT
+        p50/p95/p99 over finished and in-flight requests, see
+        ``latency_stats``). docs/benchmarks.md documents the derived
+        bench fields."""
+        st = self.backend.stats()
+        live = getattr(self.backend, "live_handles", None)
+        handles = list(self.backend.finished)
+        if live is not None:
+            handles += live()
+        st["latency"] = latency_stats(handles)
+        return st
 
     @property
     def made_progress(self) -> bool:

@@ -303,9 +303,15 @@ class DisaggregatedEngine(ReplicaSet):
             donor = max(donors,
                         key=lambda r: self.replicas[r].backend.num_active)
             dbe = self.replicas[donor].backend
-            i = max((j for j, s in enumerate(dbe.slots)
-                     if s.req is not None),
-                    key=lambda j: dbe.slots[j].ticket)
+            # flush the donor's in-flight overlap token BEFORE choosing
+            # a slot: harvesting can retire a request (max_tokens/stop),
+            # and export_slot's own flush would then trip on a slot we
+            # selected while it was still nominally occupied
+            dbe.flush_overlap()
+            live = [j for j, s in enumerate(dbe.slots) if s.req is not None]
+            if len(live) < 2:
+                continue                  # flush retired it below donor bar
+            i = max(live, key=lambda j: dbe.slots[j].ticket)
             # pre-check the thief can land it (idle => no watermark),
             # so the slot is only uprooted when the move will succeed
             need = paged_kv.blocks_for(int(dbe.lengths[i]) + 1,

@@ -29,11 +29,26 @@ the replicas time-share the cores, so the set also meters each
 replica's BUSY time (cumulative wall spent inside its step calls) and
 per-replica token counts — ``stats()['busy_s']`` — from which the
 bench reports aggregate *capacity* (sum of per-replica-clock rates),
-the number parallel hardware would sustain. ``step_workers > 1`` opts
-into thread-parallel stepping (device execution releases the GIL);
-it helps when per-step device compute dominates dispatch overhead and
-is off by default because fine-grained smoke steps lose more to GIL
-ping-pong than they gain.
+the number parallel hardware would sustain. Busy clocks are stamped
+with ``time.monotonic()`` at the step dispatch/return boundaries
+(never ``time.time()``, which can jump under NTP slew and is not an
+interval clock); the finer-grained device-occupancy clock lives in the
+paged backend itself (``stats()['device_s']``, a non-overlapping
+interval union across dispatch→fetch windows) so that with
+``overlap=True`` the in-flight device call is not double-counted
+across consecutive steps. ``step_workers > 1`` opts into
+thread-parallel stepping. An honest accounting of when that helps:
+the step loop is host-Python-heavy (dispatch bookkeeping, numpy
+mirrors, jit-call argument marshalling all hold the GIL) and only the
+blocking device fetch releases it, so threads pay GIL ping-pong on
+every step and win only when per-step device compute is large enough
+to dominate — big models on real accelerators, not smoke shapes. With
+``overlap=True`` the blocking fetch shrinks further (the device call
+of step N+1 is dispatched before step N's tokens are fetched), so the
+GIL-released window threads could exploit mostly disappears;
+overlap-within-a-replica and threads-across-replicas are largely
+substitutes on a CPU host, and overlap is the cheaper of the two. It
+therefore stays off by default.
 
 Token streams are bit-identical to a single engine serving the same
 requests: outputs are a pure function of (params, prompt,
@@ -108,9 +123,11 @@ class ReplicaSet:
         Kernel/sharding context forwarded to every replica.
     step_workers : int, optional
         Opt-in thread pool width for stepping busy replicas
-        concurrently (device execution releases the GIL); off by
-        default — smoke-sized steps lose more to GIL ping-pong than
-        they gain.
+        concurrently. Only the blocking device fetch releases the GIL,
+        so this pays off only when per-step device compute dominates
+        the host-side bookkeeping; with ``EngineConfig(overlap=True)``
+        the fetch window shrinks further and threads gain almost
+        nothing (see the module docstring). Off by default.
 
     Attributes
     ----------
@@ -229,7 +246,7 @@ class ReplicaSet:
                                encoder_features=encoder_features)
         self._uid += 1
         self._by_uid[handle.uid] = handle
-        self._enq[handle.uid] = (self.steps, time.time())
+        self._enq[handle.uid] = (self.steps, time.monotonic())
         self.queue.append(handle)
         return handle
 
@@ -253,9 +270,11 @@ class ReplicaSet:
         and token counts; streams merge in replica order."""
         def timed_step(pair):
             r, eng = pair
-            t0 = time.time()
+            # monotonic: wall-clock (time.time) can jump under NTP
+            # slew, making a busy interval negative or double-length
+            t0 = time.monotonic()
             part = eng.step()
-            self.busy_s[r] += time.time() - t0
+            self.busy_s[r] += time.monotonic() - t0
             self.tokens_out[r] += sum(len(o.new_tokens) for o in part)
             return part
 
@@ -302,6 +321,9 @@ class ReplicaSet:
             "queue_wait_s_mean": (sum(self.wait_wall)
                                   / max(len(self.wait_wall), 1)),
             "ttft": self._ttft_stats(),
+            "latency": api.latency_stats(
+                list(self.finished) + list(self._by_uid.values())),
+            "device_s": [p.get("device_s", 0.0) for p in per],
             # aggregate views the bench / leak checks read
             "mean_active_slots": sum(p["mean_active_slots"] for p in per),
             "cache_utilization": live / max(cap, 1),
@@ -320,12 +342,14 @@ class ReplicaSet:
                for h in list(self.finished) + list(self._by_uid.values())
                if h.t_first_token is not None]
         if not lat:
-            return {"count": 0, "mean_s": 0.0, "p50_s": 0.0, "p95_s": 0.0}
+            return {"count": 0, "mean_s": 0.0, "p50_s": 0.0,
+                    "p95_s": 0.0, "p99_s": 0.0}
         arr = np.asarray(lat)
         return {"count": len(lat),
                 "mean_s": float(arr.mean()),
                 "p50_s": float(np.percentile(arr, 50)),
-                "p95_s": float(np.percentile(arr, 95))}
+                "p95_s": float(np.percentile(arr, 95)),
+                "p99_s": float(np.percentile(arr, 99))}
 
     def reset_telemetry(self):
         """Zero every replica's counters and the set-level telemetry
@@ -383,7 +407,7 @@ class ReplicaSet:
             self.dispatched[r] += 1
             step0, t0 = self._enq.pop(handle.uid)
             self.wait_steps.append(self.steps - 1 - step0)
-            self.wait_wall.append(time.time() - t0)
+            self.wait_wall.append(time.monotonic() - t0)
             moved += 1
         return moved
 

@@ -61,6 +61,19 @@ def sample_tokens(logits, seeds, steps, temps, top_ks, top_ps):
                                  top_ps)
 
 
+def fused_sample(logits, steps, samp):
+    """Traced sampling tail of the scheduler's fused overlap step:
+    greedy argmax when ``samp`` is None (same first-occurrence
+    tie-break as the host fast path in ``SlotSampler.sample``), else
+    the full per-slot sampler — ``samp`` is the (seeds, temps, top_ks,
+    top_ps) arrays and ``steps`` the per-slot RNG-stream positions.
+    Returns the (B,) int32 tokens still on device."""
+    if samp is None:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    seeds, temps, top_ks, top_ps = samp
+    return sample_tokens(logits, seeds, steps, temps, top_ks, top_ps)
+
+
 def verify_accept(logits, tokens, num_drafts, seeds, steps, temps,
                   top_ks, top_ps):
     """Vectorized accept/resample rule for a speculative verify window.
@@ -175,6 +188,18 @@ class SlotSampler:
                              jnp.asarray(self.top_ks),
                              jnp.asarray(self.top_ps))
         return np.asarray(toks)
+
+    def fused_args(self, steps):
+        """The (steps, samp) pair the scheduler threads into its fused
+        overlap step: ``samp`` is None on the all-greedy fast path
+        (selecting ``fused_sample``'s argmax variant — a distinct jit
+        trace, since the pytree structure differs), else the per-slot
+        parameter arrays. ``steps`` overrides ``self.steps`` — under
+        overlap a slot with an un-harvested in-flight token sits one
+        stream position ahead of the host mirror."""
+        if (self.temps <= 0.0).all():
+            return steps, None
+        return steps, (self.seeds, self.temps, self.top_ks, self.top_ps)
 
     def sample_one(self, slot: int, row_logits):
         """Sample for ONE slot (prefill admission) from the parameters

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Optional
 
 import jax
@@ -48,7 +49,7 @@ from repro.launch import sharding as shlib
 from repro.launch.engine.api import (EngineConfig, RequestHandle,
                                      RequestOutput, prefill_bucket,
                                      register_sample)
-from repro.launch.engine.sampling import SlotSampler
+from repro.launch.engine.sampling import SlotSampler, fused_sample
 from repro.models import paged_kv
 from repro.models.model import Model
 from repro.models.transformer import RunCtx
@@ -61,6 +62,19 @@ class _Slot:
     last_token: int = 0
     ticket: int = -1             # admission order; LIFO preemption key
     shared: int = 0              # leading blocks held by shared reference
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One dispatched decode whose sampled tokens are still on device
+    (overlap mode). ``rows`` records (slot, ticket) pairs so a harvest
+    can discard draws whose slot retired or was re-admitted in between
+    (tickets are globally monotonic — equality proves same request);
+    ``toks`` is the (num_slots,) int32 device array; ``t_dispatch``
+    feeds the non-overlapping device-busy clock."""
+    rows: list
+    toks: object
+    t_dispatch: float
 
 
 class PagedBackend:
@@ -140,8 +154,19 @@ class PagedBackend:
             if ctx.moe_sharded else ctx
         self.made_progress = False
         self._ticket = 0
+        # Async host/device overlap (cfg.overlap): the one in-flight
+        # decode awaiting its token fetch, plus outputs harvested
+        # outside step() (migration flushes) owed to the next step.
+        self._pending: Optional[_Pending] = None
+        self._flushed: list[RequestOutput] = []
         # telemetry
         self.steps = 0
+        # Device-busy clock: union of dispatch->fetch intervals stamped
+        # with the monotonic clock at the call boundaries, so overlapped
+        # dispatch never double-counts in-flight device time (the
+        # ReplicaSet busy-clock fix — see stats()["device_s"]).
+        self.device_s = 0.0
+        self._t_fetch_done = 0.0
         self.slot_steps = 0          # active slots summed over steps
         self.block_token_steps = 0   # allocated token capacity x steps
         self.live_token_steps = 0    # live tokens x steps
@@ -168,6 +193,36 @@ class PagedBackend:
 
         self._decode = shlib.jit_step(decode_fn, self.shard,
                                       self._pool_sh, donate=(1,))
+
+        # Fused overlap step (cfg.overlap): token-feed select + decode +
+        # on-device sampling in ONE jit call, so the overlapped path
+        # pays a single dispatch per step and the logits never leave
+        # the device — only the (num_slots,) sampled tokens are fetched,
+        # one step later. ``use_prev`` rows take their fed token from
+        # the previous step's device-resident draws (the double buffer).
+        if self.arena is not None:
+            def overlap_fn(params, pools, table, lengths, host_tokens,
+                           prev_toks, use_prev, steps, samp,
+                           arena_ids, enc_lengths):
+                tokens = jnp.where(use_prev[:, None], prev_toks[:, None],
+                                   host_tokens)
+                logits, pools = model.decode_step_paged(
+                    params, pools, table, lengths, tokens, self.ctx,
+                    arena_ids=arena_ids, enc_lengths=enc_lengths)
+                return fused_sample(logits, steps, samp), pools
+        else:
+            def overlap_fn(params, pools, table, lengths, host_tokens,
+                           prev_toks, use_prev, steps, samp):
+                tokens = jnp.where(use_prev[:, None], prev_toks[:, None],
+                                   host_tokens)
+                logits, pools = model.decode_step_paged(
+                    params, pools, table, lengths, tokens, self.ctx)
+                return fused_sample(logits, steps, samp), pools
+
+        self._overlap_step = shlib.jit_step(overlap_fn, self.shard,
+                                            self._pool_sh, donate=(1,))
+        self._zero_toks = None       # lazy (num_slots,) int32 zero feed
+        self._no_prev = np.zeros((cfg.num_slots,), bool)
         self._prefill_cache = {}
         self._suffix_cache = {}
 
@@ -211,13 +266,30 @@ class PagedBackend:
 
     @property
     def has_work(self) -> bool:
-        """True while any request is waiting or active."""
-        return bool(self.waiting) or self.num_active > 0
+        """True while any request is waiting or active (or a migration
+        flush harvested outputs the next step still owes the stream)."""
+        return bool(self.waiting) or self.num_active > 0 \
+            or bool(self._flushed)
 
     def step(self) -> list[RequestOutput]:
-        """Admissions, growth (with preemption), one decode, sampling."""
+        """Admissions, growth (with preemption), one decode, sampling.
+
+        With ``cfg.overlap`` the call routes through ``_step_overlap``:
+        the decode for THIS step is dispatched before the previous
+        step's sampled tokens are fetched, so host scheduling work
+        hides under device compute. Token values are identical either
+        way (the RNG-stream contract)."""
         outs: list[RequestOutput] = []
         self.made_progress = False
+        if self._flushed:              # harvested during a migration
+            outs.extend(self._flushed)
+            self._flushed = []
+            self.made_progress = True
+        if self.cfg.overlap and not self.prefill_only:
+            return self._step_overlap(outs)
+        if self._pending is not None:  # overlap residue (role flip)
+            outs.extend(self._harvest(self._pending))
+            self._pending = None
         self._admit(outs)
         if self.prefill_only:
             return outs               # role-specialized: no decode here
@@ -237,8 +309,10 @@ class PagedBackend:
         if self.arena is not None:
             args += (jnp.asarray(self.arena_ids),
                      jnp.asarray(self.enc_lengths))
+        t0 = time.monotonic()
         logits, self.pools = self._decode(*args)
         toks = self.sampler.sample(logits)
+        self._mark_device(t0)
         self.steps += 1
         self.slot_steps += len(active)
         self.block_token_steps += self.alloc.used_count * self.cfg.block_size
@@ -248,6 +322,186 @@ class PagedBackend:
             self.live_token_steps += int(self.lengths[i])
             outs.append(self._accept(i, int(toks[i])))
         return outs
+
+    # -- async host/device overlap (cfg.overlap) -------------------------
+
+    def _step_overlap(self, outs: list[RequestOutput]):
+        """One overlapped step: (1) if a decode is in flight, try to
+        dispatch THIS step's decode first, feeding the in-flight
+        sampled tokens device-to-device (``_try_followup``); (2) block
+        on the in-flight fetch and register its tokens; (3) admit — the
+        admission prefill consumes the pools produced by whichever
+        decode was dispatched last, so its writes are ordered after
+        them by the data dependency; (4) when no follow-up could be
+        dispatched, fall back to the sequential shape (growth with
+        preemption, COW, dispatch) and leave the new decode pending.
+
+        Outputs are bit-identical to the sequential path: every fed
+        token and RNG-stream position matches, and the speculative
+        writes of a follow-up that covered a row retired at harvest
+        land only at positions nothing live ever reads (the row's own
+        frontier, or blocks whose later reuse is write-ordered after
+        this decode by the functional pool threading)."""
+        pend, self._pending = self._pending, None
+        followed = False
+        if pend is not None:
+            followed = self._try_followup(pend)
+            outs.extend(self._harvest(pend))
+        self._admit(outs)
+        if followed:
+            return outs
+        self._grow_blocks()
+        active = [i for i, s in enumerate(self.slots) if s.req is not None]
+        if not active:
+            return outs
+        self._ensure_cow(active)
+        active = [i for i in active if self.slots[i].req is not None]
+        if not active:
+            return outs
+        tokens = np.zeros((self.cfg.num_slots, 1), np.int32)
+        for i in active:
+            tokens[i, 0] = self.slots[i].last_token
+        self._dispatch_decode(active, tokens, self._no_prev, None,
+                              self.sampler.steps)
+        return outs
+
+    def _try_followup(self, pend: _Pending) -> bool:
+        """Dispatch the next decode BEFORE harvesting ``pend`` when it
+        is safe without host knowledge of the in-flight tokens:
+
+        * rows whose in-flight token deterministically retires them
+          (max_tokens reached) are excluded — their slot frees at
+          harvest and must not decode again;
+        * growth blocks and COW copies for every dispatched row must be
+          allocatable WITHOUT preemption (preempting a row whose last
+          token is still on device would need that token for the
+          recompute record) — any shortfall bails to the sequential
+          path, which may preempt after the harvest. Partial
+          allocations are safe to keep: the sequential growth/COW
+          passes skip rows already extended/privatized.
+
+        An in-flight token that turns out to be a stop token retires
+        its row at harvest anyway; the follow-up's draw for that row is
+        discarded by the ticket check one step later, and its cache
+        write landed one past the row's final frontier — never read.
+        Returns True when the follow-up decode was dispatched."""
+        bs = self.cfg.block_size
+        inflight = set()
+        for i, ticket in pend.rows:
+            s = self.slots[i]
+            if s.req is not None and s.ticket == ticket:
+                inflight.add(i)
+        dispatch = []
+        for i, s in enumerate(self.slots):
+            if s.req is None:
+                continue
+            if i in inflight and \
+                    len(s.req.token_ids) + 1 >= s.req.sampling.max_tokens:
+                continue              # harvest retires this row for sure
+            dispatch.append(i)
+        if not dispatch:
+            return False
+        for i in dispatch:
+            slot = self.slots[i]
+            L = int(self.lengths[i])
+            if L % bs == 0 and L // bs >= len(slot.blocks):
+                if not self.alloc.can_alloc(1):
+                    return False      # pool dry: sequential path preempts
+                (nb,) = self.alloc.alloc(1)
+                slot.blocks.append(nb)
+                self.table[i, len(slot.blocks) - 1] = nb
+            if self.prefix is not None:
+                idx = L // bs
+                if idx < slot.shared:
+                    assert idx == slot.shared - 1, \
+                        "write frontier deeper than the shared tail block"
+                    if not self.alloc.can_alloc(1):
+                        return False
+                    self._cow_block(i, idx)
+        host = np.zeros((self.cfg.num_slots, 1), np.int32)
+        use_prev = np.zeros((self.cfg.num_slots,), bool)
+        for i in dispatch:
+            if i in inflight:
+                use_prev[i] = True    # token still on device
+            else:
+                host[i, 0] = self.slots[i].last_token
+        steps = self.sampler.steps.copy()
+        steps[use_prev] += 1          # one draw ahead of the host mirror
+        self._dispatch_decode(dispatch, host, use_prev, pend.toks, steps)
+        return True
+
+    def _dispatch_decode(self, active, host_tokens, use_prev, prev_toks,
+                         steps):
+        """Launch the fused feed-select + decode + on-device sample
+        WITHOUT fetching the tokens; the result parks in
+        ``self._pending``. Lengths advance at dispatch (the fed token's
+        cache write is in flight), so the harvest only registers the
+        sampled values."""
+        if prev_toks is None:         # no double buffer yet: dead feed
+            if self._zero_toks is None:
+                self._zero_toks = jnp.zeros((self.cfg.num_slots,),
+                                            jnp.int32)
+            prev_toks = self._zero_toks
+        steps, samp = self.sampler.fused_args(steps)
+        args = (self.params, self.pools, self.table, self.lengths,
+                host_tokens, prev_toks, use_prev, steps, samp)
+        if self.arena is not None:
+            args += (self.arena_ids, self.enc_lengths)
+        t0 = time.monotonic()
+        toks, self.pools = self._overlap_step(*args)
+        self.steps += 1
+        self.slot_steps += len(active)
+        self.block_token_steps += self.alloc.used_count * self.cfg.block_size
+        self.made_progress = True
+        rows = []
+        for i in active:
+            self.lengths[i] += 1
+            self.live_token_steps += int(self.lengths[i])
+            rows.append((i, self.slots[i].ticket))
+        self._pending = _Pending(rows, toks, t0)
+
+    def _harvest(self, pend: _Pending) -> list[RequestOutput]:
+        """Block on an in-flight decode's token fetch and register the
+        draws. Rows whose slot retired or was re-admitted since the
+        dispatch (ticket mismatch) are discarded — their speculative
+        cache writes landed at never-read positions."""
+        toks = np.asarray(pend.toks)        # the one blocking fetch
+        self._mark_device(pend.t_dispatch)
+        outs = []
+        for i, ticket in pend.rows:
+            slot = self.slots[i]
+            if slot.req is None or slot.ticket != ticket:
+                continue
+            outs.append(self._accept(i, int(toks[i])))
+        if outs:
+            self.made_progress = True
+        return outs
+
+    def flush_overlap(self):
+        """Harvest any in-flight decode NOW (no new dispatch) and buffer
+        its outputs for the next ``step()``. Migration paths call this
+        before reading host slot state (``lengths`` already counts the
+        in-flight fed token, but ``slot.last_token`` is only current
+        after the harvest) — and a flush may retire slots, so callers
+        re-check occupancy afterwards."""
+        if self._pending is None:
+            return
+        pend, self._pending = self._pending, None
+        self._flushed.extend(self._harvest(pend))
+
+    def _mark_device(self, t_dispatch: float):
+        """Account one dispatch->fetch interval into the device-busy
+        clock, unioned against the previous fetch so overlapping host
+        work never double-counts device time."""
+        t1 = time.monotonic()
+        self.device_s += t1 - max(t_dispatch, self._t_fetch_done)
+        self._t_fetch_done = t1
+
+    def live_handles(self) -> list[RequestHandle]:
+        """Resident + queued request handles (latency aggregation —
+        see ``api.latency_stats``)."""
+        return [s.req for s in self.slots if s.req is not None] \
+            + list(self.waiting)
 
     # -- internals ------------------------------------------------------
 
@@ -836,7 +1090,16 @@ class PagedBackend:
         next token to feed. Device content is gathered separately by
         launch/engine/transport.py — JAX arrays are functional, so the
         gather may happen before or after ``detach_slot`` frees the
-        chain without ever observing the reuse."""
+        chain without ever observing the reuse.
+
+        An overlapped in-flight decode is harvested first: ``lengths``
+        already counts the fed token (its pool write is ordered before
+        any gather by the functional threading), but ``last_token`` is
+        only current once the sampled value lands — exporting around an
+        un-harvested token would migrate a stale feed. Callers must
+        gate on occupancy AFTER any flush (the harvest can retire
+        slots)."""
+        self.flush_overlap()
         slot = self.slots[i]
         assert slot.req is not None, "exporting an empty slot"
         return slot.req, list(slot.blocks), int(self.lengths[i]), \
@@ -848,6 +1111,7 @@ class PagedBackend:
         (shared references just decrement) because the packet carries
         gathered *content*, not block ids into this pool — a packet
         dropped mid-migration therefore leaks nothing on either side."""
+        self.flush_overlap()           # no-op after export_slot's flush
         slot = self.slots[i]
         self.alloc.free(slot.blocks)
         self._clear_slot(i)
@@ -904,6 +1168,7 @@ class PagedBackend:
         self.finished.clear()
         self.steps = self.slot_steps = 0
         self.block_token_steps = self.live_token_steps = 0
+        self.device_s = 0.0
         self.preemptions = 0
         self.prefill_calls = self.prefill_reqs = self.prefill_tokens = 0
         self.prefix_lookups = self.prefix_hits = 0
@@ -918,6 +1183,8 @@ class PagedBackend:
             "steps": self.steps,
             "mean_active_slots": self.slot_steps / max(self.steps, 1),
             "cache_utilization": self.live_token_steps / cap,
+            "overlap": bool(self.cfg.overlap),
+            "device_s": self.device_s,
             "blocks_free": self.alloc.free_count,
             "blocks_used": self.alloc.used_count,
             "preemptions": self.preemptions,

@@ -101,6 +101,12 @@ class StaticBackend:
         """True while any request is waiting or live."""
         return bool(self.waiting) or bool(self.live.any())
 
+    def live_handles(self):
+        """Resident + queued request handles (latency aggregation —
+        see ``api.latency_stats``)."""
+        return [h for h in self.batch if h is not None
+                and not h.finished] + list(self.waiting)
+
     def step(self) -> list[RequestOutput]:
         """Admit a fresh batch when idle, else one lockstep decode."""
         outs: list[RequestOutput] = []
